@@ -1,0 +1,77 @@
+"""Kernel microbenchmarks: interpret-mode Pallas vs jnp reference.
+
+CPU wall times of interpret-mode kernels are NOT TPU perf numbers — the
+derived column reports the ratio vs the pure-jnp oracle on identical
+shapes, plus analytic VMEM working-set bytes per grid step (the quantity
+the BlockSpec tiling is designed around).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3) -> float:
+    fn(*args)  # compile/warm
+    t0 = time.monotonic()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.monotonic() - t0) / reps * 1e6  # us
+
+
+def flash_rows() -> List[str]:
+    rows = []
+    for (bg, r, s, d, bq, bk) in [(1, 2, 256, 64, 128, 128),
+                                  (1, 4, 512, 128, 128, 128)]:
+        k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+        q = jax.random.normal(k1, (bg, r, s, d), jnp.float32)
+        k = jax.random.normal(k2, (bg, s, d), jnp.float32)
+        v = jax.random.normal(k3, (bg, s, d), jnp.float32)
+        t_kernel = _time(lambda q, k, v: ops.flash_attention(
+            q, k, v, scale=d ** -0.5, block_q=bq, block_kv=bk, interpret=True), q, k, v)
+        t_ref = _time(lambda q, k, v: ref.flash_attention_ref(
+            q, k, v, scale=d ** -0.5), q, k, v)
+        vmem = (bq * d + 2 * bk * d) * 4 + bq * d * 4  # q + kv tiles + acc
+        rows.append(f"flash_attention_s{s}_d{d},{t_kernel:.0f},"
+                    f"vmem_bytes={vmem};ref_us={t_ref:.0f}")
+    return rows
+
+
+def ssd_rows() -> List[str]:
+    rows = []
+    for (b, s, h, p, n, c) in [(1, 256, 4, 32, 64, 64), (2, 512, 2, 64, 64, 128)]:
+        ks = jax.random.split(jax.random.key(1), 4)
+        x = jax.random.normal(ks[0], (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.1
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        B = jax.random.normal(ks[3], (b, s, n)) * 0.5
+        C = jax.random.normal(jax.random.fold_in(ks[3], 1), (b, s, n)) * 0.5
+        t_kernel = _time(lambda *a: ops.ssd_scan(*a, chunk=c, interpret=True),
+                         x, dt, A, B, C)
+        t_ref = _time(lambda *a: ref.ssd_scan_ref(*a), x, dt, A, B, C)
+        vmem = (c * p + 2 * c * n + c * c + p * n) * 4
+        rows.append(f"ssd_scan_s{s}_h{h}_c{c},{t_kernel:.0f},"
+                    f"vmem_bytes={vmem};seq_ref_us={t_ref:.0f}")
+    return rows
+
+
+def quant_rows() -> List[str]:
+    rows = []
+    for n, blk in [(1 << 16, 512), (1 << 20, 512)]:
+        x = jax.random.normal(jax.random.key(2), (n,), jnp.float32)
+        t_q = _time(lambda x: ops.quantize_blocks(x, block=blk, interpret=True), x)
+        ratio = 4 * n / (n + 4 * (n // blk))
+        rows.append(f"ckpt_quant_n{n},{t_q:.0f},compression={ratio:.2f}x")
+    return rows
+
+
+def run_all() -> List[str]:
+    rows = ["name,us_per_call,derived"]
+    rows += flash_rows() + ssd_rows() + quant_rows()
+    return rows

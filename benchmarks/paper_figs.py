@@ -1,0 +1,63 @@
+"""Paper-table benchmarks: Fig. 4 (left/right) and Fig. 5 (left/right).
+
+Each function reproduces one figure of the paper on the discrete-event
+simulator and emits CSV rows:
+
+    figure,param,fixed_T_seconds,relative_runtime_pct,adaptive_hours,fixed_hours,oracle_gap
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.sim import fig4_dynamic, fig4_static, fig5_td_sweep, fig5_v_sweep
+
+# Benchmark-scale settings: smaller than the paper's full day-long jobs so
+# the suite finishes in minutes on CPU, same regimes.
+KW = dict(seeds=range(4), work=12 * 3600.0, k=16)
+INTERVALS = (300.0, 900.0, 3600.0)
+
+
+def _rows(figure: str, results) -> List[str]:
+    rows = []
+    for key, comps in sorted(results.items()):
+        for c in comps:
+            rows.append(
+                f"{figure},{key:.0f},{c.fixed_T:.0f},{c.relative_runtime:.1f},"
+                f"{c.adaptive_wall / 3600:.2f},{c.fixed_wall / 3600:.2f},"
+                f"{c.oracle_gap:.3f}")
+    return rows
+
+
+def fig4_left() -> List[str]:
+    res = fig4_static(mtbfs=(4000.0, 7200.0, 14400.0),
+                      fixed_intervals=INTERVALS, **KW)
+    return _rows("fig4_left_mtbf", res)
+
+
+def fig4_right() -> List[str]:
+    res = fig4_dynamic(mtbfs=(4000.0, 7200.0, 14400.0),
+                       fixed_intervals=INTERVALS, **KW)
+    return _rows("fig4_right_doubling", res)
+
+
+def fig5_left() -> List[str]:
+    res = fig5_v_sweep(overheads=(5.0, 20.0, 80.0),
+                       fixed_intervals=INTERVALS, **KW)
+    return _rows("fig5_left_ckpt_overhead", res)
+
+
+def fig5_right() -> List[str]:
+    res = fig5_td_sweep(downloads=(10.0, 50.0, 200.0),
+                        fixed_intervals=INTERVALS, **KW)
+    return _rows("fig5_right_download", res)
+
+
+HEADER = ("figure,param,fixed_T_seconds,relative_runtime_pct,"
+          "adaptive_hours,fixed_hours,oracle_gap")
+
+
+def run_all() -> List[str]:
+    rows = [HEADER]
+    for fn in (fig4_left, fig4_right, fig5_left, fig5_right):
+        rows.extend(fn())
+    return rows

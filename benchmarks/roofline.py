@@ -1,0 +1,77 @@
+"""Roofline table assembly from the dry-run artifacts.
+
+Reads benchmarks/artifacts/dryrun/*.json (written by repro.launch.dryrun)
+and emits the per-(arch x shape x mesh) three-term roofline table used in
+EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+HEADER = ("arch,shape,mesh,status,compute_s,memory_s,collective_s,dominant,"
+          "useful_flops_ratio,peak_GiB,tpu_adj_peak_GiB,rs_fraction_of_peak")
+
+
+def load_records(artifact_dir: str = ARTIFACT_DIR) -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(artifact_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_fraction(rec: dict) -> Optional[float]:
+    """Fraction of the compute roofline achieved if the step ran at the
+    bound implied by the dominant term: compute_s / max(all terms)."""
+    if rec.get("status") != "ok":
+        return None
+    r = rec["roofline"]
+    terms = [r["compute_seconds"], r["memory_seconds"], r["collective_seconds"]]
+    m = max(terms)
+    return r["compute_seconds"] / m if m > 0 else None
+
+
+def rows(artifact_dir: str = ARTIFACT_DIR) -> List[str]:
+    out = [HEADER]
+    for rec in load_records(artifact_dir):
+        arch, shape, mesh = rec["arch"], rec["shape"], rec["mesh"]
+        status = rec.get("status", "?")
+        if status != "ok":
+            out.append(f"{arch},{shape},{mesh},{status},,,,,,,,")
+            continue
+        r = rec["roofline"]
+        mem = rec["memory_per_device"]
+        frac = roofline_fraction(rec)
+        out.append(
+            f"{arch},{shape},{mesh},ok,"
+            f"{r['compute_seconds']:.4f},{r['memory_seconds']:.4f},"
+            f"{r['collective_seconds']:.4f},{r['dominant'].replace('_seconds','')},"
+            f"{rec.get('useful_flops_ratio', 0):.3f},"
+            f"{mem['peak_estimate_bytes'] / 2**30:.2f},"
+            f"{mem.get('tpu_adjusted_peak_bytes', mem['peak_estimate_bytes']) / 2**30:.2f},"
+            f"{frac:.3f}")
+    return out
+
+
+def run_all() -> List[str]:
+    table = rows()
+    if len(table) == 1:
+        return ["name,us_per_call,derived",
+                "roofline,0,no dry-run artifacts found (run repro.launch.dryrun --all)"]
+    # summarize as bench rows too
+    out = ["name,us_per_call,derived"]
+    for line in table[1:]:
+        parts = line.split(",")
+        if parts[3] != "ok":
+            out.append(f"roofline_{parts[0]}_{parts[1]}_{parts[2]},0,{parts[3]}")
+            continue
+        us = float(parts[4]) * 1e6  # compute term in us
+        out.append(
+            f"roofline_{parts[0]}_{parts[1]}_{parts[2]},{us:.0f},"
+            f"dominant={parts[7]};fraction={parts[11]};peak_GiB={parts[9]}")
+    return out

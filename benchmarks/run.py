@@ -1,0 +1,62 @@
+"""Benchmark harness entry point.
+
+One section per paper table/figure plus the framework benches.  Prints
+``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig4,fig5,kernels,e2e,roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig4,fig5,kernels,e2e,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    print("name,us_per_call,derived", flush=True)
+
+    if want("fig4") or want("fig5"):
+        from benchmarks import paper_figs
+        sections = []
+        if want("fig4"):
+            sections += [paper_figs.fig4_left, paper_figs.fig4_right]
+        if want("fig5"):
+            sections += [paper_figs.fig5_left, paper_figs.fig5_right]
+        for fn in sections:
+            t = time.monotonic()
+            for row in fn():
+                fig, param, T, rel, ah, fh, gap = row.split(",")
+                us = float(ah) * 3600 * 1e6  # adaptive wall in us
+                print(f"{fig}_p{param}_T{T},{us:.0f},"
+                      f"relative_runtime={rel}%;fixed_hours={fh};oracle_gap={gap}",
+                      flush=True)
+            sys.stderr.write(f"[bench] {fn.__name__} done in "
+                             f"{time.monotonic() - t:.0f}s\n")
+
+    if want("kernels"):
+        from benchmarks import kernel_bench
+        for row in kernel_bench.run_all()[1:]:
+            print(row, flush=True)
+
+    if want("e2e"):
+        from benchmarks import e2e_adaptive
+        for row in e2e_adaptive.run_all()[1:]:
+            print(row, flush=True)
+
+    if want("roofline"):
+        from benchmarks import roofline
+        for row in roofline.run_all()[1:]:
+            print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Reproduce the paper's evaluation (Figs. 4 and 5) and print the tables.
+
+    PYTHONPATH=src python examples/paper_repro.py [--plot out.png] [--fast]
+"""
+import argparse
+
+from repro.sim import fig4_dynamic, fig4_static, fig5_td_sweep, fig5_v_sweep, summarize
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--plot", default=None, help="write a matplotlib png")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    kw = dict(seeds=range(2 if args.fast else 6),
+              work=(6 if args.fast else 24) * 3600.0, k=16)
+    ivals = (300.0, 900.0, 1800.0, 3600.0)
+
+    print("== Fig 4 (left): constant churn, MTBF in {4000, 7200, 14400}s ==")
+    f4l = fig4_static(fixed_intervals=ivals, **kw)
+    print(summarize(f4l))
+    print("\n== Fig 4 (right): failure rate doubling over 20h ==")
+    f4r = fig4_dynamic(fixed_intervals=ivals, **kw)
+    print(summarize(f4r))
+    print("\n== Fig 5 (left): checkpoint overhead sweep (V) ==")
+    f5l = fig5_v_sweep(fixed_intervals=ivals, **kw)
+    print(summarize(f5l))
+    print("\n== Fig 5 (right): image download overhead sweep (T_d) ==")
+    f5r = fig5_td_sweep(fixed_intervals=ivals, **kw)
+    print(summarize(f5r))
+
+    if args.plot:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+
+        fig, axes = plt.subplots(2, 2, figsize=(11, 8))
+        for ax, (title, res) in zip(
+                axes.flat,
+                [("Fig4L constant churn", f4l), ("Fig4R doubling churn", f4r),
+                 ("Fig5L V sweep", f5l), ("Fig5R T_d sweep", f5r)]):
+            for key, comps in sorted(res.items()):
+                xs = [c.fixed_T for c in comps]
+                ys = [c.relative_runtime for c in comps]
+                ax.plot(xs, ys, marker="o", label=f"{key:g}")
+            ax.axhline(100.0, color="k", ls="--", lw=0.8)
+            ax.set_xscale("log")
+            ax.set_title(title)
+            ax.set_xlabel("fixed checkpoint interval (s)")
+            ax.set_ylabel("relative runtime (%)")
+            ax.legend(fontsize=7)
+        fig.tight_layout()
+        fig.savefig(args.plot, dpi=120)
+        print(f"\nwrote {args.plot}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+from repro.ckpt.async_ckpt import AsyncCheckpointer
+from repro.ckpt.store import (
+    is_committed,
+    latest_checkpoint,
+    list_checkpoints,
+    load_pytree,
+    save_pytree,
+)
+
+__all__ = [
+    "AsyncCheckpointer", "is_committed", "latest_checkpoint",
+    "list_checkpoints", "load_pytree", "save_pytree",
+]

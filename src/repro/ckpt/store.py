@@ -1,0 +1,153 @@
+"""Sharded checkpoint store: npz shards + JSON manifest + SHA256 integrity.
+
+Layout of one checkpoint:
+
+    <root>/step_<N>/
+        manifest.json         # leaf paths, shapes, dtypes, shard map, hashes
+        shard_<i>.npz         # leaf arrays (split by shard)
+        COMMITTED             # atomic commit marker (written last)
+
+Writes go to ``step_<N>.tmp`` and are renamed after the COMMITTED marker is
+in place, so a crash mid-save never corrupts the latest checkpoint — the
+paper's 'reliable storage' requirement.  ``n_shards`` emulates per-host
+sharding: leaves are assigned round-robin (by size) to shards, matching a
+multi-host save where each host writes its own shard file.  Replication to
+'neighbour' stores (the P2P storage analogue) lives in async_ckpt.py.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+Params = Any
+
+_MANIFEST = "manifest.json"
+_COMMITTED = "COMMITTED"
+
+
+def _leaf_paths(tree) -> List[Tuple[str, np.ndarray]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append((name, np.asarray(leaf)))
+    return out
+
+
+def _hash(arr: np.ndarray) -> str:
+    return hashlib.sha256(arr.tobytes()).hexdigest()[:16]
+
+
+def save_pytree(root: str, step: int, tree: Params, n_shards: int = 4) -> str:
+    """Atomically save a pytree checkpoint.  Returns the final directory."""
+    final = os.path.join(root, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves = _leaf_paths(tree)
+    # Greedy size-balanced shard assignment (stable order for determinism).
+    order = sorted(range(len(leaves)), key=lambda i: -leaves[i][1].nbytes)
+    shard_of: Dict[str, int] = {}
+    loads = [0] * max(n_shards, 1)
+    for i in order:
+        s = int(np.argmin(loads))
+        shard_of[leaves[i][0]] = s
+        loads[s] += leaves[i][1].nbytes
+
+    manifest: Dict[str, Any] = {"step": step, "n_shards": n_shards, "leaves": {}}
+    shards: Dict[int, Dict[str, np.ndarray]] = {}
+    for name, arr in leaves:
+        s = shard_of[name]
+        key = f"a{len(shards.setdefault(s, {}))}"
+        # npz cannot store ml_dtypes (bfloat16/fp8): persist a same-width
+        # integer view; the true dtype is recorded in the manifest.
+        stored = arr
+        if arr.dtype.name not in np.sctypeDict:
+            stored = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+        shards[s][key] = stored
+        manifest["leaves"][name] = {
+            "shard": s, "key": key, "shape": list(arr.shape),
+            "dtype": str(arr.dtype), "sha256_16": _hash(arr),
+        }
+
+    for s, arrs in shards.items():
+        np.savez(os.path.join(tmp, f"shard_{s}.npz"), **arrs)
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, _COMMITTED), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def is_committed(path: str) -> bool:
+    return os.path.exists(os.path.join(path, _COMMITTED))
+
+
+def load_pytree(path: str, like: Params, *, verify: bool = True) -> Params:
+    """Load a checkpoint into the structure of ``like`` (shapes validated)."""
+    if not is_committed(path):
+        raise FileNotFoundError(f"checkpoint at {path} is not committed")
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+
+    cache: Dict[int, Any] = {}
+
+    def shard(s: int):
+        if s not in cache:
+            cache[s] = np.load(os.path.join(path, f"shard_{s}.npz"))
+        return cache[s]
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for pth, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in pth)
+        if name not in manifest["leaves"]:
+            raise KeyError(f"leaf {name!r} missing from checkpoint {path}")
+        meta = manifest["leaves"][name]
+        arr = shard(meta["shard"])[meta["key"]]
+        if str(arr.dtype) != meta["dtype"]:
+            # integer view of an ml_dtype (bfloat16/fp8): reinterpret
+            import ml_dtypes  # noqa: F401  (registers the dtypes)
+            arr = arr.view(np.dtype(meta["dtype"]))
+        if list(arr.shape) != meta["shape"] or str(arr.dtype) != meta["dtype"]:
+            raise ValueError(f"leaf {name!r}: manifest/shard mismatch")
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"leaf {name!r}: checkpoint shape {arr.shape} != expected {np.shape(leaf)}")
+        if verify and _hash(arr) != meta["sha256_16"]:
+            raise IOError(f"leaf {name!r}: integrity hash mismatch (corrupt shard)")
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def list_checkpoints(root: str) -> List[Tuple[int, str]]:
+    """Committed checkpoints under root, sorted by step ascending."""
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for d in os.listdir(root):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            p = os.path.join(root, d)
+            if is_committed(p):
+                try:
+                    out.append((int(d[5:]), p))
+                except ValueError:
+                    continue
+    return sorted(out)
+
+
+def latest_checkpoint(root: str) -> Optional[Tuple[int, str]]:
+    cks = list_checkpoints(root)
+    return cks[-1] if cks else None

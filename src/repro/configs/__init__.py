@@ -1,0 +1,64 @@
+"""Architecture registry: the 10 assigned configs + shapes + input specs."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Tuple
+
+from repro.configs.base import (
+    ALL_SHAPES,
+    LONG_CONTEXT_ARCHS,
+    SHAPES_BY_NAME,
+    AttentionConfig,
+    ModelConfig,
+    MoEConfig,
+    RopeConfig,
+    ShapeConfig,
+    SSMConfig,
+    shape_applicable,
+)
+from repro.configs.specs import cache_struct, input_specs, params_struct
+
+_ARCH_MODULES = {
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "gemma2-27b": "repro.configs.gemma2_27b",
+    "mamba2-130m": "repro.configs.mamba2_130m",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+}
+
+ARCH_IDS: Tuple[str, ...] = tuple(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch_id]).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch_id]).SMOKE
+
+
+def all_cells() -> List[Tuple[str, ShapeConfig, bool]]:
+    """All 40 (arch, shape, applicable) cells in a stable order."""
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in ALL_SHAPES:
+            cells.append((arch, shape, shape_applicable(arch, shape, cfg)))
+    return cells
+
+
+__all__ = [
+    "ALL_SHAPES", "ARCH_IDS", "LONG_CONTEXT_ARCHS", "SHAPES_BY_NAME",
+    "AttentionConfig", "ModelConfig", "MoEConfig", "RopeConfig",
+    "SSMConfig", "ShapeConfig", "all_cells", "cache_struct", "get_config",
+    "get_smoke_config", "input_specs", "params_struct", "shape_applicable",
+]

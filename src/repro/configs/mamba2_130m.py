@@ -1,0 +1,35 @@
+"""mamba2-130m [ssm]: SSD (state-space duality), attention-free.
+
+24L d_model=768 d_ff=0 vocab=50280, ssm_state=128
+[arXiv:2405.21060; unverified]
+"""
+from repro.configs.base import ModelConfig, SSMConfig, AttentionConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    d_ff=0,
+    vocab=50280,
+    attention=AttentionConfig(n_heads=1, n_kv_heads=1, head_dim=64, rope=None),
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, conv_width=4, chunk=256),
+    norm="rmsnorm",
+    act="silu_gated",
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-smoke",
+    family="ssm",
+    n_layers=3,
+    d_model=64,
+    d_ff=0,
+    vocab=256,
+    attention=AttentionConfig(n_heads=1, n_kv_heads=1, head_dim=16, rope=None),
+    ssm=SSMConfig(d_state=16, head_dim=16, expand=2, conv_width=4, chunk=16),
+    norm="rmsnorm",
+    act="silu_gated",
+    tie_embeddings=True,
+    remat="none",
+)

@@ -1,0 +1,35 @@
+"""olmo-1b [dense]: non-parametric LayerNorm.
+
+16L d_model=2048 16H (GQA kv=16) d_ff=8192 vocab=50304
+[arXiv:2402.00838; hf]
+"""
+from repro.configs.base import AttentionConfig, ModelConfig, RopeConfig
+
+CONFIG = ModelConfig(
+    name="olmo-1b",
+    family="dense",
+    n_layers=16,
+    d_model=2048,
+    d_ff=8192,
+    vocab=50304,
+    attention=AttentionConfig(n_heads=16, n_kv_heads=16, head_dim=128,
+                              rope=RopeConfig(theta=10000.0)),
+    norm="nonparametric",  # OLMo: LN without affine parameters
+    act="silu_gated",
+    tie_embeddings=True,   # OLMo ties input/output embeddings
+)
+
+SMOKE = ModelConfig(
+    name="olmo-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    d_ff=256,
+    vocab=256,
+    attention=AttentionConfig(n_heads=4, n_kv_heads=4, head_dim=16,
+                              rope=RopeConfig()),
+    norm="nonparametric",
+    act="silu_gated",
+    tie_embeddings=True,
+    remat="none",
+)

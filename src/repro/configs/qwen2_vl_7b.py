@@ -1,0 +1,41 @@
+"""qwen2-vl-7b [vlm]: M-RoPE, dynamic resolution (backbone only).
+
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064
+[arXiv:2409.12191; hf]
+
+Backbone only: the vision tower is a stub; input_specs() provides token ids
+plus (B, 3, S) M-RoPE position triples (t/h/w) as the ViT would emit them.
+"""
+from repro.configs.base import AttentionConfig, ModelConfig, RopeConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="dense",
+    n_layers=28,
+    d_model=3584,
+    d_ff=18944,
+    vocab=152064,
+    attention=AttentionConfig(
+        n_heads=28, n_kv_heads=4, head_dim=128,
+        rope=RopeConfig(theta=1000000.0, mrope_sections=(16, 24, 24)),
+    ),
+    norm="rmsnorm",
+    act="silu_gated",
+    frontend="patches",
+    tie_embeddings=False,
+)
+
+SMOKE = ModelConfig(
+    name="qwen2-vl-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    d_ff=160,
+    vocab=256,
+    attention=AttentionConfig(n_heads=4, n_kv_heads=2, head_dim=16,
+                              rope=RopeConfig(mrope_sections=(2, 3, 3))),
+    norm="rmsnorm",
+    act="silu_gated",
+    frontend="patches",
+    remat="none",
+)

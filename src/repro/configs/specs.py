@@ -1,0 +1,72 @@
+"""Input ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+The dry-run lowers against these (no device allocation).  Modality
+frontends are stubs per the assignment: whisper receives precomputed audio
+frame embeddings, qwen2-vl receives token ids + M-RoPE position triples.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as SDS
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, SDS]:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": SDS((B, S), jnp.int32),
+        "labels": SDS((B, S), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        specs["frames"] = SDS((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if (cfg.attention.rope is not None
+            and cfg.attention.rope.mrope_sections is not None):
+        specs["positions"] = SDS((B, 3, S), jnp.int32)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, SDS]:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {"tokens": SDS((B, S), jnp.int32)}
+    if cfg.family == "encdec":
+        specs["frames"] = SDS((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if (cfg.attention.rope is not None
+            and cfg.attention.rope.mrope_sections is not None):
+        specs["positions"] = SDS((B, 3, S), jnp.int32)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, SDS]:
+    """One new token per sequence; the KV/state cache holds shape.seq_len."""
+    B = shape.global_batch
+    specs = {"tokens": SDS((B, 1), jnp.int32)}
+    if (cfg.attention.rope is not None
+            and cfg.attention.rope.mrope_sections is not None):
+        specs["positions"] = SDS((B, 3, 1), jnp.int32)
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, SDS]:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    if shape.kind == "decode":
+        return decode_input_specs(cfg, shape)
+    raise ValueError(shape.kind)
+
+
+def params_struct(cfg: ModelConfig):
+    """Abstract parameter pytree (no allocation)."""
+    from repro.models.model import init_params
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Abstract serving-cache pytree (no allocation)."""
+    from repro.models.model import init_cache
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq, dtype))

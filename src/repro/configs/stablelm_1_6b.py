@@ -1,0 +1,34 @@
+"""stablelm-1.6b [dense].
+
+24L d_model=2048 32H (GQA kv=32) d_ff=5632 vocab=100352
+[hf:stabilityai/stablelm-2-1_6b; unverified]
+"""
+from repro.configs.base import AttentionConfig, ModelConfig, RopeConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b",
+    family="dense",
+    n_layers=24,
+    d_model=2048,
+    d_ff=5632,
+    vocab=100352,
+    attention=AttentionConfig(n_heads=32, n_kv_heads=32, head_dim=64,
+                              rope=RopeConfig(theta=10000.0, partial_pct=0.25)),
+    norm="layernorm",      # stablelm-2 uses LayerNorm
+    act="silu_gated",
+    tie_embeddings=False,
+)
+
+SMOKE = ModelConfig(
+    name="stablelm-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    d_ff=160,
+    vocab=256,
+    attention=AttentionConfig(n_heads=4, n_kv_heads=4, head_dim=16,
+                              rope=RopeConfig(partial_pct=0.25)),
+    norm="layernorm",
+    act="silu_gated",
+    remat="none",
+)

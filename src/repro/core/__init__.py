@@ -1,0 +1,63 @@
+"""Paper core: adaptive checkpointing (Ni & Harwood 2007).
+
+Public API re-exports.
+"""
+from repro.core.adaptive import (
+    AdaptiveCheckpointController,
+    estimate_v_paper,
+    estimate_v_paper_mean,
+)
+from repro.core.failure import (
+    FailureRateEstimator,
+    PiggybackBus,
+    exponential_lifetimes,
+    gossip_merge,
+    mle_failure_rate,
+)
+from repro.core.lambertw import lambertw0
+from repro.core.replication import (
+    ReplicationPlan,
+    best_replication,
+    effective_failure_rate,
+    plan_replication,
+)
+from repro.core.utilization import (
+    UtilizationReport,
+    cycle_overhead,
+    daly_interval,
+    expected_cycles_per_failure,
+    feasible,
+    job_failure_rate,
+    optimal_interval,
+    optimal_lambda,
+    utilization,
+    wasted_computation,
+    young_interval,
+)
+
+__all__ = [
+    "AdaptiveCheckpointController",
+    "FailureRateEstimator",
+    "PiggybackBus",
+    "ReplicationPlan",
+    "UtilizationReport",
+    "best_replication",
+    "cycle_overhead",
+    "daly_interval",
+    "effective_failure_rate",
+    "estimate_v_paper",
+    "estimate_v_paper_mean",
+    "expected_cycles_per_failure",
+    "exponential_lifetimes",
+    "feasible",
+    "gossip_merge",
+    "job_failure_rate",
+    "lambertw0",
+    "mle_failure_rate",
+    "optimal_interval",
+    "optimal_lambda",
+    "plan_replication",
+    "utilization",
+    "wasted_computation",
+    "young_interval",
+]

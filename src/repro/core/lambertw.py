@@ -1,0 +1,123 @@
+"""Lambert W function (principal branch W0), pure JAX.
+
+The paper's optimal checkpoint rate (Section 3.2.3) is
+
+    lambda* = k*mu / ( W0[ (V*k*mu - T_d*k*mu - 1) / (T_d*k*mu + 1) * e^-1 ] + 1 )
+
+scipy is available in this container for cross-validation in tests, but the
+runtime controller uses this implementation so the framework is dependency-
+free and the function is jit/grad-compatible (it runs inside jitted
+controller updates and, being implemented with lax.while-free fixed
+iteration, differentiates cleanly).
+
+W0 is defined on [-1/e, inf) with range [-1, inf).  The paper's argument is
+always >= -1/e (it equals -1/e exactly when V == 0: checkpoints are free and
+lambda* -> inf).  Near the branch point the standard Halley iteration loses
+quadratic convergence, so we switch to the series expansion in
+p = sqrt(2(ez + 1)) there (Corless et al. 1996, eq. 4.22).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_E = 2.718281828459045235360287471352662498
+_BRANCH = -1.0 / _E
+
+# Series around the branch point z = -1/e:  W0(z) = -1 + p - p^2/3 + 11 p^3/72 - ...
+_SERIES_COEFFS = (-1.0, 1.0, -1.0 / 3.0, 11.0 / 72.0, -43.0 / 540.0, 769.0 / 17280.0)
+
+
+def _initial_guess(z: jnp.ndarray) -> jnp.ndarray:
+    """Piecewise initial guess for Halley iteration."""
+    # Near branch point: series in p = sqrt(2 (e z + 1)).
+    p = jnp.sqrt(jnp.maximum(2.0 * (_E * z + 1.0), 0.0))
+    w_branch = _SERIES_COEFFS[0] + p * (
+        _SERIES_COEFFS[1]
+        + p * (_SERIES_COEFFS[2] + p * (_SERIES_COEFFS[3] + p * (_SERIES_COEFFS[4] + p * _SERIES_COEFFS[5])))
+    )
+    # Large z: asymptotic W ~ log z - log log z.
+    logz = jnp.log(jnp.maximum(z, 1e-300))
+    w_large = logz - jnp.log(jnp.maximum(logz, 1e-300))
+    # Moderate z: W ~ z around 0.
+    w_mid = z * (1.0 - z)  # two terms of the Taylor series W = z - z^2 + ...
+    w = jnp.where(z < -0.25, w_branch, jnp.where(z < 1.0, w_mid, jnp.where(z < 3.0, 0.5 * jnp.log1p(z), w_large)))
+    return w
+
+
+def lambertw0(z, iters: int = 12):
+    """Principal branch W0(z) for z >= -1/e, elementwise.
+
+    Fixed-iteration Halley's method (jit-friendly, differentiable).  For
+    float64 inputs, 12 iterations reach machine precision over the whole
+    domain; the paper's controller operates in float64 (numpy scalars) or
+    float32 (jitted) — both validated against scipy in tests.
+    """
+    z = jnp.asarray(z)
+    dt = z.dtype if jnp.issubdtype(z.dtype, jnp.floating) else jnp.result_type(float)
+    z = z.astype(dt)
+    # Clamp to the domain: arguments an ulp below -1/e (from rounding in the
+    # caller's algebra) are treated as the branch point.
+    zc = jnp.maximum(z, jnp.asarray(_BRANCH, dt))
+    w = _initial_guess(zc)
+
+    def halley(w):
+        ew = jnp.exp(w)
+        f = w * ew - zc
+        wp1 = w + 1.0
+        # Halley: w' = w - f / (ew*(w+1) - (w+2) f / (2 (w+1)))
+        denom = ew * wp1 - (w + 2.0) * f / (2.0 * jnp.where(jnp.abs(wp1) < 1e-12, 1e-12, wp1))
+        step = f / jnp.where(jnp.abs(denom) < 1e-300, 1e-300, denom)
+        return w - step
+
+    for _ in range(iters):
+        w = halley(w)
+    # Exact at the branch point (avoids 0/0 artifacts there).
+    w = jnp.where(zc <= _BRANCH, jnp.asarray(-1.0, dt), w)
+    return w
+
+
+@jax.jit
+def lambertw0_jit(z):
+    return lambertw0(z)
+
+
+def lambertw0_scalar(z: float, iters: int = 64, tol: float = 1e-14) -> float:
+    """Pure-Python scalar W0 — fast path for the runtime controller.
+
+    The jnp version costs ~ms in eager dispatch per call; the discrete-event
+    simulator and the training-loop controller call this hundreds of times
+    per second, so they use this math-module implementation (validated
+    against the jnp version and scipy in tests).
+    """
+    import math
+
+    z = float(z)
+    if z < _BRANCH:
+        z = _BRANCH
+    if z == _BRANCH:
+        return -1.0
+    # Initial guess (same piecewise logic as the jnp version).
+    if z < -0.25:
+        p = math.sqrt(max(2.0 * (_E * z + 1.0), 0.0))
+        w = (_SERIES_COEFFS[0] + p * (_SERIES_COEFFS[1] + p * (_SERIES_COEFFS[2]
+             + p * (_SERIES_COEFFS[3] + p * (_SERIES_COEFFS[4] + p * _SERIES_COEFFS[5])))))
+    elif z < 1.0:
+        w = z * (1.0 - z)
+    elif z < 3.0:
+        w = 0.5 * math.log1p(z)
+    else:
+        lz = math.log(z)
+        w = lz - math.log(lz)
+    for _ in range(iters):
+        ew = math.exp(w)
+        f = w * ew - z
+        wp1 = w + 1.0
+        denom = ew * wp1 - (w + 2.0) * f / (2.0 * (wp1 if abs(wp1) > 1e-12 else 1e-12))
+        if denom == 0.0:
+            break
+        step = f / denom
+        w -= step
+        if abs(step) <= tol * max(abs(w), 1.0):
+            break
+    return w

@@ -1,0 +1,28 @@
+from repro.distributed.mesh import (
+    DATA_AXIS,
+    MODEL_AXIS,
+    MULTI_POD_SHAPE,
+    POD_AXIS,
+    SINGLE_POD_SHAPE,
+    axis_size,
+    data_axes,
+    local_mesh_for_testing,
+    make_mesh,
+)
+from repro.distributed.sharding import (
+    LogicalSpec,
+    ShardingRules,
+    current_rules,
+    logically_sharded,
+    resolve_rules,
+    sharding_context,
+    tree_shardings,
+)
+
+__all__ = [
+    "DATA_AXIS", "MODEL_AXIS", "MULTI_POD_SHAPE", "POD_AXIS",
+    "SINGLE_POD_SHAPE", "LogicalSpec", "ShardingRules", "axis_size",
+    "current_rules", "data_axes", "local_mesh_for_testing",
+    "logically_sharded", "make_mesh", "resolve_rules", "sharding_context",
+    "tree_shardings",
+]

@@ -1,0 +1,44 @@
+"""Mesh axis conventions.
+
+Physical axes:
+    pod    — across pods (multi-pod only); DP across pods
+    data   — intra-pod data parallelism (+ ZeRO-1 optimizer sharding)
+    model  — tensor parallelism (heads / mlp / experts / vocab)
+
+Logical axes used by model code (resolved via distributed.sharding rules):
+    batch, seq, kv_seq, embed, heads, kv_heads, head_dim, mlp, vocab,
+    experts, layers, state, conv
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+POD_AXIS = "pod"
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+
+SINGLE_POD_SHAPE = (16, 16)
+MULTI_POD_SHAPE = (2, 16, 16)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    """The axes batch shards over (pod+data when present)."""
+    return tuple(a for a in (POD_AXIS, DATA_AXIS) if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def local_mesh_for_testing(n_devices: Optional[int] = None) -> Mesh:
+    """A (1, n) mesh over whatever devices exist — used by CPU tests."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    return jax.make_mesh((1, n), (DATA_AXIS, MODEL_AXIS))

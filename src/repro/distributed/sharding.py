@@ -1,0 +1,200 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallbacks.
+
+Model code annotates tensors with *logical* axis names; a rule table maps
+each logical axis to zero or more physical mesh axes.  Rules are resolved
+per (config, mesh) at setup time: each logical axis has a priority list of
+physical candidates and is only mapped when the dimension size is known to
+divide the physical axis size (XLA tolerates ragged shardings via padding,
+but padded shards waste memory and produce misleading roofline numbers, so
+we insist on divisibility).
+
+The rules implement the distribution plan of DESIGN.md Sec 5:
+    batch        -> (pod, data)       DP
+    heads/kv/mlp/experts/vocab -> model   TP / EP
+    head_dim     -> model             fallback TP when head counts don't divide
+    kv_seq       -> data              sequence-sharded KV cache for long decode
+    (ZeRO-1: optimizer state additionally sharded over data — train/optimizer.py)
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.mesh import DATA_AXIS, MODEL_AXIS, POD_AXIS
+
+LogicalSpec = Tuple[Optional[str], ...]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Mapping logical axis name -> tuple of physical mesh axes (or ())."""
+
+    table: Dict[str, Tuple[str, ...]]
+
+    def physical(self, logical: Optional[str]) -> Optional[Tuple[str, ...]]:
+        if logical is None:
+            return None
+        axes = self.table.get(logical, ())
+        return tuple(axes) if axes else None
+
+    def spec(self, logical_spec: LogicalSpec) -> P:
+        parts = []
+        used: set = set()
+        for name in logical_spec:
+            phys = self.physical(name)
+            if phys is None:
+                parts.append(None)
+            else:
+                # A physical axis may appear at most once in a PartitionSpec.
+                phys = tuple(a for a in phys if a not in used)
+                used.update(phys)
+                parts.append(phys if len(phys) > 1 else (phys[0] if phys else None))
+        return P(*parts)
+
+    def sharding(self, mesh: Mesh, logical_spec: LogicalSpec) -> NamedSharding:
+        return NamedSharding(mesh, self.spec(logical_spec))
+
+
+def _fits(dim: Optional[int], mesh: Mesh, axes: Sequence[str]) -> bool:
+    if dim is None:
+        return False
+    size = 1
+    for a in axes:
+        if a not in mesh.axis_names:
+            return False
+        size *= mesh.shape[a]
+    return dim % size == 0 and dim >= size
+
+
+def resolve_rules(mesh: Mesh, dims: Dict[str, int]) -> ShardingRules:
+    """Build the rule table for a given mesh and model dimension sizes.
+
+    ``dims`` supplies the logical dimension sizes used for divisibility
+    checks, e.g. {"batch": 256, "heads": 32, "kv_heads": 16, "head_dim": 128,
+    "mlp": 36864, "vocab": 256000, "experts": 64, "embed": 4608, "seq": 4096}.
+    """
+    dp_axes = tuple(a for a in (POD_AXIS, DATA_AXIS) if a in mesh.axis_names)
+    tp = (MODEL_AXIS,) if MODEL_AXIS in mesh.axis_names else ()
+    table: Dict[str, Tuple[str, ...]] = {}
+
+    # --- data parallel axes -------------------------------------------------
+    if _fits(dims.get("batch"), mesh, dp_axes):
+        table["batch"] = dp_axes
+    elif DATA_AXIS in mesh.axis_names and _fits(dims.get("batch"), mesh, (DATA_AXIS,)):
+        table["batch"] = (DATA_AXIS,)
+    else:
+        table["batch"] = ()
+
+    # --- tensor parallel: attention ------------------------------------------
+    heads_on_model = bool(tp) and _fits(dims.get("heads"), mesh, tp)
+    kv_on_model = bool(tp) and _fits(dims.get("kv_heads"), mesh, tp)
+    # Shard heads only when BOTH q-heads and kv-heads divide (so that the
+    # whole attention block partitions on the same axis without resharding).
+    table["q_seq"] = ()
+    attn_kv_seq_tp = False
+    if heads_on_model and kv_on_model:
+        table["heads"] = tp
+        table["kv_heads"] = tp
+        table["head_dim"] = ()
+    elif bool(tp) and dims.get("q_seq", 0) > 1 and _fits(dims.get("kv_seq"), mesh, tp):
+        # KEY/VALUE-sequence context parallelism: when head counts don't
+        # divide the model axis (starcoder2 kv=2, qwen2-vl kv=4, whisper
+        # 20H), shard the KV sequence over 'model' for train/prefill.  The
+        # score einsum then partitions on the contracted kv position; the
+        # softmax over the sharded axis and the value contraction produce
+        # small per-chunk stat/value partial all-reduces — instead of the
+        # head_dim-contraction TP whose score partial-sums all-reduce moves
+        # S^2-sized fp32 tensors (measured 6.8 TB/chip/step at 32k
+        # prefill).  A query-sequence variant was tried first and REFUTED:
+        # the q-chunk scan's reshape broke sharding propagation and XLA
+        # replicated the whole attention computation (EXPERIMENTS.md §Perf
+        # iteration 3).
+        table["heads"] = ()
+        table["kv_heads"] = ()
+        table["head_dim"] = ()
+        attn_kv_seq_tp = True
+    elif bool(tp) and _fits(dims.get("head_dim"), mesh, tp):
+        # Fallback TP on the head_dim (contracting) dimension (decode: the
+        # single-query step has no sequence to shard; partials are tiny).
+        table["heads"] = ()
+        table["kv_heads"] = ()
+        table["head_dim"] = tp
+    else:
+        table["heads"] = table["kv_heads"] = table["head_dim"] = ()
+
+    # --- tensor parallel: mlp / experts / vocab -------------------------------
+    table["mlp"] = tp if (tp and _fits(dims.get("mlp"), mesh, tp)) else ()
+    table["experts"] = tp if (tp and _fits(dims.get("experts"), mesh, tp)) else ()
+    table["vocab"] = tp if (tp and _fits(dims.get("vocab"), mesh, tp)) else ()
+    table["state"] = ()
+    # SSM: shard the (expanded) inner channel dim over model.
+    table["inner"] = tp if (tp and _fits(dims.get("inner"), mesh, tp)) else ()
+
+    # --- sequence ------------------------------------------------------------
+    # Activations keep seq unsharded by default (fully utilized batch DP);
+    # long-context decode shards the KV/state cache sequence over data when
+    # the batch cannot use it (batch=1).
+    table["seq"] = ()
+    if attn_kv_seq_tp:
+        table["kv_seq"] = tp
+    elif not table["batch"] and DATA_AXIS in mesh.axis_names and _fits(dims.get("kv_seq"), mesh, (DATA_AXIS,)):
+        table["kv_seq"] = (DATA_AXIS,)
+    else:
+        table["kv_seq"] = ()
+
+    table["embed"] = ()
+    table["layers"] = ()
+    table["conv"] = ()
+    return ShardingRules(table=table)
+
+
+# --------------------------------------------------------------------------- #
+# Context: model code calls logically_sharded(x, (..names..)) which becomes a
+# with_sharding_constraint when a mesh+rules context is active, else a no-op
+# (CPU unit tests).
+# --------------------------------------------------------------------------- #
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[ShardingRules] = None
+
+
+_CTX = _Ctx()
+
+
+@contextmanager
+def sharding_context(mesh: Mesh, rules: ShardingRules):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return _CTX.rules
+
+
+def logically_sharded(x: jax.Array, logical_spec: LogicalSpec) -> jax.Array:
+    """Apply a sharding constraint if a context is active (no-op otherwise)."""
+    if _CTX.mesh is None or _CTX.rules is None:
+        return x
+    spec = _CTX.rules.spec(logical_spec)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))
+
+
+def tree_shardings(mesh: Mesh, rules: ShardingRules, logical_tree) -> object:
+    """Map a pytree of LogicalSpec tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda ls: rules.sharding(mesh, ls),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+    )

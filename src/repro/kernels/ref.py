@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, scale: float, causal: bool = True,
+                        softcap: Optional[float] = None) -> jnp.ndarray:
+    """Reference attention.
+
+    q: (B, R, Sq, D) query groups; k, v: (B, Sk, D).  (GQA is expressed by
+    folding kv-head groups into B and query-heads-per-group into R.)
+    """
+    s = jnp.einsum("brsd,btd->brst", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    if causal:
+        Sq, Sk = q.shape[2], k.shape[1]
+        # bottom-right aligned causal mask (decode-style when Sq < Sk)
+        qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+        mask = jnp.arange(Sk)[None, :] <= qpos
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("brst,btd->brsd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                 B: jnp.ndarray, C: jnp.ndarray,
+                 initial_state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential (non-chunked) SSD recurrence — the exact oracle.
+
+    x: (b, s, h, p), dt: (b, s, h), A: (h,), B/C: (b, s, n).
+    Returns y (b, s, h, p), final_state (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp
+        dA = jnp.exp(dtt * A)[..., None, None]          # (b,h,1,1)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dtt, Bt, xt)
+        state = state * dA + dBx
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct)
+        return state, y
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+    final, ys = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+         jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final
+
+
+def quantize_blocks_ref(x: jnp.ndarray, block: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-block symmetric int8 quantization of a flat fp array.
+
+    x: (N,) with N % block == 0.  Returns (q int8 (N,), scales f32 (N/block,)).
+    """
+    xb = x.astype(jnp.float32).reshape(-1, block)
+    amax = jnp.max(jnp.abs(xb), axis=1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale
+
+
+def dequantize_blocks_ref(q: jnp.ndarray, scale: jnp.ndarray, block: int,
+                          dtype=jnp.float32) -> jnp.ndarray:
+    qb = q.reshape(-1, block).astype(jnp.float32)
+    return (qb * scale[:, None]).reshape(-1).astype(dtype)

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid = (B, H, n_chunks); the chunk axis is the innermost SEQUENTIAL axis,
+and the running SSM state (head_dim x d_state, fp32) lives in VMEM scratch,
+carried across chunk steps — the TPU-native replacement for the GPU
+implementation's inter-block shared-memory handoff (DESIGN.md: hardware
+adaptation).  Within a chunk the computation is the quadratic 'dual' form:
+two small matmuls that map well onto the MXU:
+
+    y_intra = ((C B^T) * L) (dt x)      [chunk x chunk systolic matmul]
+    y_inter = (C  state_in) * decay
+    state_out = state_in * full_decay + (decayed dt x)^T B
+
+Block shapes: chunk Q x head_dim P and chunk Q x d_state N tiles; Q, P, N
+chosen as multiples of the 128-lane register tiling where the model allows.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, init_ref,
+                y_ref, final_ref, state_scr, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = init_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (Q,)
+    A = a_ref[0]                                     # scalar decay rate (<0)
+    B = b_ref[0].astype(jnp.float32)                 # (Q, N)
+    C = c_ref[0].astype(jnp.float32)                 # (Q, N)
+
+    dA = dt * A                                      # (Q,)
+    cum = jnp.cumsum(dA)                             # within-chunk cumulative
+
+    # ---- intra-chunk (dual/quadratic) term --------------------------------
+    li = cum[:, None]
+    lj = cum[None, :]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(iota_i >= iota_j, jnp.exp(li - lj), 0.0)
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())))  # (Q, Q)
+    dtx = x * dt[:, None]                                         # (Q, P)
+    y_intra = jax.lax.dot_general(scores * L, dtx, (((1,), (0,)), ((), ())))
+
+    # ---- inter-chunk term ---------------------------------------------------
+    state_in = state_scr[...]                                     # (P, N)
+    decay_from_start = jnp.exp(cum)[:, None]                      # (Q, 1)
+    y_inter = jax.lax.dot_general(C * decay_from_start, state_in,
+                                  (((1,), (1,)), ((), ())))       # (Q, P)
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # ---- state update ---------------------------------------------------------
+    decay_to_end = jnp.exp(cum[-1] - cum)[:, None]                # (Q, 1)
+    contrib = jax.lax.dot_general(dtx * decay_to_end, B,
+                                  (((0,), (0,)), ((), ())))       # (P, N)
+    state_scr[...] = state_in * jnp.exp(cum[-1]) + contrib
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        final_ref[0, 0] = state_scr[...].astype(final_ref.dtype)
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             B: jnp.ndarray, C: jnp.ndarray, *, chunk: int = 256,
+             initial_state: Optional[jnp.ndarray] = None,
+             interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (b, s, h, p); dt: (b, s, h); A: (h,); B, C: (b, s, n).
+
+    Returns (y (b, s, h, p), final_state (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    nc = s // chunk
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, final = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), B, C, initial_state)
+    return y, final

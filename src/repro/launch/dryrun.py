@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh).
+
+For each cell this builds the REAL jitted program (train_step with
+microbatched grad accumulation + AdamW + ZeRO-1, or serve_step over the
+KV/state cache), lowers it against ShapeDtypeStruct stand-ins on the
+production mesh (single-pod 16x16 / multi-pod 2x16x16 over 512 forced host
+devices), compiles it, and records:
+
+    * compiled.memory_analysis()  — proves the cell fits (bytes/device);
+    * compiled.cost_analysis()    — XLA's raw per-device flops/bytes;
+    * loop-aware HLO analysis     — trip-count-corrected dot FLOPs, bytes,
+      and per-kind collective bytes (launch/hlo_analysis.py; XLA's own
+      cost_analysis counts scan bodies once — see tests/test_hlo_analysis);
+    * analytic MODEL_FLOPS (6*N*D / 6*N_active*D) for the usefulness ratio.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out benchmarks/artifacts/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (
+    ALL_SHAPES,
+    ARCH_IDS,
+    SHAPES_BY_NAME,
+    get_config,
+    input_specs,
+    shape_applicable,
+)
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.specs import cache_struct, params_struct
+from repro.distributed.sharding import resolve_rules, sharding_context, tree_shardings
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import (
+    cache_logical_specs,
+    param_logical_specs,
+    sharding_dims,
+)
+from repro.serve.step import make_prefill_step, make_serve_step
+from repro.train.optimizer import AdamWConfig, zero1_state_shardings
+from repro.train.schedule import constant
+from repro.train.step import TrainState, make_train_step
+
+# chips: 256 single-pod / 512 multi-pod; v5e constants for the roofline.
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+DEFAULT_MICROBATCHES = 16    # train_4k: 256-seq batch -> 16-seq microbatches
+
+
+def _batch_shardings(specs: Dict[str, jax.ShapeDtypeStruct], mesh, rules):
+    out = {}
+    for k, v in specs.items():
+        lead = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = rules.sharding(mesh, lead)
+    return out
+
+
+def _train_state_shardings(cfg: ModelConfig, mesh, rules, state_struct: TrainState):
+    logical = param_logical_specs(cfg)
+    param_sh = tree_shardings(mesh, rules, logical)
+    pspec_tree = jax.tree.map(lambda s: s.spec, param_sh,
+                              is_leaf=lambda x: isinstance(x, NamedSharding))
+    opt_sh = zero1_state_shardings(pspec_tree, state_struct.params, mesh)
+    return TrainState(params=param_sh, opt=opt_sh)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               n_microbatches: Optional[int] = None,
+               cfg_override: Optional[ModelConfig] = None) -> Dict[str, Any]:
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": 512 if multi_pod else 256,
+    }
+    if not shape_applicable(arch, shape, cfg):
+        record["status"] = "skipped"
+        record["reason"] = "full-attention arch at 500k context (DESIGN.md Sec 4)"
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    q_seq = 1 if shape.kind == "decode" else shape.seq_len
+    dims = sharding_dims(cfg, shape.global_batch, kv_seq=shape.seq_len,
+                         q_seq=q_seq)
+    rules = resolve_rules(mesh, dims)
+    specs = input_specs(cfg, shape)
+    batch_sh = _batch_shardings(specs, mesh, rules)
+
+    t0 = time.monotonic()
+    with sharding_context(mesh, rules):
+        if shape.kind == "train":
+            n_micro = n_microbatches or DEFAULT_MICROBATCHES
+            if shape.global_batch % n_micro:
+                n_micro = 1
+            record["n_microbatches"] = n_micro
+            state_struct = jax.eval_shape(
+                lambda: __import__("repro.train.step", fromlist=["init_train_state"])
+                .init_train_state(jax.random.key(0), cfg))
+            state_sh = _train_state_shardings(cfg, mesh, rules, state_struct)
+            # ZeRO-1 gradient layout: the fp32 accumulation buffer lives in
+            # the optimizer-state sharding (data-sharded), so each microbatch
+            # contributes via reduce-scatter instead of keeping a full
+            # model-sharded fp32 grad copy per chip (6.75 GB for 27B at TP=16).
+            grad_sh = state_sh.opt.master
+
+            def grad_constraint(grads):
+                return jax.tree.map(
+                    lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                    grads, grad_sh)
+
+            # Large models cannot afford a model-sharded fp32 grad buffer
+            # (27B -> 6.75 GB/chip at TP=16): accumulate in the ZeRO (data-
+            # sharded) layout, paying a reduce-scatter per microbatch.
+            zero1_in_scan = cfg.n_params_estimate > 10e9
+            record["zero1_grads_in_scan"] = zero1_in_scan
+            step_fn = make_train_step(cfg, AdamWConfig(), constant(1.0),
+                                      n_microbatches=n_micro,
+                                      grad_constraint=grad_constraint,
+                                      zero1_grads_in_scan=zero1_in_scan)
+            lowered = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                              donate_argnums=(0,)) \
+                .lower(state_struct, specs)
+        elif shape.kind == "prefill":
+            step_fn = make_prefill_step(cfg, max_seq=shape.seq_len)
+            p_struct = params_struct(cfg)
+            p_sh = tree_shardings(mesh, rules, param_logical_specs(cfg))
+            lowered = jax.jit(step_fn, in_shardings=(p_sh, batch_sh)) \
+                .lower(p_struct, specs)
+        else:  # decode
+            step_fn = make_serve_step(cfg)
+            p_struct = params_struct(cfg)
+            p_sh = tree_shardings(mesh, rules, param_logical_specs(cfg))
+            c_struct = cache_struct(cfg, shape.global_batch, shape.seq_len)
+            c_sh = tree_shardings(mesh, rules, cache_logical_specs(cfg))
+            lowered = jax.jit(step_fn, in_shardings=(p_sh, c_sh, batch_sh),
+                              donate_argnums=(1,)) \
+                .lower(p_struct, c_struct, specs)
+    record["lower_seconds"] = time.monotonic() - t0
+
+    t1 = time.monotonic()
+    compiled = lowered.compile()
+    record["compile_seconds"] = time.monotonic() - t1
+
+    ma = compiled.memory_analysis()
+    peak = int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+               + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    # CPU-backend artifact: bf16 dots are computed in f32, and XLA:CPU hoists
+    # loop-invariant f32 copies of the (bf16) weights out of the layer scan
+    # (~2x param shard bytes of temp).  The TPU MXU consumes bf16 natively,
+    # so the TPU peak estimate subtracts that copy (verified: temp size is
+    # invariant to microbatch count, so it is weight- not activation-sized).
+    import numpy as _np
+    param_bytes = sum(
+        int(_np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+        for l in jax.tree.leaves(params_struct(cfg)))
+    n_model = mesh.shape["model"]
+    f32_copy = 2 * param_bytes // n_model if cfg.compute_dtype == "bfloat16" else 0
+    record["memory_per_device"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_estimate_bytes": peak,
+        "tpu_adjusted_peak_bytes": max(peak - f32_copy, 0),
+    }
+    ca = compiled.cost_analysis() or {}
+    record["xla_cost_analysis"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+    }
+
+    t2 = time.monotonic()
+    hlo = analyze_hlo(compiled.as_text())
+    record["hlo_analysis_seconds"] = time.monotonic() - t2
+    record["hlo"] = hlo.to_dict()
+
+    # Roofline terms (per step, seconds) — per-device quantities over
+    # per-chip peaks (DESIGN.md Sec 8).
+    flops = hlo.dot_flops
+    byts = hlo.bytes_accessed
+    coll = hlo.total_collective_bytes
+    record["roofline"] = {
+        "compute_seconds": flops / PEAK_FLOPS,
+        "memory_seconds": byts / HBM_BW,
+        "collective_seconds": coll / ICI_BW,
+    }
+    dominant = max(record["roofline"], key=record["roofline"].get)
+    record["roofline"]["dominant"] = dominant
+
+    # MODEL_FLOPS: 6*N*D (dense) / 6*N_active*D per trained token; for
+    # serving: 2*N_active per generated/prefilled token.
+    n_active = (cfg.decode_active_params_estimate if shape.kind == "decode"
+                else cfg.n_active_params_estimate)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    chips = record["chips"]
+    if shape.kind == "train":
+        model_flops = 6.0 * n_active * tokens
+    else:
+        model_flops = 2.0 * n_active * tokens
+    record["model_flops_global"] = model_flops
+    record["model_flops_per_chip"] = model_flops / chips
+    record["useful_flops_ratio"] = (model_flops / chips) / max(flops, 1.0)
+    record["status"] = "ok"
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=[s.name for s in ALL_SHAPES])
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--microbatches", type=int, default=None)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in ALL_SHAPES:
+                cells.append((arch, shape.name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells.append((args.arch, args.shape))
+
+    failures = 0
+    for arch, shape in cells:
+        for multi in meshes:
+            mesh_name = "multi" if multi else "single"
+            out_path = os.path.join(args.out, f"{arch}__{shape}__{mesh_name}.json")
+            if os.path.exists(out_path):
+                print(f"[dryrun] SKIP (exists) {arch} {shape} {mesh_name}", flush=True)
+                continue
+            print(f"[dryrun] {arch} {shape} {mesh_name} ...", flush=True)
+            t0 = time.monotonic()
+            try:
+                rec = lower_cell(arch, shape, multi,
+                                 n_microbatches=args.microbatches)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "status": "error", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+                failures += 1
+            rec["wall_seconds"] = time.monotonic() - t0
+            with open(out_path, "w") as f:
+                json.dump(rec, f, indent=1)
+            status = rec.get("status")
+            extra = ""
+            if status == "ok":
+                mem = rec["memory_per_device"]["peak_estimate_bytes"] / 2**30
+                dom = rec["roofline"]["dominant"]
+                extra = f" peak={mem:.2f}GiB dom={dom}"
+            print(f"[dryrun] {arch} {shape} {mesh_name}: {status}"
+                  f" ({rec['wall_seconds']:.0f}s){extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Pure-JAX model library (all assigned architecture families)."""
+from repro.models.model import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+__all__ = ["decode_step", "forward", "init_cache", "init_params", "loss_fn", "prefill"]

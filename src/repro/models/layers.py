@@ -1,0 +1,414 @@
+"""Pure-JAX layer library: norms, RoPE/M-RoPE, GQA attention, MLPs.
+
+Conventions:
+    * params are nested dicts of jnp arrays;
+    * ``init_*`` functions build params, ``apply`` logic is plain functions;
+    * activations carry logical sharding annotations via
+      :func:`repro.distributed.logically_sharded` (no-op outside a mesh);
+    * compute runs in ``cfg.compute_dtype``; norm statistics and softmax in
+      fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig, ModelConfig
+from repro.distributed.sharding import logically_sharded as shard
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+def truncated_normal_init(key, shape, scale: float, dtype) -> jnp.ndarray:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+
+def init_norm(key, cfg: ModelConfig, dim: int) -> Params:
+    dt = _dtype(cfg.param_dtype)
+    if cfg.norm in ("rmsnorm", "rmsnorm_one"):
+        return {"scale": jnp.zeros((dim,), dt) if cfg.norm == "rmsnorm_one"
+                else jnp.ones((dim,), dt)}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((dim,), dt), "bias": jnp.zeros((dim,), dt)}
+    if cfg.norm == "layernorm_nobias":
+        return {"scale": jnp.ones((dim,), dt)}
+    if cfg.norm == "nonparametric":
+        return {}
+    raise ValueError(f"unknown norm {cfg.norm!r}")
+
+
+def apply_norm(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm.startswith("rmsnorm"):
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+        scale = p["scale"].astype(jnp.float32)
+        y = y * (1.0 + scale) if cfg.norm == "rmsnorm_one" else y * scale
+    else:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + cfg.norm_eps)
+        if cfg.norm == "layernorm":
+            y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+        elif cfg.norm == "layernorm_nobias":
+            y = y * p["scale"].astype(jnp.float32)
+        # 'nonparametric' (olmo): no affine parameters at all.
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Rotary embeddings (RoPE, partial RoPE, M-RoPE)
+# --------------------------------------------------------------------------- #
+
+def _rope_freqs(head_dim_rot: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim_rot, 2, dtype=jnp.float32) / head_dim_rot))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               partial_pct: float = 1.0,
+               mrope_sections: Optional[Tuple[int, int, int]] = None) -> jnp.ndarray:
+    """Rotate ``x`` (B, H, S, D) by positions.
+
+    positions: (B, S) for standard RoPE, (B, 3, S) for M-RoPE (t/h/w).
+    M-RoPE (qwen2-vl): the rotary frequency slots are split into three
+    sections, each driven by its own position stream; for pure text the
+    three streams are identical and M-RoPE reduces to RoPE.
+    """
+    B, H, S, D = x.shape
+    d_rot = int(D * partial_pct)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    x_rot, x_pass = x[..., :d_rot], x[..., d_rot:]
+    freqs = _rope_freqs(d_rot, theta)                        # (d_rot/2,)
+    if mrope_sections is None:
+        if positions.ndim == 3:
+            positions = positions[:, 0]
+        angles = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,d/2)
+    else:
+        assert positions.ndim == 3, "M-RoPE needs (B, 3, S) positions"
+        secs = mrope_sections
+        n_slots = d_rot // 2
+        assert sum(secs) == n_slots, f"mrope sections {secs} != {n_slots} freq slots"
+        # Section s of the frequency slots uses position stream s.
+        sec_id = jnp.concatenate([jnp.full((n,), i, jnp.int32) for i, n in enumerate(secs)])
+        pos_per_slot = positions.astype(jnp.float32)[:, sec_id, :]        # (B, n_slots, S)
+        angles = jnp.moveaxis(pos_per_slot, 1, 2)[:, None, :, :] * freqs  # (B,1,S,n_slots)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x_rot[..., 0::2].astype(jnp.float32), x_rot[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(B, H, S, d_rot).astype(x.dtype)
+    return jnp.concatenate([rotated, x_pass], axis=-1) if d_rot < D else rotated
+
+
+# --------------------------------------------------------------------------- #
+# Attention (GQA, softcap, sliding window, decode cache)
+# --------------------------------------------------------------------------- #
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    a = cfg.attention
+    dt = _dtype(cfg.param_dtype)
+    d = cfg.d_model
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(a.n_heads * a.head_dim)
+    return {
+        "wq": truncated_normal_init(kq, (d, a.n_heads, a.head_dim), s_in, dt),
+        "wk": truncated_normal_init(kk, (d, a.n_kv_heads, a.head_dim), s_in, dt),
+        "wv": truncated_normal_init(kv, (d, a.n_kv_heads, a.head_dim), s_in, dt),
+        "wo": truncated_normal_init(ko, (a.n_heads, a.head_dim, d), s_out, dt),
+    }
+
+
+def attention_param_specs() -> Dict[str, tuple]:
+    return {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+
+
+def _attn_mask(q_pos: jnp.ndarray, kv_len: int, *, causal: bool,
+               sliding_window: Optional[int], local_flag, kv_valid_len) -> jnp.ndarray:
+    """Boolean (q_len, kv_len) mask: True = attend.
+
+    ``q_pos`` are absolute query positions (may be traced).  ``local_flag``
+    may be a python bool or a traced scalar (alternating local/global
+    stacks scanned over layers); when traced, the window constraint is
+    blended with jnp.where.  ``kv_valid_len`` masks not-yet-written cache
+    slots during decode.
+    """
+    q = q_pos[:, None]
+    k_pos = jnp.arange(kv_len)[None, :]
+    mask = (k_pos <= q) if causal else jnp.ones((q.shape[0], kv_len), bool)
+    if sliding_window is not None:
+        in_window = k_pos > q - sliding_window
+        if isinstance(local_flag, bool):
+            if local_flag:
+                mask &= in_window
+        else:
+            mask &= jnp.where(local_flag, in_window, True)
+    if kv_valid_len is not None:
+        mask &= k_pos < kv_valid_len
+    return mask
+
+
+def _attention_core(qg, k, v, *, scale, softcap, causal, sliding_window,
+                    local_flag, q_offset, kv_valid, q_chunk: int, cdt):
+    """Online-softmax attention, chunked over queries.
+
+    qg: (B, G, R, S, hd); k, v: (B, G, Sk, hd).  Scores for one query chunk
+    vs the full KV are materialized at a time — peak activation
+    B*G*R*q_chunk*Sk instead of B*G*R*S*Sk (required for 32k+ sequences).
+    """
+    B, G, R, S, hd = qg.shape
+    Sk = k.shape[2]
+
+    def scores_for(qc, q_pos):
+        s = jnp.einsum("bgrsk,bgtk->bgrst", qc, k).astype(jnp.float32) * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        m = _attn_mask(q_pos, Sk, causal=causal, sliding_window=sliding_window,
+                       local_flag=local_flag, kv_valid_len=kv_valid)
+        return jnp.where(m[None, None, None], s, -1e30)
+
+    if S <= q_chunk or S % q_chunk:
+        # short or non-chunk-multiple sequences (e.g. whisper's 1500-frame
+        # encoder): single full-softmax pass
+        q_pos = jnp.arange(S) + q_offset
+        probs = jax.nn.softmax(scores_for(qg, q_pos), axis=-1).astype(cdt)
+        return jnp.einsum("bgrst,bgtk->bgrsk", probs, v)
+
+    nc = S // q_chunk
+    qs = jnp.moveaxis(qg.reshape(B, G, R, nc, q_chunk, hd), 3, 0)
+
+    def body(c, qc):
+        q_pos = jnp.arange(q_chunk) + (c * q_chunk + q_offset)
+        probs = jax.nn.softmax(scores_for(qc, q_pos), axis=-1).astype(cdt)
+        return c + 1, jnp.einsum("bgrst,bgtk->bgrsk", probs, v)
+
+    _, ctx = jax.lax.scan(body, 0, qs)
+    return jnp.moveaxis(ctx, 0, 3).reshape(B, G, R, S, hd)
+
+
+def multi_head_attention(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    positions: jnp.ndarray,
+    layer_is_local=False,
+    causal: bool = True,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    cache_index=None,
+    layer_index: Optional[int] = None,
+    q_chunk: int = 512,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """GQA attention over (B, S, D) input.
+
+    With ``cache`` (dict with 'k','v') this is a serving step: new K/V are
+    written at ``cache_index`` and attention runs over the whole (masked)
+    cache.  Returns (out, updated_cache).
+
+    ``layer_index`` selects the layer slice of a STACKED (L, B, G, S, hd)
+    cache: the update is a single token-sized dynamic_update_slice into the
+    full buffer, which XLA aliases in place under donation — the unrolled
+    serving path uses this to avoid double-buffering the whole cache (a
+    scanned cache costs a full extra copy).
+    """
+    a = cfg.attention
+    B, S, _ = x.shape
+    cdt = _dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+
+    q = jnp.einsum("bsd,dhk->bhsk", xc, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dgk->bgsk", xc, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dgk->bgsk", xc, p["wv"].astype(cdt))
+    # 'kv_seq' resolves to the model axis under context parallelism (head
+    # counts indivisible by TP, train/prefill) and to nothing under head TP.
+    q = shard(q, ("batch", "heads", "q_seq", "head_dim"))
+    k = shard(k, ("batch", "kv_heads", "kv_seq", "head_dim"))
+    v = shard(v, ("batch", "kv_heads", "kv_seq", "head_dim"))
+
+    if a.rope is not None:
+        q = apply_rope(q, positions, a.rope.theta, a.rope.partial_pct, a.rope.mrope_sections)
+        k = apply_rope(k, positions, a.rope.theta, a.rope.partial_pct, a.rope.mrope_sections)
+
+    q_offset = 0
+    kv_valid = None
+    if cache is not None:
+        idx = cache_index if cache_index is not None else 0
+        quant = "k_scale" in cache  # int8 KV cache (+ per-token f32 scales)
+
+        def _q(t):
+            """(B,G,S,hd) -> int8 codes + f32 per-(token,head) scales."""
+            amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+            scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+            codes = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                             -127, 127).astype(jnp.int8)
+            return codes, scale
+
+        if layer_index is None:
+            if quant:
+                kq, ks = _q(k)
+                vq, vs = _q(v)
+                ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, idx, axis=2)
+                cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, idx, axis=2)
+                cks = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, idx, axis=2)
+                cvs = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, idx, axis=2)
+                k = (ck.astype(cdt) * cks[..., None].astype(cdt))
+                v = (cv.astype(cdt) * cvs[..., None].astype(cdt))
+                cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+            else:
+                ck = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype), idx, axis=2)
+                cv = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype), idx, axis=2)
+                ck = shard(ck, ("batch", "kv_heads", "kv_seq", "head_dim"))
+                cv = shard(cv, ("batch", "kv_heads", "kv_seq", "head_dim"))
+                k, v = ck.astype(cdt), cv.astype(cdt)
+                cache = {"k": ck, "v": cv}
+        else:
+            zero = jnp.zeros((), jnp.int32)
+            li = jnp.asarray(layer_index, jnp.int32)
+            start = (li, zero, zero, jnp.asarray(idx, jnp.int32), zero)
+            if quant:
+                kq, ks = _q(k)
+                vq, vs = _q(v)
+                ck = jax.lax.dynamic_update_slice(cache["k"], kq[None], start)
+                cv = jax.lax.dynamic_update_slice(cache["v"], vq[None], start)
+                cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks[None], start[:4])
+                cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs[None], start[:4])
+                kl = jax.lax.dynamic_index_in_dim(ck, li, axis=0, keepdims=False)
+                vl = jax.lax.dynamic_index_in_dim(cv, li, axis=0, keepdims=False)
+                ksl = jax.lax.dynamic_index_in_dim(cks, li, axis=0, keepdims=False)
+                vsl = jax.lax.dynamic_index_in_dim(cvs, li, axis=0, keepdims=False)
+                k = kl.astype(cdt) * ksl[..., None].astype(cdt)
+                v = vl.astype(cdt) * vsl[..., None].astype(cdt)
+                cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+            else:
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype)[None], start)
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype)[None], start)
+                ck = shard(ck, ("layers", "batch", "kv_heads", "kv_seq", "head_dim"))
+                cv = shard(cv, ("layers", "batch", "kv_heads", "kv_seq", "head_dim"))
+                k = jax.lax.dynamic_index_in_dim(ck, li, axis=0, keepdims=False).astype(cdt)
+                v = jax.lax.dynamic_index_in_dim(cv, li, axis=0, keepdims=False).astype(cdt)
+                cache = {"k": ck, "v": cv}
+        q_offset = idx
+        kv_valid = idx + S
+
+    G = a.n_kv_heads
+    rep = a.n_heads // G
+    qg = q.reshape(B, G, rep, S, a.head_dim)
+
+    scale = a.query_scale if a.query_scale is not None else 1.0 / math.sqrt(a.head_dim)
+    ctx = _attention_core(
+        qg, k, v, scale=scale, softcap=a.softcap, causal=causal,
+        sliding_window=a.sliding_window, local_flag=layer_is_local,
+        q_offset=q_offset, kv_valid=kv_valid, q_chunk=q_chunk, cdt=cdt)
+    ctx = ctx.reshape(B, a.n_heads, S, a.head_dim)
+    ctx = shard(ctx, ("batch", "heads", "q_seq", "head_dim"))
+    out = jnp.einsum("bhsk,hkd->bsd", ctx, p["wo"].astype(cdt))
+    # gathers the sequence back when q_seq parallelism was active
+    out = shard(out, ("batch", "seq", "embed"))
+    return out.astype(x.dtype), cache
+
+
+# --------------------------------------------------------------------------- #
+# MLP
+# --------------------------------------------------------------------------- #
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    dt = _dtype(cfg.param_dtype)
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": truncated_normal_init(k1, (d, f), 1.0 / math.sqrt(d), dt),
+        "w_down": truncated_normal_init(k2, (f, d), 1.0 / math.sqrt(f), dt),
+    }
+    if cfg.act.endswith("gated"):
+        p["w_gate"] = truncated_normal_init(k3, (d, f), 1.0 / math.sqrt(d), dt)
+    return p
+
+
+def mlp_param_specs(cfg: ModelConfig) -> Dict[str, tuple]:
+    specs = {"w_up": ("embed", "mlp"), "w_down": ("mlp", "embed")}
+    if cfg.act.endswith("gated"):
+        specs["w_gate"] = ("embed", "mlp")
+    return specs
+
+
+def apply_mlp(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    cdt = _dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    up = jnp.einsum("bsd,df->bsf", xc, p["w_up"].astype(cdt))
+    up = shard(up, ("batch", "seq", "mlp"))
+    if cfg.act == "silu_gated":
+        gate = jnp.einsum("bsd,df->bsf", xc, p["w_gate"].astype(cdt))
+        h = jax.nn.silu(gate) * up
+    elif cfg.act == "gelu_gated":
+        gate = jnp.einsum("bsd,df->bsf", xc, p["w_gate"].astype(cdt))
+        h = jax.nn.gelu(gate, approximate=True) * up
+    elif cfg.act == "gelu":
+        h = jax.nn.gelu(up, approximate=True)
+    else:
+        raise ValueError(f"unknown act {cfg.act!r}")
+    h = shard(h, ("batch", "seq", "mlp"))
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(cdt))
+    return shard(out, ("batch", "seq", "embed")).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Embedding / unembedding
+# --------------------------------------------------------------------------- #
+
+def init_embedding(key, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    p = {"tok": truncated_normal_init(k1, (cfg.vocab, cfg.d_model), 0.02, dt)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = truncated_normal_init(
+            k2, (cfg.d_model, cfg.vocab), 1.0 / math.sqrt(cfg.d_model), dt)
+    return p
+
+
+def embedding_param_specs(cfg: ModelConfig) -> Dict[str, tuple]:
+    specs = {"tok": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ("embed", "vocab")
+    return specs
+
+
+def embed_tokens(p: Params, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = jnp.take(p["tok"], tokens, axis=0).astype(_dtype(cfg.compute_dtype))
+    if cfg.norm.startswith("rmsnorm") and cfg.tie_embeddings:
+        # gemma-style embedding scaling for tied embeddings
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return shard(x, ("batch", "seq", "embed"))
+
+
+def logits_from_hidden(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    cdt = _dtype(cfg.compute_dtype)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x.astype(cdt), p["tok"].astype(cdt))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x.astype(cdt), p["unembed"].astype(cdt))
+    logits = logits.astype(jnp.float32)
+    if cfg.logit_softcap is not None:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return shard(logits, ("batch", "seq", "vocab"))

@@ -1,0 +1,742 @@
+"""Model assembly: init / train forward / prefill / decode for all families.
+
+Families:
+    dense   — pre-norm transformer (GQA + MLP); supports gemma2-style
+              local/global alternation, softcaps, post-block norms.
+    moe     — dense attention + MoE FFN each layer.
+    ssm     — Mamba2 stack (attention-free).
+    hybrid  — Zamba2: Mamba2 backbone + ONE shared transformer block applied
+              every ``shared_attn_every`` layers (weights reused, per-use
+              KV cache).
+    encdec  — Whisper: encoder over stub audio-frame embeddings + causal
+              decoder with cross-attention.
+
+Layer stacks are scanned (``jax.lax.scan`` over stacked params) so the HLO
+stays O(1) in depth — essential for the 512-device dry-run compiles.  Remat
+is applied to the scan body according to ``cfg.remat``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logically_sharded as shard
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------- #
+# Remat policy
+# --------------------------------------------------------------------------- #
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # 'full'
+
+
+# --------------------------------------------------------------------------- #
+# Block init (one layer) — stacked with vmap over layer index
+# --------------------------------------------------------------------------- #
+
+def _init_block(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    if cfg.family in ("ssm", "hybrid"):
+        # hybrid (zamba2): the per-layer stack is Mamba2; the shared
+        # transformer block lives separately under params['shared'].
+        return {
+            "norm": L.init_norm(k1, cfg, cfg.d_model),
+            "mixer": SSM.init_mamba2(k2, cfg),
+        }
+    p: Params = {
+        "attn_norm": L.init_norm(k1, cfg, cfg.d_model),
+        "attn": L.init_attention(k2, cfg),
+        "mlp_norm": L.init_norm(k3, cfg, cfg.d_model),
+    }
+    if cfg.family == "moe":
+        p["moe"] = MOE.init_moe(k4, cfg)
+    else:
+        p["mlp"] = L.init_mlp(k4, cfg)
+    if cfg.post_block_norm:
+        p["post_attn_norm"] = L.init_norm(k5, cfg, cfg.d_model)
+        p["post_mlp_norm"] = L.init_norm(k6, cfg, cfg.d_model)
+    return p
+
+
+def _stack_init(key, cfg: ModelConfig, n: int) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_block(k, cfg))(keys)
+
+
+def _init_hybrid_shared(key, cfg: ModelConfig) -> Params:
+    """Zamba2 shared transformer block (attention + MLP, weights shared)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "attn_norm": L.init_norm(k1, cfg, cfg.d_model),
+        "attn": L.init_attention(k2, cfg),
+        "mlp_norm": L.init_norm(k3, cfg, cfg.d_model),
+        "mlp": L.init_mlp(k4, cfg),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    ke, kb, ks, kf, kx = jax.random.split(key, 5)
+    params: Params = {"embed": L.init_embedding(ke, cfg)}
+    if cfg.family == "encdec":
+        params["enc_blocks"] = _stack_init(kx, cfg.replace(family="dense"), cfg.n_enc_layers)
+        params["enc_norm"] = L.init_norm(jax.random.fold_in(kx, 1), cfg, cfg.d_model)
+        params["cross"] = jax.vmap(
+            lambda k: {
+                "norm": L.init_norm(jax.random.fold_in(k, 0), cfg, cfg.d_model),
+                "attn": L.init_attention(jax.random.fold_in(k, 1), cfg),
+            })(jax.random.split(kf, cfg.n_layers))
+        # encoder positions are implicit (stub frontend provides embeddings)
+    if cfg.family == "hybrid":
+        params["shared"] = _init_hybrid_shared(ks, cfg)
+    family_for_stack = cfg
+    params["blocks"] = _stack_init(kb, family_for_stack, cfg.n_layers)
+    params["final_norm"] = L.init_norm(jax.random.fold_in(ke, 7), cfg, cfg.d_model)
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# Single-block application
+# --------------------------------------------------------------------------- #
+
+def _apply_dense_block(bp: Params, x, cfg: ModelConfig, *, positions,
+                       layer_is_local: bool, cache=None, cache_index=None,
+                       layer_index=None):
+    h = L.apply_norm(bp["attn_norm"], x, cfg)
+    attn_out, new_cache = L.multi_head_attention(
+        bp["attn"], h, cfg, positions=positions, layer_is_local=layer_is_local,
+        cache=cache, cache_index=cache_index, layer_index=layer_index)
+    if cfg.post_block_norm:
+        attn_out = L.apply_norm(bp["post_attn_norm"], attn_out, cfg)
+    x = x + attn_out
+    h = L.apply_norm(bp["mlp_norm"], x, cfg)
+    aux = {}
+    if cfg.family == "moe":
+        ffn_out, aux = MOE.apply_moe(bp["moe"], h, cfg)
+    else:
+        ffn_out = L.apply_mlp(bp["mlp"], h, cfg)
+    if cfg.post_block_norm:
+        ffn_out = L.apply_norm(bp["post_mlp_norm"], ffn_out, cfg)
+    return x + ffn_out, new_cache, aux
+
+
+def _apply_ssm_block(bp: Params, x, cfg: ModelConfig, *, cache=None,
+                     use_kernel=False, layer_index=None):
+    h = L.apply_norm(bp["norm"], x, cfg)
+    mix, new_cache = SSM.apply_mamba2(bp["mixer"], h, cfg, cache=cache,
+                                      use_kernel=use_kernel,
+                                      layer_index=layer_index)
+    return x + mix, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# Caches
+# --------------------------------------------------------------------------- #
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Params:
+    """Serving cache pytree for the given family."""
+    a = cfg.attention
+
+    def kv(n_layers):
+        if cfg.kv_cache_quant:
+            # int8 codes + f32 per-(token, head) scales: ~2x smaller than
+            # bf16 and 4x smaller than f32 (+1/head_dim overhead)
+            return {
+                "k": jnp.zeros((n_layers, batch, a.n_kv_heads, max_seq, a.head_dim), jnp.int8),
+                "v": jnp.zeros((n_layers, batch, a.n_kv_heads, max_seq, a.head_dim), jnp.int8),
+                "k_scale": jnp.ones((n_layers, batch, a.n_kv_heads, max_seq), jnp.float32),
+                "v_scale": jnp.ones((n_layers, batch, a.n_kv_heads, max_seq), jnp.float32),
+            }
+        return {
+            "k": jnp.zeros((n_layers, batch, a.n_kv_heads, max_seq, a.head_dim), dtype),
+            "v": jnp.zeros((n_layers, batch, a.n_kv_heads, max_seq, a.head_dim), dtype),
+        }
+
+    if cfg.family in ("dense", "moe"):
+        return {"kv": kv(cfg.n_layers), "index": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        st = jax.vmap(lambda _: SSM.init_ssm_cache(cfg, batch))(jnp.arange(cfg.n_layers))
+        return {"ssm": st, "index": jnp.zeros((), jnp.int32)}
+    if cfg.family == "hybrid":
+        n_shared = cfg.n_layers // cfg.shared_attn_every
+        st = jax.vmap(lambda _: SSM.init_ssm_cache(cfg, batch))(jnp.arange(cfg.n_layers))
+        return {"ssm": st, "kv": kv(n_shared), "index": jnp.zeros((), jnp.int32)}
+    if cfg.family == "encdec":
+        # cross-attention K/V are computed ONCE at prefill and cached —
+        # recomputing them per decode step costs ~170x the decoder's own
+        # per-token FLOPs (measured via the dry-run useful_flops_ratio).
+        return {"kv": kv(cfg.n_layers),
+                "cross_k": jnp.zeros((cfg.n_layers, batch, a.n_kv_heads,
+                                      cfg.enc_seq, a.head_dim), dtype),
+                "cross_v": jnp.zeros((cfg.n_layers, batch, a.n_kv_heads,
+                                      cfg.enc_seq, a.head_dim), dtype),
+                "index": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.family)
+
+
+def cache_logical_specs(cfg: ModelConfig) -> Params:
+    """Logical sharding specs matching init_cache's structure."""
+    kv_spec = {"k": ("layers", "batch", "kv_heads", "kv_seq", "head_dim"),
+               "v": ("layers", "batch", "kv_heads", "kv_seq", "head_dim")}
+    if cfg.kv_cache_quant:
+        kv_spec = dict(kv_spec,
+                       k_scale=("layers", "batch", "kv_heads", "kv_seq"),
+                       v_scale=("layers", "batch", "kv_heads", "kv_seq"))
+    idx = ()
+    if cfg.family in ("dense", "moe"):
+        return {"kv": kv_spec, "index": idx}
+    ssm_spec = {"state": ("layers", "batch", None, None, "state"),
+                "conv": ("layers", "batch", None, "inner")}
+    if cfg.family == "ssm":
+        return {"ssm": ssm_spec, "index": idx}
+    if cfg.family == "hybrid":
+        return {"ssm": ssm_spec, "kv": kv_spec, "index": idx}
+    if cfg.family == "encdec":
+        cross = ("layers", "batch", "kv_heads", None, "head_dim")
+        return {"kv": kv_spec, "cross_k": cross, "cross_v": cross, "index": idx}
+    raise ValueError(cfg.family)
+
+
+# --------------------------------------------------------------------------- #
+# Forward passes
+# --------------------------------------------------------------------------- #
+
+def _default_positions(tokens_shape, offset=0):
+    B, S = tokens_shape
+    return jnp.arange(S, dtype=jnp.int32)[None, :] + offset
+
+
+# --------------------------------------------------------------------------- #
+# Logical sharding specs (congruent to init_params) — consumed by the
+# launcher/dry-run to build NamedShardings via distributed.sharding rules.
+# --------------------------------------------------------------------------- #
+
+def _norm_spec(cfg: ModelConfig) -> Dict[str, tuple]:
+    if cfg.norm in ("rmsnorm", "rmsnorm_one", "layernorm_nobias"):
+        return {"scale": ("embed",)}
+    if cfg.norm == "layernorm":
+        return {"scale": ("embed",), "bias": ("embed",)}
+    return {}  # nonparametric
+
+
+def _block_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    if cfg.family in ("ssm", "hybrid"):
+        return {
+            "norm": _norm_spec(cfg),
+            "mixer": {
+                "in_proj": ("embed", "inner"),
+                "conv_w": (None, "inner"),
+                "conv_b": ("inner",),
+                "a_log": (None,),
+                "dt_bias": (None,),
+                "d_skip": (None,),
+                "norm_scale": ("inner",),
+                "out_proj": ("inner", "embed"),
+            },
+        }
+    spec: Dict[str, Any] = {
+        "attn_norm": _norm_spec(cfg),
+        "attn": L.attention_param_specs(),
+        "mlp_norm": _norm_spec(cfg),
+    }
+    if cfg.family == "moe":
+        spec["moe"] = MOE.moe_param_specs(cfg)
+    else:
+        spec["mlp"] = L.mlp_param_specs(cfg)
+    if cfg.post_block_norm:
+        spec["post_attn_norm"] = _norm_spec(cfg)
+        spec["post_mlp_norm"] = _norm_spec(cfg)
+    return spec
+
+
+def _prefix_layers(tree):
+    return jax.tree.map(
+        lambda s: ("layers",) + tuple(s),
+        tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def param_logical_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    """Pytree of logical-axis tuples congruent to :func:`init_params`."""
+    specs: Dict[str, Any] = {"embed": L.embedding_param_specs(cfg)}
+    if cfg.family == "encdec":
+        dense_cfg = cfg.replace(family="dense")
+        specs["enc_blocks"] = _prefix_layers(_block_spec(dense_cfg))
+        specs["enc_norm"] = _norm_spec(cfg)
+        specs["cross"] = _prefix_layers(
+            {"norm": _norm_spec(cfg), "attn": L.attention_param_specs()})
+    if cfg.family == "hybrid":
+        specs["shared"] = {
+            "attn_norm": _norm_spec(cfg),
+            "attn": L.attention_param_specs(),
+            "mlp_norm": _norm_spec(cfg),
+            "mlp": L.mlp_param_specs(cfg),
+        }
+    specs["blocks"] = _prefix_layers(_block_spec(cfg))
+    specs["final_norm"] = _norm_spec(cfg)
+    return specs
+
+
+def sharding_dims(cfg: ModelConfig, global_batch: int,
+                  kv_seq: Optional[int] = None,
+                  q_seq: Optional[int] = None) -> Dict[str, int]:
+    """Dimension sizes for distributed.sharding.resolve_rules divisibility.
+
+    For the SSM 'inner' axis multiple tensors share the logical name with
+    different sizes (in_proj out, conv channels, d_inner); the gcd is used
+    so one rule fits all of them.
+    """
+    import math as _math
+    a = cfg.attention
+    dims = {
+        "batch": global_batch,
+        "heads": a.n_heads,
+        "kv_heads": a.n_kv_heads,
+        "head_dim": a.head_dim,
+        "vocab": cfg.vocab,
+        "embed": cfg.d_model,
+        "seq": kv_seq or 0,
+        "kv_seq": kv_seq or 0,
+        # query-sequence length: equals seq for train/prefill, 1 for decode
+        "q_seq": q_seq if q_seq is not None else 0,
+    }
+    if cfg.family == "moe":
+        m = cfg.moe
+        dims["experts"] = m.n_experts
+        dims["mlp"] = m.n_shared * (m.shared_dff or m.expert_dff) if m.n_shared else 0
+    else:
+        dims["mlp"] = cfg.d_ff
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        di = s.expand * cfg.d_model
+        nheads = di // s.head_dim
+        in_proj_out = 2 * di + 2 * s.d_state + nheads
+        conv_dim = di + 2 * s.d_state
+        dims["inner"] = _math.gcd(_math.gcd(in_proj_out, conv_dim), di)
+    return dims
+
+
+def _layer_is_local_static(cfg: ModelConfig, i: int) -> bool:
+    if cfg.attention.pattern == "alternating":
+        return i % 2 == 0  # local on even layers (gemma2)
+    return cfg.attention.pattern == "local"
+
+
+def _dense_stack(params, x, cfg: ModelConfig, *, positions, kv_cache=None,
+                 cache_index=None):
+    """Apply the dense/moe block stack.
+
+    Training (no cache): lax.scan over stacked params — O(1) HLO in depth.
+    Serving (cache present): UNROLLED python loop — a scanned KV cache is
+    double-buffered by XLA (the scan's ys stack cannot alias its xs),
+    costing a full extra cache copy (6+ GB for gemma2 decode_32k); the
+    unrolled form updates each layer's cache slice in place.
+    """
+    n = cfg.n_layers
+    if kv_cache is not None and x.shape[1] == 1:
+        # DECODE: unrolled with in-place stacked-cache updates (a scanned
+        # cache is double-buffered — a full extra KV copy per step).
+        aux_tot: Dict[str, jnp.ndarray] = {}
+        kv = kv_cache  # full stacked buffers threaded through the layers
+        for i in range(n):
+            bp = jax.tree.map(lambda a: a[i], params["blocks"])
+            x, kv, aux = _apply_dense_block(
+                bp, x, cfg, positions=positions,
+                layer_is_local=_layer_is_local_static(cfg, i),
+                cache=kv, cache_index=cache_index, layer_index=i)
+            for k, v in aux.items():
+                aux_tot[k] = aux_tot.get(k, 0.0) + v / n
+        return x, kv, aux_tot
+
+    if kv_cache is not None:
+        # PREFILL: scan over layers with per-layer cache slices (keeps the
+        # HLO O(1) in depth; the stacked-output double buffer is one cache
+        # copy, paid once per request).
+        def body_pre(carry, inp):
+            x, i = carry
+            bp, layer_cache = inp
+            # traced layer parity (alternating local/global) — the mask
+            # builder blends traced flags with jnp.where
+            is_local = ((i % 2) == 0 if cfg.attention.pattern == "alternating"
+                        else cfg.attention.pattern == "local")
+            x, new_cache, _ = _apply_dense_block(
+                bp, x, cfg, positions=positions, layer_is_local=is_local,
+                cache=layer_cache, cache_index=cache_index)
+            return (x, i + 1), new_cache
+
+        (x, _), new_kv = jax.lax.scan(
+            _maybe_remat(body_pre, cfg), (x, jnp.zeros((), jnp.int32)),
+            (params["blocks"], kv_cache))
+        return x, new_kv, {}
+
+    def body(carry, inp):
+        x, aux_acc = carry
+        bp, is_local = inp
+        x, _, aux = _apply_dense_block(
+            bp, x, cfg, positions=positions, layer_is_local=is_local,
+            cache=None, cache_index=None)
+        if aux:
+            aux_acc = {k: aux_acc[k] + v for k, v in aux.items()} if aux_acc else aux
+        return (x, aux_acc), None
+
+    if cfg.attention.pattern == "alternating":
+        is_local = (jnp.arange(n) % 2) == 0
+    elif cfg.attention.pattern == "local":
+        is_local = jnp.ones((n,), bool)
+    else:
+        is_local = jnp.zeros((n,), bool)
+
+    aux0 = ({"moe_aux_loss": jnp.zeros((), jnp.float32),
+             "moe_dropped_frac": jnp.zeros((), jnp.float32)}
+            if cfg.family == "moe" else None)
+    body_r = _maybe_remat(body, cfg)
+    (x, aux), _ = jax.lax.scan(body_r, (x, aux0), (params["blocks"], is_local))
+    if aux is not None:
+        aux = {k: v / n for k, v in aux.items()}
+    return x, None, (aux or {})
+
+
+def _ssm_stack(params, x, cfg: ModelConfig, *, ssm_cache=None, use_kernel=False):
+    # SSM caches are small per chip (state + conv carry, no seq dimension),
+    # so the scan double-buffer is cheap — and an unrolled 24-81 layer body
+    # at 512-way SPMD blows up partitioner time (measured: >8 min for
+    # zamba2 decode).  Serving therefore scans, unlike attention KV stacks.
+    if ssm_cache is not None:
+        def body_pre(x, inp):
+            bp, layer_cache = inp
+            x, new_cache = _apply_ssm_block(bp, x, cfg, cache=layer_cache,
+                                            use_kernel=use_kernel)
+            return x, new_cache
+
+        x, new_cache = jax.lax.scan(_maybe_remat(body_pre, cfg), x,
+                                    (params["blocks"], ssm_cache))
+        return x, new_cache
+
+    def body(x, bp):
+        x, _ = _apply_ssm_block(bp, x, cfg, cache=None, use_kernel=use_kernel)
+        return x, None
+
+    body_r = _maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body_r, x, params["blocks"])
+    return x, None
+
+
+def _hybrid_stack(params, x, cfg: ModelConfig, *, positions, ssm_cache=None,
+                  kv_cache=None, cache_index=None, use_kernel=False):
+    """Zamba2: Mamba2 layers; every `shared_attn_every` layers apply the
+    shared transformer block (same weights each use, distinct KV cache)."""
+    every = cfg.shared_attn_every
+    n_shared = cfg.n_layers // every
+
+    if ssm_cache is not None:
+        # serving: scanned ssm groups + per-group shared blocks (see
+        # _ssm_stack for why hybrid serving scans rather than unrolls)
+        def body_pre(x, inp):
+            bp, layer_cache = inp
+            x, new_cache = _apply_ssm_block(bp, x, cfg, cache=layer_cache,
+                                            use_kernel=use_kernel)
+            return x, new_cache
+
+        body_pre_r = _maybe_remat(body_pre, cfg)
+        new_ssm_parts, new_kv_parts = [], []
+        for g in range(n_shared):
+            sl = slice(g * every, (g + 1) * every)
+            blocks_g = jax.tree.map(lambda a: a[sl], params["blocks"])
+            cache_g = jax.tree.map(lambda a: a[sl], ssm_cache)
+            x, ssm_out = jax.lax.scan(body_pre_r, x, (blocks_g, cache_g))
+            new_ssm_parts.append(ssm_out)
+            kv_g = (jax.tree.map(lambda a: a[g], kv_cache)
+                    if kv_cache is not None else None)
+            x, kv_out, _ = _shared_block(params["shared"], x, cfg,
+                                         positions=positions, cache=kv_g,
+                                         cache_index=cache_index)
+            new_kv_parts.append(kv_out)
+        rem = cfg.n_layers - n_shared * every
+        if rem:
+            blocks_g = jax.tree.map(lambda a: a[-rem:], params["blocks"])
+            cache_g = jax.tree.map(lambda a: a[-rem:], ssm_cache)
+            x, ssm_out = jax.lax.scan(body_pre_r, x, (blocks_g, cache_g))
+            new_ssm_parts.append(ssm_out)
+        new_ssm = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_ssm_parts)
+        new_kv = (jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_kv_parts)
+                  if kv_cache is not None else None)
+        return x, new_ssm, new_kv
+
+    def body(x, bp):
+        x, _ = _apply_ssm_block(bp, x, cfg, cache=None, use_kernel=use_kernel)
+        return x, None
+
+    body_r = _maybe_remat(body, cfg)
+    for g in range(n_shared):
+        sl = slice(g * every, (g + 1) * every)
+        blocks_g = jax.tree.map(lambda a: a[sl], params["blocks"])
+        x, _ = jax.lax.scan(body_r, x, blocks_g)
+        x, _, _ = _shared_block(params["shared"], x, cfg,
+                                positions=positions)
+    rem = cfg.n_layers - n_shared * every
+    if rem:
+        blocks_g = jax.tree.map(lambda a: a[-rem:], params["blocks"])
+        x, _ = jax.lax.scan(body_r, x, blocks_g)
+    return x, None, None
+
+
+def _shared_block(sp: Params, x, cfg: ModelConfig, *, positions, cache=None,
+                  cache_index=None, layer_index=None):
+    h = L.apply_norm(sp["attn_norm"], x, cfg)
+    attn_out, new_cache = L.multi_head_attention(
+        sp["attn"], h, cfg, positions=positions, cache=cache,
+        cache_index=cache_index, layer_index=layer_index)
+    x = x + attn_out
+    h = L.apply_norm(sp["mlp_norm"], x, cfg)
+    x = x + L.apply_mlp(sp["mlp"], h, cfg)
+    return x, new_cache, {}
+
+
+def _encoder(params, frames, cfg: ModelConfig):
+    """Whisper encoder over stub frame embeddings (B, S_enc, D)."""
+    x = frames.astype(L._dtype(cfg.compute_dtype))
+    pos = _default_positions((frames.shape[0], frames.shape[1]))
+    enc_cfg = cfg.replace(family="dense")
+
+    def body(x, bp):
+        h = L.apply_norm(bp["attn_norm"], x, enc_cfg)
+        a, _ = L.multi_head_attention(bp["attn"], h, enc_cfg, positions=pos,
+                                      layer_is_local=False, causal=False)
+        x = x + a
+        h = L.apply_norm(bp["mlp_norm"], x, enc_cfg)
+        return x + L.apply_mlp(bp["mlp"], h, enc_cfg), None
+
+    body_r = _maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body_r, x, params["enc_blocks"])
+    return L.apply_norm(params["enc_norm"], x, cfg)
+
+
+def _decoder_stack(params, x, cfg: ModelConfig, *, positions, enc_out=None,
+                   kv_cache=None, cross_kv=None, cache_index=None):
+    """Whisper decoder: self-attn + cross-attn + MLP per layer.
+
+    Cross-attention K/V come either from ``enc_out`` (training/prefill —
+    computed per layer, and emitted so prefill can cache them) or from
+    ``cross_kv`` = (cross_k, cross_v) stacked (L, B, G, S_enc, hd)
+    (decode — cached at prefill; recomputing them per step costs ~170x the
+    decoder's per-token FLOPs).
+    """
+
+    def one(bp, cp, x, layer_kv, layer_index, layer_cross):
+        h = L.apply_norm(bp["attn_norm"], x, cfg)
+        a, new_kv = L.multi_head_attention(bp["attn"], h, cfg, positions=positions,
+                                           cache=layer_kv, cache_index=cache_index,
+                                           layer_index=layer_index)
+        x = x + a
+        h = L.apply_norm(cp["norm"], x, cfg)
+        if layer_cross is not None:
+            ck, cv = layer_cross
+        else:
+            ck, cv = _cross_kv(cp["attn"], enc_out, cfg)
+        ca = _cross_attention(cp["attn"], h, ck, cv, cfg)
+        x = x + ca
+        h = L.apply_norm(bp["mlp_norm"], x, cfg)
+        return x + L.apply_mlp(bp["mlp"], h, cfg), new_kv, (ck, cv)
+
+    if kv_cache is not None and x.shape[1] == 1:
+        # decode: unrolled, in-place stacked self-attn cache; cached cross-K/V
+        kv = kv_cache
+        cross_k, cross_v = cross_kv
+        for i in range(cfg.n_layers):
+            bp = jax.tree.map(lambda a: a[i], params["blocks"])
+            cp = jax.tree.map(lambda a: a[i], params["cross"])
+            li = jnp.asarray(i, jnp.int32)
+            lc = (jax.lax.dynamic_index_in_dim(cross_k, li, 0, keepdims=False),
+                  jax.lax.dynamic_index_in_dim(cross_v, li, 0, keepdims=False))
+            x, kv, _ = one(bp, cp, x, kv, i, lc)
+        return x, kv, (cross_k, cross_v)
+
+    if kv_cache is not None:
+        # prefill: scanned; emit per-layer cross K/V for the decode cache
+        def body_pre(x, inp):
+            bp, cp, layer_kv = inp
+            x, new_kv, lc = one(bp, cp, x, layer_kv, None, None)
+            return x, (new_kv, lc)
+
+        x, (new_kv, lcs) = jax.lax.scan(_maybe_remat(body_pre, cfg), x,
+                                        (params["blocks"], params["cross"],
+                                         kv_cache))
+        return x, new_kv, lcs
+
+    def body(x, inp):
+        bp, cp = inp
+        x, _, _ = one(bp, cp, x, None, None, None)
+        return x, None
+
+    body_r = _maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body_r, x, (params["blocks"], params["cross"]))
+    return x, None, None
+
+
+def _cross_kv(p: Params, enc_out, cfg: ModelConfig):
+    """Project encoder outputs to cross-attention K/V (done once per request)."""
+    cdt = L._dtype(cfg.compute_dtype)
+    k = jnp.einsum("btd,dgk->bgtk", enc_out.astype(cdt), p["wk"].astype(cdt))
+    v = jnp.einsum("btd,dgk->bgtk", enc_out.astype(cdt), p["wv"].astype(cdt))
+    return k, v
+
+
+def _cross_attention(p: Params, x, k, v, cfg: ModelConfig):
+    a = cfg.attention
+    cdt = L._dtype(cfg.compute_dtype)
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bhsk", x.astype(cdt), p["wq"].astype(cdt))
+    G = a.n_kv_heads
+    qg = q.reshape(B, G, a.n_heads // G, S, a.head_dim)
+    scores = jnp.einsum("bgrsk,bgtk->bgrst", qg, k.astype(cdt)).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(a.head_dim, jnp.float32))
+    probs = jax.nn.softmax(scores, axis=-1).astype(cdt)
+    ctx = jnp.einsum("bgrst,bgtk->bgrsk", probs, v.astype(cdt)) \
+        .reshape(B, a.n_heads, S, a.head_dim)
+    out = jnp.einsum("bhsk,hkd->bsd", ctx, p["wo"].astype(cdt))
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Public API
+# --------------------------------------------------------------------------- #
+
+def forward(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            *, cache: Optional[Params] = None,
+            last_only: bool = False) -> Tuple[jnp.ndarray, Optional[Params], Dict]:
+    """Compute logits.
+
+    batch keys: 'tokens' (B,S) int32; optional 'positions' ((B,S) or (B,3,S));
+    'frames' (B,S_enc,D) for encdec prefill.  With ``cache`` the call is a
+    serving step writing at cache['index'].  ``last_only`` computes logits
+    for the final position only (prefill — avoids a (B,S,V) tensor).
+    """
+    tokens = batch["tokens"]
+    positions = batch.get("positions")
+    cache_index = cache["index"] if cache is not None else None
+    if positions is None:
+        offset = cache_index if cache is not None else 0
+        positions = _default_positions(tokens.shape, offset)
+    a = cfg.attention
+    if (a.rope is not None and a.rope.mrope_sections is not None
+            and positions.ndim == 2):
+        # M-RoPE on text-only input: three identical position streams.
+        positions = jnp.broadcast_to(positions[:, None, :],
+                                     (positions.shape[0], 3, positions.shape[1]))
+
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    aux: Dict[str, jnp.ndarray] = {}
+    new_cache = None
+
+    if cfg.family in ("dense", "moe"):
+        kv = cache["kv"] if cache is not None else None
+        x, new_kv, aux = _dense_stack(params, x, cfg, positions=positions,
+                                      kv_cache=kv, cache_index=cache_index)
+        if cache is not None:
+            new_cache = {"kv": new_kv, "index": cache_index + tokens.shape[1]}
+    elif cfg.family == "ssm":
+        ssm_c = cache["ssm"] if cache is not None else None
+        x, new_ssm = _ssm_stack(params, x, cfg, ssm_cache=ssm_c,
+                                use_kernel=cfg.use_flash_kernel)
+        if cache is not None:
+            new_cache = {"ssm": new_ssm, "index": cache_index + tokens.shape[1]}
+    elif cfg.family == "hybrid":
+        ssm_c = cache["ssm"] if cache is not None else None
+        kv = cache["kv"] if cache is not None else None
+        x, new_ssm, new_kv = _hybrid_stack(params, x, cfg, positions=positions,
+                                           ssm_cache=ssm_c, kv_cache=kv,
+                                           cache_index=cache_index)
+        if cache is not None:
+            new_cache = {"ssm": new_ssm, "kv": new_kv,
+                         "index": cache_index + tokens.shape[1]}
+    elif cfg.family == "encdec":
+        kv = cache["kv"] if cache is not None else None
+        if cache is not None and "frames" not in batch:
+            # decode: cross K/V were cached at prefill
+            cross_kv = (cache["cross_k"], cache["cross_v"])
+            x, new_kv, _ = _decoder_stack(params, x, cfg, positions=positions,
+                                          kv_cache=kv, cross_kv=cross_kv,
+                                          cache_index=cache_index)
+            new_cache = {"kv": new_kv, "cross_k": cache["cross_k"],
+                         "cross_v": cache["cross_v"],
+                         "index": cache_index + tokens.shape[1]}
+        else:
+            enc_out = _encoder(params, batch["frames"], cfg)
+            x, new_kv, lcs = _decoder_stack(params, x, cfg, positions=positions,
+                                            enc_out=enc_out, kv_cache=kv,
+                                            cache_index=cache_index)
+            if cache is not None:
+                ck, cv = lcs
+                new_cache = {"kv": new_kv,
+                             "cross_k": ck.astype(cache["cross_k"].dtype),
+                             "cross_v": cv.astype(cache["cross_v"].dtype),
+                             "index": cache_index + tokens.shape[1]}
+    else:
+        raise ValueError(cfg.family)
+
+    if last_only:
+        x = x[:, -1:]
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.logits_from_hidden(params["embed"], x, cfg)
+    return logits, new_cache, aux
+
+
+def loss_fn(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token cross-entropy (+ MoE aux loss).  batch['labels'] (B,S),
+    -100 entries are ignored."""
+    logits, _, aux = forward(params, batch, cfg)
+    labels = batch["labels"]
+    valid = labels >= 0
+    labels_safe = jnp.maximum(labels, 0)
+    # logsumexp formulation: avoids a second (B, S, V) log-softmax buffer.
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    denom = jnp.maximum(valid.sum(), 1)
+    ce = jnp.where(valid, nll, 0.0).sum() / denom
+    total = ce + aux.get("moe_aux_loss", 0.0)
+    metrics = {"loss": total, "ce": ce, **aux}
+    return total, metrics
+
+
+def prefill(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,
+            max_seq: int, *, frames: Optional[jnp.ndarray] = None,
+            positions: Optional[jnp.ndarray] = None,
+            cache_dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, Params]:
+    """Run the prompt through the model, returning (last_logits, cache)."""
+    cache = init_cache(cfg, tokens.shape[0], max_seq, cache_dtype)
+    batch = {"tokens": tokens}
+    if frames is not None:
+        batch["frames"] = frames
+    if positions is not None:
+        batch["positions"] = positions
+    logits, cache, _ = forward(params, batch, cfg, cache=cache, last_only=True)
+    return logits, cache
+
+
+def decode_step(params: Params, cache: Params, tokens: jnp.ndarray,
+                cfg: ModelConfig, *, positions: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, Params]:
+    """One serving step: tokens (B, 1) -> (logits (B,1,V), new cache)."""
+    batch = {"tokens": tokens}
+    if positions is not None:
+        batch["positions"] = positions
+    logits, new_cache, _ = forward(params, batch, cfg, cache=cache)
+    return logits, new_cache

@@ -1,0 +1,158 @@
+"""Mixture-of-Experts layer: GShard-style grouped capacity dispatch.
+
+Token-choice top-k routing with per-group capacity.  Tokens are processed
+in groups of ``group_size``; each expert accepts at most
+
+    C = ceil(group_size * top_k * capacity_factor / n_experts)
+
+tokens per group, overflow tokens fall through the residual connection
+(standard dropping MoE).  Dispatch/combine are expressed as einsums over a
+(G, S_g, E, C) one-hot tensor, which the SPMD partitioner shards cleanly:
+groups follow the batch (data) axis, experts follow the model axis.
+
+This is the checkpoint-friendly formulation: expert weights are stacked
+(E, d, f) tensors — exactly what the sharded checkpoint store and the
+ZeRO-1 optimizer expect.
+
+Shared experts (deepseek-moe): ``n_shared`` experts are applied to every
+token unconditionally and added to the routed output.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logically_sharded as shard
+from repro.models.layers import Params, _dtype, truncated_normal_init
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    m = cfg.moe
+    dt = _dtype(cfg.param_dtype)
+    d, f = cfg.d_model, m.expert_dff
+    ks = jax.random.split(key, 6)
+    gated = cfg.act.endswith("gated")
+    p: Params = {
+        "router": truncated_normal_init(ks[0], (d, m.n_experts), 1.0 / math.sqrt(d), jnp.float32),
+        "w_up": truncated_normal_init(ks[1], (m.n_experts, d, f), 1.0 / math.sqrt(d), dt),
+        "w_down": truncated_normal_init(ks[2], (m.n_experts, f, d), 1.0 / math.sqrt(f), dt),
+    }
+    if gated:
+        p["w_gate"] = truncated_normal_init(ks[3], (m.n_experts, d, f), 1.0 / math.sqrt(d), dt)
+    if m.n_shared > 0:
+        sf = (m.shared_dff or m.expert_dff) * m.n_shared
+        p["shared_up"] = truncated_normal_init(ks[4], (d, sf), 1.0 / math.sqrt(d), dt)
+        p["shared_down"] = truncated_normal_init(ks[5], (sf, d), 1.0 / math.sqrt(sf), dt)
+        if gated:
+            p["shared_gate"] = truncated_normal_init(
+                jax.random.fold_in(ks[4], 1), (d, sf), 1.0 / math.sqrt(d), dt)
+    return p
+
+
+def moe_param_specs(cfg: ModelConfig) -> Dict[str, tuple]:
+    specs = {
+        "router": ("embed", None),
+        "w_up": ("experts", "embed", None),
+        "w_down": ("experts", None, "embed"),
+    }
+    if cfg.act.endswith("gated"):
+        specs["w_gate"] = ("experts", "embed", None)
+    if cfg.moe.n_shared > 0:
+        specs["shared_up"] = ("embed", "mlp")
+        specs["shared_down"] = ("mlp", "embed")
+        if cfg.act.endswith("gated"):
+            specs["shared_gate"] = ("embed", "mlp")
+    return specs
+
+
+def _capacity(cfg: ModelConfig, group: int) -> int:
+    m = cfg.moe
+    c = int(math.ceil(group * m.top_k * m.capacity_factor / m.n_experts))
+    return max(c, m.top_k)
+
+
+def apply_moe(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+              router_key: Optional[jax.Array] = None
+              ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Apply the MoE block to (B, S, D).  Returns (out, aux) where aux holds
+    the load-balancing loss and router statistics."""
+    m = cfg.moe
+    B, S, D = x.shape
+    cdt = _dtype(cfg.compute_dtype)
+    n_tok = B * S
+    group = min(m.group_size, n_tok)
+    assert n_tok % group == 0, f"tokens {n_tok} not divisible by group {group}"
+    G = n_tok // group
+    C = _capacity(cfg, group)
+    E, K = m.n_experts, m.top_k
+
+    xt = x.reshape(G, group, D)
+
+    # --- routing (fp32) ----------------------------------------------------
+    logits = jnp.einsum("gsd,de->gse", xt.astype(jnp.float32), p["router"])
+    if m.router_noise > 0.0 and router_key is not None:
+        logits = logits + m.router_noise * jax.random.normal(router_key, logits.shape)
+    probs = jax.nn.softmax(logits, axis=-1)                         # (G,S,E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)                 # (G,S,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- load-balancing aux loss (Switch-style) -----------------------------
+    me = probs.mean(axis=(0, 1))                                    # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_ids.reshape(-1)].add(
+        1.0 / (G * group * K))
+    aux_loss = E * jnp.sum(me * ce) * m.aux_loss_weight
+
+    # --- capacity assignment -------------------------------------------------
+    # Priority: (k slot, then sequence order).  position_in_expert counts,
+    # per group and expert, how many earlier (k, s) claims the expert got.
+    onehot = jax.nn.one_hot(expert_ids, E, dtype=jnp.float32)       # (G,S,K,E)
+    onehot_flat = onehot.transpose(0, 2, 1, 3).reshape(G, K * group, E)
+    pos = jnp.cumsum(onehot_flat, axis=1) - onehot_flat             # claims before me
+    pos = pos.reshape(G, K, group, E).transpose(0, 2, 1, 3)         # (G,S,K,E)
+    within_cap = (pos < C).astype(jnp.float32) * onehot             # (G,S,K,E)
+    pos_clipped = jnp.minimum(pos, C - 1).astype(jnp.int32)
+
+    # dispatch (bool-ish) and combine (gated) tensors, (G,S,E,C)
+    pos_onehot = jax.nn.one_hot(pos_clipped, C, dtype=jnp.float32)  # (G,S,K,E,C)
+    disp = jnp.einsum("gske,gskec->gsec", within_cap, pos_onehot)
+    comb = jnp.einsum("gsk,gske,gskec->gsec",
+                      gate_vals.astype(jnp.float32), within_cap, pos_onehot)
+    disp = shard(disp.astype(cdt), ("batch", None, "experts", None))
+    comb = shard(comb.astype(cdt), ("batch", None, "experts", None))
+
+    # --- expert computation ---------------------------------------------------
+    exp_in = jnp.einsum("gsec,gsd->gecd", disp, xt.astype(cdt))      # (G,E,C,D)
+    exp_in = shard(exp_in, ("batch", "experts", None, "embed"))
+    up = jnp.einsum("gecd,edf->gecf", exp_in, p["w_up"].astype(cdt))
+    if cfg.act.endswith("gated"):
+        gate = jnp.einsum("gecd,edf->gecf", exp_in, p["w_gate"].astype(cdt))
+        act = jax.nn.silu(gate) if cfg.act == "silu_gated" else jax.nn.gelu(gate, approximate=True)
+        h = act * up
+    else:
+        h = jax.nn.gelu(up, approximate=True)
+    h = shard(h, ("batch", "experts", None, None))
+    exp_out = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(cdt))
+    out = jnp.einsum("gsec,gecd->gsd", comb, exp_out)                # (G,S,D)
+
+    # --- shared experts --------------------------------------------------------
+    if m.n_shared > 0:
+        sup = jnp.einsum("gsd,df->gsf", xt.astype(cdt), p["shared_up"].astype(cdt))
+        if cfg.act.endswith("gated"):
+            sgate = jnp.einsum("gsd,df->gsf", xt.astype(cdt), p["shared_gate"].astype(cdt))
+            sact = jax.nn.silu(sgate) if cfg.act == "silu_gated" else jax.nn.gelu(sgate, approximate=True)
+            sh = sact * sup
+        else:
+            sh = jax.nn.gelu(sup, approximate=True)
+        out = out + jnp.einsum("gsf,fd->gsd", sh, p["shared_down"].astype(cdt))
+
+    out = out.reshape(B, S, D).astype(x.dtype)
+    out = shard(out, ("batch", "seq", "embed"))
+
+    # fraction of token-slots dropped by capacity limits
+    dropped = 1.0 - within_cap.sum() / (G * group * K)
+    aux = {"moe_aux_loss": aux_loss, "moe_dropped_frac": dropped}
+    return out, aux

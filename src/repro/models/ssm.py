@@ -1,0 +1,307 @@
+"""Mamba2 block via SSD (state-space duality), pure JAX.
+
+The SSD computation (Dao & Gu 2024, arXiv:2405.21060) for scalar-A heads:
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t x_t
+    y_t = C_t^T h_t + D x_t
+
+computed chunkwise: within a chunk of length Q the outputs decompose into
+an intra-chunk (quadratic attention-like) term and an inter-chunk term
+driven by the carried state; chunk states are combined with an associative
+scan over chunks.  This file is the *reference* implementation used by the
+models; ``repro/kernels/ssd_scan.py`` provides the Pallas TPU kernel for
+the same computation (validated against :func:`ssd_chunked` in tests).
+
+Decode uses the O(1) recurrent form with a persistent (state, conv) cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logically_sharded as shard
+from repro.models.layers import Params, _dtype, truncated_normal_init
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(d_inner, n_heads, head_dim) of the SSM block."""
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    assert d_inner % s.head_dim == 0
+    return d_inner, d_inner // s.head_dim, s.head_dim
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Params:
+    s = cfg.ssm
+    dt = _dtype(cfg.param_dtype)
+    d = cfg.d_model
+    d_inner, nheads, hd = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * s.d_state  # conv over x, B, C channels
+    ks = jax.random.split(key, 6)
+    # dt bias initialised so softplus(dt_bias) spans [dt_min, dt_max]
+    u = jax.random.uniform(ks[0], (nheads,), jnp.float32)
+    dt_init = jnp.exp(u * (math.log(s.dt_max) - math.log(s.dt_min)) + math.log(s.dt_min))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        # fused input projection: [z (gate), x, B, C, dt]
+        "in_proj": truncated_normal_init(
+            ks[1], (d, 2 * d_inner + 2 * s.d_state + nheads), 1.0 / math.sqrt(d), dt),
+        "conv_w": truncated_normal_init(ks[2], (s.conv_width, conv_dim), 1.0 / math.sqrt(s.conv_width), dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "a_log": jnp.log(jnp.arange(1, nheads + 1, dtype=jnp.float32)),  # A = -exp(a_log)
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dt),  # gated RMSNorm before out proj
+        "out_proj": truncated_normal_init(ks[3], (d_inner, d), 1.0 / math.sqrt(d_inner), dt),
+    }
+
+
+def mamba2_param_specs() -> Dict[str, tuple]:
+    return {
+        "in_proj": ("embed", "inner"),
+        "conv_w": (None, "inner"),
+        "conv_b": ("inner",),
+        "a_log": (None,),
+        "dt_bias": (None,),
+        "d_skip": (None,),
+        "norm_scale": ("inner",),
+        "out_proj": ("inner", "embed"),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    s = cfg.ssm
+    d_inner, nheads, _ = ssm_dims(cfg)
+    idx = [d_inner, 2 * d_inner, 2 * d_inner + s.d_state, 2 * d_inner + 2 * s.d_state]
+    z = proj[..., : idx[0]]
+    x = proj[..., idx[0]: idx[1]]
+    B = proj[..., idx[1]: idx[2]]
+    C = proj[..., idx[2]: idx[3]]
+    dt = proj[..., idx[3]:]
+    return z, x, B, C, dt
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                B: jnp.ndarray, C: jnp.ndarray, chunk: int,
+                initial_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD over a full sequence.
+
+    Args:
+        x: (b, s, h, p)   per-head inputs
+        dt: (b, s, h)     positive step sizes
+        A: (h,)           negative per-head decay rates
+        B: (b, s, n)      input projections (shared across heads)
+        C: (b, s, n)      output projections
+        chunk: chunk length Q (s % Q == 0)
+        initial_state: optional (b, h, p, n)
+
+    Returns:
+        y: (b, s, h, p), final_state: (b, h, p, n)
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    s_orig = s
+    if s % chunk:
+        # Zero-pad to a chunk multiple.  dt=0 on pad positions makes them
+        # exact no-ops: decay factor exp(0)=1 and zero input contribution.
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    # reshape into chunks
+    xc = xf.reshape(b, nc, chunk, h, p)
+    dtc = dtf.reshape(b, nc, chunk, h)
+    Bc = Bf.reshape(b, nc, chunk, n)
+    Cc = Cf.reshape(b, nc, chunk, n)
+
+    dA = dtc * A[None, None, None, :]                  # (b,nc,Q,h), negative
+    cum = jnp.cumsum(dA, axis=2)                       # within-chunk cumulative
+
+    # ---- intra-chunk (the 'attention-like' quadratic term) -----------------
+    # L[i,j] = exp(cum_i - cum_j) for i >= j  (per head)
+    li = cum[:, :, :, None, :]                         # (b,nc,Q,1,h)
+    lj = cum[:, :, None, :, :]                         # (b,nc,1,Q,h)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(li - lj), 0.0)
+    # scores[i,j] = C_i . B_j
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)
+    # Explicit pairwise contraction order: build M = scores*L*dt (b,nc,Q,Q,h)
+    # then contract j.  A single 4-operand einsum lets XLA materialize the
+    # joint (b,nc,Q,Q,h,p) intermediate — 100+ GiB at 32k context.
+    M = scores[..., None] * L * dtc[:, :, None, :, :]  # (b,nc,Q,Q,h)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xc)
+
+    # ---- chunk states -------------------------------------------------------
+    # state contribution of chunk c: sum_j exp(cum_Q - cum_j) dt_j B_j x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)    # (b,nc,Q,h)
+    weighted_x = (decay_to_end * dtc)[..., None] * xc  # (b,nc,Q,h,p)
+    states = jnp.einsum("bcjhp,bcjn->bchpn", weighted_x, Bc)
+
+    # ---- inter-chunk scan ---------------------------------------------------
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))         # (b,nc,h)
+
+    def scan_fn(carry, inp):
+        st_in = carry                                  # (b,h,p,n)
+        decay, st_chunk = inp                          # (b,h), (b,h,p,n)
+        st_out = st_in * decay[:, :, None, None] + st_chunk
+        return st_out, st_in                           # emit state ENTERING chunk
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+    final_state, entering = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    entering = jnp.moveaxis(entering, 0, 1)            # (b,nc,h,p,n)
+
+    # ---- inter-chunk output term -------------------------------------------
+    decay_from_start = jnp.exp(cum)                    # exp(cum_i - cum_{-1}=0)
+    y_inter = jnp.einsum("bcin,bchpn->bcihp", Cc, entering)
+    y_inter = y_inter * decay_from_start[..., None]
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)[:, :s_orig]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_recurrent_step(x, dt, A, B, C, state):
+    """Single-token recurrent update (decode).
+
+    x: (b, h, p), dt: (b, h), B/C: (b, n), state: (b, h, p, n)
+    Returns (y (b,h,p), new_state).
+    """
+    dA = jnp.exp(dt.astype(jnp.float32) * A)[..., None, None]       # (b,h,1,1)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt.astype(jnp.float32),
+                     B.astype(jnp.float32), x.astype(jnp.float32))
+    new_state = state * dA + dBx
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C.astype(jnp.float32))
+    return y.astype(x.dtype), new_state
+
+
+def _causal_conv(seq: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 carry: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv1d over (B, S, Cdim) with width-W filter (W, Cdim).
+
+    ``carry`` is the last W-1 inputs from the previous segment (decode).
+    Returns (out, new_carry).
+    """
+    W = w.shape[0]
+    pad = (jnp.zeros((seq.shape[0], W - 1, seq.shape[2]), seq.dtype)
+           if carry is None else carry.astype(seq.dtype))
+    full = jnp.concatenate([pad, seq], axis=1)          # (B, S+W-1, C)
+    out = jnp.zeros_like(seq, dtype=jnp.float32)
+    for i in range(W):
+        out = out + full[:, i: i + seq.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    new_carry = full[:, -(W - 1):, :] if W > 1 else jnp.zeros((seq.shape[0], 0, seq.shape[2]), seq.dtype)
+    return jax.nn.silu(out).astype(seq.dtype), new_carry
+
+
+def apply_mamba2(
+    p: Params,
+    xin: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    use_kernel: bool = False,
+    layer_index: Optional[int] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Mamba2 mixer over (B, S, D).
+
+    cache (decode): {'state': (B,h,p,n), 'conv': (B, W-1, conv_dim)}.
+    When ``cache`` is provided and S == 1 the recurrent path is used.
+    ``layer_index`` addresses a STACKED (L, ...) cache: the layer's slice is
+    read and written in place (see layers.multi_head_attention).
+    """
+    full_cache = None
+    if cache is not None and layer_index is not None:
+        full_cache = cache
+        li = jnp.asarray(layer_index, jnp.int32)
+        cache = {k: jax.lax.dynamic_index_in_dim(v, li, 0, keepdims=False)
+                 for k, v in cache.items()}
+    s = cfg.ssm
+    cdt = _dtype(cfg.compute_dtype)
+    Bsz, S, D = xin.shape
+    d_inner, nheads, hd = ssm_dims(cfg)
+
+    proj = jnp.einsum("bsd,de->bse", xin.astype(cdt), p["in_proj"].astype(cdt))
+    proj = shard(proj, ("batch", "seq", "inner"))
+    z, x, Bv, Cv, dt_raw = _split_proj(cfg, proj)
+
+    xbc = jnp.concatenate([x, Bv, Cv], axis=-1)
+    A = -jnp.exp(p["a_log"])                                        # (h,)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"]) # (b,s,h)
+
+    if cache is not None and S == 1:
+        xbc_out, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], cache["conv"])
+        xx = xbc_out[..., :d_inner]
+        Bc = xbc_out[..., d_inner: d_inner + s.d_state]
+        Cc = xbc_out[..., d_inner + s.d_state:]
+        xh = xx.reshape(Bsz, nheads, hd)
+        y, new_state = ssd_recurrent_step(
+            xh, dt[:, 0], A, Bc[:, 0], Cc[:, 0], cache["state"].astype(jnp.float32))
+        y = y + p["d_skip"][None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(Bsz, 1, d_inner)
+        new_cache = {"state": new_state.astype(cache["state"].dtype),
+                     "conv": new_conv.astype(cache["conv"].dtype)}
+    else:
+        xbc_out, conv_carry = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                           cache["conv"] if cache is not None else None)
+        xx = xbc_out[..., :d_inner]
+        Bc = xbc_out[..., d_inner: d_inner + s.d_state]
+        Cc = xbc_out[..., d_inner + s.d_state:]
+        xh = xx.reshape(Bsz, S, nheads, hd)
+        init_state = cache["state"] if cache is not None else None
+        if use_kernel:
+            from repro.kernels.ops import ssd_scan as ssd_kernel
+            y, final_state = ssd_kernel(xh, dt, A, Bc, Cc, chunk=s.chunk,
+                                        initial_state=init_state)
+        else:
+            y, final_state = ssd_chunked(xh, dt, A, Bc, Cc, chunk=min(s.chunk, S),
+                                         initial_state=init_state)
+        y = y + p["d_skip"][None, None, :, None].astype(jnp.float32) * xh.astype(jnp.float32)
+        y = y.reshape(Bsz, S, d_inner)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"state": final_state.astype(cache["state"].dtype),
+                         "conv": conv_carry.astype(cache["conv"].dtype)}
+
+    # gated RMSNorm (mamba2: norm(y * silu(z)))
+    yg = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32)).reshape(y.shape)
+    var = jnp.mean(jnp.square(yg), axis=-1, keepdims=True)
+    yn = yg * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm_scale"].astype(jnp.float32)
+    out = jnp.einsum("bse,ed->bsd", yn.astype(cdt), p["out_proj"].astype(cdt))
+    out = shard(out, ("batch", "seq", "embed"))
+
+    if full_cache is not None and new_cache is not None:
+        li = jnp.asarray(layer_index, jnp.int32)
+        zero = jnp.zeros((), jnp.int32)
+        new_cache = {
+            k: jax.lax.dynamic_update_slice(
+                full_cache[k], new_cache[k].astype(full_cache[k].dtype)[None],
+                (li,) + (zero,) * (full_cache[k].ndim - 1))
+            for k in full_cache
+        }
+    return out.astype(xin.dtype), new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    s = cfg.ssm
+    d_inner, nheads, hd = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * s.d_state
+    return {
+        "state": jnp.zeros((batch, nheads, hd, s.d_state), dtype),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+    }

@@ -1,0 +1,11 @@
+from repro.runtime.failures import FailureInjector, SimulatedFailure, StragglerMonitor
+from repro.runtime.trainer import (
+    CheckpointPolicyConfig,
+    FaultTolerantTrainer,
+    TrainerReport,
+)
+
+__all__ = [
+    "CheckpointPolicyConfig", "FailureInjector", "FaultTolerantTrainer",
+    "SimulatedFailure", "StragglerMonitor", "TrainerReport",
+]

@@ -1,0 +1,55 @@
+"""Serving step factories: batched prefill + decode over a static cache.
+
+``make_serve_step`` builds exactly what the dry-run lowers for the
+``decode_*`` / ``long_*`` shapes: one new token per sequence against a
+KV/state cache of the shape's seq_len.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import decode_step, forward, init_cache
+
+Params = Any
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int,
+                      cache_dtype=jnp.bfloat16) -> Callable:
+    """(params, batch) -> (last_logits, cache).  batch per prefill specs."""
+
+    def prefill_step(params: Params, batch: Dict[str, jnp.ndarray]):
+        tokens = batch["tokens"]
+        cache = init_cache(cfg, tokens.shape[0], max_seq, cache_dtype)
+        logits, cache, _ = forward(params, batch, cfg, cache=cache, last_only=True)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """(params, cache, batch) -> (logits, new_cache): one decode step."""
+
+    def serve_step(params: Params, cache, batch: Dict[str, jnp.ndarray]):
+        logits, new_cache, _ = forward(params, batch, cfg, cache=cache)
+        return logits, new_cache
+
+    return serve_step
+
+
+def greedy_generate(params: Params, cfg: ModelConfig, prompt: jnp.ndarray,
+                    n_steps: int, max_seq: Optional[int] = None,
+                    frames: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Simple greedy decoding loop (examples / tests)."""
+    B, S = prompt.shape
+    max_seq = max_seq or (S + n_steps)
+    from repro.models.model import prefill
+    logits, cache = prefill(params, prompt, cfg, max_seq, frames=frames)
+    out = [jnp.argmax(logits[:, -1], axis=-1)]
+    for _ in range(n_steps - 1):
+        logits, cache = decode_step(params, cache, out[-1][:, None], cfg)
+        out.append(jnp.argmax(logits[:, -1], axis=-1))
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,37 @@
+"""Discrete-event churn simulator reproducing the paper's Sec 4 evaluation."""
+from repro.sim.experiments import (
+    Comparison,
+    compare,
+    fig4_dynamic,
+    fig4_static,
+    fig5_td_sweep,
+    fig5_v_sweep,
+    summarize,
+)
+from repro.sim.job import (
+    AdaptivePolicy,
+    FixedIntervalPolicy,
+    OraclePolicy,
+    SimResult,
+    simulate_job,
+)
+from repro.sim.network import ChurnNetwork, DeathEvent, constant_mtbf, doubling_mtbf
+
+__all__ = [
+    "AdaptivePolicy",
+    "ChurnNetwork",
+    "Comparison",
+    "DeathEvent",
+    "FixedIntervalPolicy",
+    "OraclePolicy",
+    "SimResult",
+    "compare",
+    "constant_mtbf",
+    "doubling_mtbf",
+    "fig4_dynamic",
+    "fig4_static",
+    "fig5_td_sweep",
+    "fig5_v_sweep",
+    "simulate_job",
+    "summarize",
+]

@@ -1,0 +1,193 @@
+"""Paper Sec 4 experiments: adaptive vs fixed checkpoint intervals.
+
+Implements the four evaluations of Figs. 4-5 plus the relative-runtime
+metric (Eq. 11):
+
+    RelativeRuntime = runtime(fixed T) / runtime(adaptive) * 100%
+
+Values > 100% mean the adaptive scheme is faster.  Each configuration is
+averaged over several seeds (the paper averages over repeated simulation
+runs; churn realizations are heavy-tailed so we use the mean of many
+trials).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.adaptive import AdaptiveCheckpointController
+from repro.sim.job import (
+    AdaptivePolicy,
+    FixedIntervalPolicy,
+    OraclePolicy,
+    SimResult,
+    simulate_job,
+)
+from repro.sim.network import ChurnNetwork, MtbfFn, constant_mtbf, doubling_mtbf
+
+# Paper Sec 4.2 defaults.
+PAPER_V = 20.0
+PAPER_TD = 50.0
+PAPER_MTBFS = (4000.0, 7200.0, 14400.0)          # high / normal / low churn
+PAPER_FIXED_INTERVALS = (60.0, 300.0, 900.0, 1800.0, 3600.0, 7200.0)
+DEFAULT_K = 16            # job MTBF lands in the paper's '5-10 minutes' band
+DEFAULT_WORK = 24 * 3600.0  # 'a typical job of a few hours .. up to days'
+DEFAULT_SLOTS = 128       # network population (>= watch neighbourhood)
+
+
+@dataclass(frozen=True)
+class Comparison:
+    """One (network condition, fixed T) cell of a paper figure."""
+
+    mtbf0: float
+    fixed_T: float
+    adaptive_wall: float
+    fixed_wall: float
+    oracle_wall: float
+    adaptive: SimResult
+    fixed: SimResult
+
+    @property
+    def relative_runtime(self) -> float:
+        """Eq. 11, in percent; >100 means adaptive wins."""
+        return 100.0 * self.fixed_wall / self.adaptive_wall
+
+    @property
+    def oracle_gap(self) -> float:
+        """adaptive / oracle runtime: how much estimation error costs (>=~1)."""
+        return self.adaptive_wall / self.oracle_wall
+
+
+def _mean_wall(
+    policy_factory: Callable[[], object],
+    *,
+    mtbf_fn: MtbfFn,
+    k: int,
+    work: float,
+    V: float,
+    T_d: float,
+    seeds: Sequence[int],
+    n_slots: int,
+    max_wall_factor: float = 50.0,
+) -> tuple[float, SimResult]:
+    walls = []
+    last = None
+    for seed in seeds:
+        rng = np.random.default_rng(seed)
+        net = ChurnNetwork(n_slots, mtbf_fn, rng)
+        res = simulate_job(
+            network=net, policy=policy_factory(), k=k, work_required=work,
+            V=V, T_d=T_d, max_wall_time=max_wall_factor * work,
+        )
+        # Censored (livelocked) runs contribute their lower-bound wall time.
+        walls.append(res.wall_time)
+        last = res
+    return float(np.mean(walls)), last
+
+
+def compare(
+    *,
+    mtbf_fn: MtbfFn,
+    mtbf0: float,
+    fixed_T: float,
+    k: int = DEFAULT_K,
+    work: float = DEFAULT_WORK,
+    V: float = PAPER_V,
+    T_d: float = PAPER_TD,
+    seeds: Sequence[int] = tuple(range(8)),
+    n_slots: int = DEFAULT_SLOTS,
+) -> Comparison:
+    """Run adaptive vs fixed(T) vs oracle under identical conditions."""
+    prior_mu = 1.0 / mtbf0  # adaptive starts from the nominal rate, then tracks
+
+    def adaptive_factory():
+        return AdaptivePolicy(AdaptiveCheckpointController(
+            k=k, prior_mu=prior_mu, prior_v=V, mu_window=32))
+
+    def fixed_factory():
+        return FixedIntervalPolicy(T=fixed_T)
+
+    def oracle_factory():
+        return OraclePolicy(k=k, V=V, T_d=T_d, mtbf_fn=mtbf_fn)
+
+    a_wall, a_res = _mean_wall(adaptive_factory, mtbf_fn=mtbf_fn, k=k, work=work,
+                               V=V, T_d=T_d, seeds=seeds, n_slots=n_slots)
+    f_wall, f_res = _mean_wall(fixed_factory, mtbf_fn=mtbf_fn, k=k, work=work,
+                               V=V, T_d=T_d, seeds=seeds, n_slots=n_slots)
+    o_wall, _ = _mean_wall(oracle_factory, mtbf_fn=mtbf_fn, k=k, work=work,
+                           V=V, T_d=T_d, seeds=seeds, n_slots=n_slots)
+    return Comparison(mtbf0=mtbf0, fixed_T=fixed_T, adaptive_wall=a_wall,
+                      fixed_wall=f_wall, oracle_wall=o_wall,
+                      adaptive=a_res, fixed=f_res)
+
+
+# --------------------------------------------------------------------------- #
+# The four paper experiments.                                                  #
+# --------------------------------------------------------------------------- #
+
+def fig4_static(
+    mtbfs: Sequence[float] = PAPER_MTBFS,
+    fixed_intervals: Sequence[float] = PAPER_FIXED_INTERVALS,
+    **kw,
+) -> Dict[float, List[Comparison]]:
+    """Fig. 4 left: constant departure rates (MTBF = 4000/7200/14400 s)."""
+    return {
+        m: [compare(mtbf_fn=constant_mtbf(m), mtbf0=m, fixed_T=T, **kw)
+            for T in fixed_intervals]
+        for m in mtbfs
+    }
+
+
+def fig4_dynamic(
+    mtbfs: Sequence[float] = PAPER_MTBFS,
+    fixed_intervals: Sequence[float] = PAPER_FIXED_INTERVALS,
+    double_after: float = 20 * 3600.0,
+    **kw,
+) -> Dict[float, List[Comparison]]:
+    """Fig. 4 right: departure rate doubles over 20 hours."""
+    return {
+        m: [compare(mtbf_fn=doubling_mtbf(m, double_after), mtbf0=m, fixed_T=T, **kw)
+            for T in fixed_intervals]
+        for m in mtbfs
+    }
+
+
+def fig5_v_sweep(
+    overheads: Sequence[float] = (5.0, 10.0, 20.0, 40.0, 80.0),
+    fixed_intervals: Sequence[float] = PAPER_FIXED_INTERVALS,
+    mtbf: float = 7200.0,
+    **kw,
+) -> Dict[float, List[Comparison]]:
+    """Fig. 5 left: vary checkpoint overhead V at fixed T_d=50s, MTBF=7200s."""
+    return {
+        v: [compare(mtbf_fn=constant_mtbf(mtbf), mtbf0=mtbf, fixed_T=T, V=v, **kw)
+            for T in fixed_intervals]
+        for v in overheads
+    }
+
+
+def fig5_td_sweep(
+    downloads: Sequence[float] = (10.0, 25.0, 50.0, 100.0, 200.0),
+    fixed_intervals: Sequence[float] = PAPER_FIXED_INTERVALS,
+    mtbf: float = 7200.0,
+    **kw,
+) -> Dict[float, List[Comparison]]:
+    """Fig. 5 right: vary image download overhead T_d at fixed V=20s."""
+    return {
+        td: [compare(mtbf_fn=constant_mtbf(mtbf), mtbf0=mtbf, fixed_T=T, T_d=td, **kw)
+             for T in fixed_intervals]
+        for td in downloads
+    }
+
+
+def summarize(results: Dict[float, List[Comparison]]) -> str:
+    lines = ["param      fixed_T    rel_runtime%  adaptive_h  fixed_h  oracle_gap"]
+    for key, comps in sorted(results.items()):
+        for c in comps:
+            lines.append(
+                f"{key:>9.0f}  {c.fixed_T:>8.0f}  {c.relative_runtime:>11.1f}"
+                f"  {c.adaptive_wall / 3600:>9.2f}  {c.fixed_wall / 3600:>7.2f}"
+                f"  {c.oracle_gap:>9.3f}")
+    return "\n".join(lines)

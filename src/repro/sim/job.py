@@ -1,0 +1,225 @@
+"""Message-passing job simulation with checkpoint/rollback (paper Sec 4.1).
+
+The job occupies slots [0, k) of a :class:`ChurnNetwork`.  It alternates
+work cycles and checkpoints; any churn event among its k slots is a job
+failure: the job rolls back to the last completed checkpoint and pays the
+image-download time T_d before resuming (Fig. 3 timeline).
+
+Policies decide the next checkpoint interval:
+
+* :class:`FixedIntervalPolicy` — the naive baseline of [16].
+* :class:`AdaptivePolicy` — the paper's scheme: an
+  :class:`AdaptiveCheckpointController` fed by the observation stream of a
+  neighbourhood watcher (slots [0, watch) — 'each peer monitors its
+  neighbours and the neighbours of its neighbours', Sec 3.1.1), measured
+  checkpoint overheads, and measured restore times.
+* :class:`OraclePolicy` — beyond-paper upper bound: computes lambda* from
+  the *true* mu(t) (no estimation error).  Used to quantify how much of
+  the headroom the estimator captures.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Protocol
+
+import numpy as np
+
+from repro.core.adaptive import AdaptiveCheckpointController
+from repro.core.utilization import optimal_interval_scalar
+from repro.sim.network import ChurnNetwork, MtbfFn
+
+
+class CheckpointPolicy(Protocol):
+    def interval(self) -> float: ...
+    def on_checkpoint(self, overhead: float) -> None: ...
+    def on_restore(self, downtime: float) -> None: ...
+    def on_observation(self, lifetime: float) -> None: ...
+
+
+@dataclass
+class FixedIntervalPolicy:
+    """The naive baseline: user-chosen constant interval (Sec 1.2.2)."""
+
+    T: float
+
+    def interval(self) -> float:
+        return self.T
+
+    def on_checkpoint(self, overhead: float) -> None:  # pragma: no cover - noop
+        pass
+
+    def on_restore(self, downtime: float) -> None:  # pragma: no cover - noop
+        pass
+
+    def on_observation(self, lifetime: float) -> None:  # pragma: no cover - noop
+        pass
+
+
+@dataclass
+class AdaptivePolicy:
+    """The paper's adaptive scheme driving the simulated job."""
+
+    controller: AdaptiveCheckpointController
+
+    def interval(self) -> float:
+        return self.controller.checkpoint_interval()
+
+    def on_checkpoint(self, overhead: float) -> None:
+        self.controller.observe_checkpoint_overhead(overhead)
+
+    def on_restore(self, downtime: float) -> None:
+        self.controller.observe_restore(downtime)
+
+    def on_observation(self, lifetime: float) -> None:
+        self.controller.observe_failure(lifetime)
+
+
+@dataclass
+class OraclePolicy:
+    """lambda* from the TRUE network parameters (estimation-error-free)."""
+
+    k: int
+    V: float
+    T_d: float
+    mtbf_fn: MtbfFn
+    _now: float = 0.0
+
+    def interval(self) -> float:
+        mu = 1.0 / self.mtbf_fn(self._now)
+        return optimal_interval_scalar(mu, self.k, self.V, self.T_d)
+
+    def on_checkpoint(self, overhead: float) -> None:
+        pass
+
+    def on_restore(self, downtime: float) -> None:
+        pass
+
+    def on_observation(self, lifetime: float) -> None:
+        pass
+
+    def tick(self, now: float) -> None:
+        self._now = now
+
+
+@dataclass(frozen=True)
+class SimResult:
+    wall_time: float        # total wall-clock time to completion
+    work_required: float    # fault-free runtime of the job
+    n_checkpoints: int
+    n_failures: int
+    wasted_work: float      # wall time lost to failed cycles (rollback)
+    checkpoint_time: float  # seconds spent checkpointing
+    restore_time: float     # seconds spent downloading images
+    completed: bool = True  # False => censored at wall_time (job livelocked)
+
+    @property
+    def overhead(self) -> float:
+        return self.wall_time - self.work_required
+
+    @property
+    def utilization(self) -> float:
+        return self.work_required / self.wall_time
+
+
+def simulate_job(
+    *,
+    network: ChurnNetwork,
+    policy: CheckpointPolicy,
+    k: int,
+    work_required: float,
+    V: float,
+    T_d: float,
+    watch: Optional[int] = None,
+    max_wall_time: float = float("inf"),
+) -> SimResult:
+    """Run one job to completion under churn.
+
+    ``watch`` is the neighbourhood size whose deaths feed the policy's
+    observation stream (defaults to min(4k, n_slots) — k job peers plus
+    their neighbours).  Deaths of slots >= watch are invisible to the
+    policy but slots < k always cause job failure.
+    """
+    if k > network.n_slots:
+        raise ValueError(f"job needs {k} slots but network has {network.n_slots}")
+    watch = min(4 * k, network.n_slots) if watch is None else min(watch, network.n_slots)
+
+    t = 0.0                # wall clock
+    done = 0.0             # committed (checkpointed) work
+    n_ckpt = 0
+    n_fail = 0
+    wasted = 0.0
+    ckpt_time = 0.0
+    restore_time = 0.0
+
+    def drain_observations(t_end: float) -> Optional[float]:
+        """Deliver deaths up to t_end to the policy.
+
+        Returns the time of the first *job* failure (slot < k) in the
+        window, or None.  Observation deaths (slot < watch) feed the
+        estimator even when they are not job failures.
+        """
+        nonlocal n_fail
+        for ev in network.deaths_until(t_end):
+            if ev.slot < watch:
+                policy.on_observation(ev.lifetime)
+            if ev.slot < k:
+                return ev.time
+        return None
+
+    while done < work_required:
+        if t > max_wall_time:
+            # Censored: the job is livelocked (the paper's 'keep rolling back
+            # to the same saved status again and again', Sec 4.2).  Report
+            # the censored wall time — a LOWER BOUND on the true runtime.
+            return SimResult(
+                wall_time=t, work_required=work_required, n_checkpoints=n_ckpt,
+                n_failures=n_fail, wasted_work=wasted, checkpoint_time=ckpt_time,
+                restore_time=restore_time, completed=False,
+            )
+        if isinstance(policy, OraclePolicy):
+            policy.tick(t)
+        interval = max(policy.interval(), 1e-3)
+        work_target = min(interval, work_required - done)
+        # The cycle: work_target seconds of compute, then (if not finished)
+        # V seconds of checkpoint.  A failure anywhere in the cycle rolls
+        # back to `done`.
+        is_final = (done + work_target) >= work_required
+        cycle_len = work_target + (0.0 if is_final else V)
+        fail_at = drain_observations(t + cycle_len)
+        if fail_at is None:
+            # Cycle completed.
+            t += cycle_len
+            if is_final:
+                done = work_required
+            else:
+                done += work_target
+                n_ckpt += 1
+                ckpt_time += V
+                policy.on_checkpoint(V)
+        else:
+            # Job failure mid-cycle: lose the whole cycle so far (uncommitted
+            # compute plus any in-progress checkpoint time), pay restore.
+            wasted += max(0.0, fail_at - t)
+            n_fail += 1
+            t = fail_at
+            # Restore: download image (T_d); churn during restore forces a
+            # retry of the restore.
+            while True:
+                fail_in_restore = drain_observations(t + T_d)
+                if fail_in_restore is None:
+                    t += T_d
+                    restore_time += T_d
+                    break
+                restore_time += fail_in_restore - t
+                t = fail_in_restore
+            policy.on_restore(T_d)
+
+    return SimResult(
+        wall_time=t,
+        work_required=work_required,
+        n_checkpoints=n_ckpt,
+        n_failures=n_fail,
+        wasted_work=wasted,
+        checkpoint_time=ckpt_time,
+        restore_time=restore_time,
+    )

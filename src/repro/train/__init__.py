@@ -1,0 +1,19 @@
+from repro.train.optimizer import (
+    AdamWConfig,
+    AdamWState,
+    adamw_update,
+    global_norm,
+    init_adamw,
+    params_from_master,
+    zero1_spec,
+    zero1_state_shardings,
+)
+from repro.train.schedule import constant, inverse_sqrt, linear_warmup_cosine
+from repro.train.step import TrainState, init_train_state, make_train_step
+
+__all__ = [
+    "AdamWConfig", "AdamWState", "TrainState", "adamw_update", "constant",
+    "global_norm", "init_adamw", "init_train_state", "inverse_sqrt",
+    "linear_warmup_cosine", "make_train_step", "params_from_master",
+    "zero1_spec", "zero1_state_shardings",
+]

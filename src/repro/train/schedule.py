@@ -1,0 +1,32 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr_scale: float = 1.0):
+    return lambda step: jnp.asarray(lr_scale, jnp.float32)
+
+
+def linear_warmup_cosine(warmup_steps: int, total_steps: int,
+                         min_scale: float = 0.1):
+    """Warmup to 1.0 then cosine decay to min_scale."""
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = min_scale + (1.0 - min_scale) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return fn
+
+
+def inverse_sqrt(warmup_steps: int):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        decay = jnp.sqrt(warmup_steps / jnp.maximum(step, warmup_steps))
+        return jnp.where(step < warmup_steps, warm, decay)
+
+    return fn

@@ -1,0 +1,123 @@
+"""train_step factory: microbatched gradient accumulation + AdamW + ZeRO-1.
+
+The returned step has signature ``(TrainState, batch) -> (TrainState, metrics)``
+and is designed to be jitted with in/out shardings from
+``distributed.sharding`` — the dry-run lowers exactly this function.
+
+Microbatching: a global batch of B sequences is processed as
+``n_microbatches`` scanned slices of B/n each, accumulating fp32 gradients.
+This bounds activation memory (a (B, S, vocab) logits tensor for gemma2's
+256k vocab at B=256 would be ~1 PB; at B=16 per microbatch it is ~67 GB
+global, ~260 MB per chip).  Gradient accumulation buffers can additionally
+be constrained to the ZeRO-1 (data-sharded) layout so the buffer is
+sharded 256-way instead of 16-way (``zero1_grads=True``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import loss_fn
+from repro.train.optimizer import (
+    AdamWConfig,
+    AdamWState,
+    adamw_update,
+    global_norm,
+    init_adamw,
+    params_from_master,
+)
+
+Params = Any
+
+
+class TrainState(NamedTuple):
+    params: Params     # param_dtype (bf16) working copy
+    opt: AdamWState    # fp32 master + moments (ZeRO-1 sharded)
+
+
+def init_train_state(key, cfg: ModelConfig) -> TrainState:
+    from repro.models.model import init_params
+    params = init_params(key, cfg)
+    return TrainState(params=params, opt=init_adamw(params))
+
+
+def _zero_metrics(cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    m = {"loss": jnp.zeros((), jnp.float32), "ce": jnp.zeros((), jnp.float32)}
+    if cfg.family == "moe":
+        m["moe_aux_loss"] = jnp.zeros((), jnp.float32)
+        m["moe_dropped_frac"] = jnp.zeros((), jnp.float32)
+    return m
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    schedule: Callable[[jnp.ndarray], jnp.ndarray],
+    *,
+    n_microbatches: int = 1,
+    grad_constraint: Optional[Callable[[Params], Params]] = None,
+    zero1_grads_in_scan: bool = False,
+) -> Callable[[TrainState, Dict[str, jnp.ndarray]], Tuple[TrainState, Dict]]:
+    """Build the jittable train step.
+
+    ``grad_constraint`` (optional) re-shards the accumulated gradients
+    (ZeRO-1 layout) before the optimizer consumes them.  By default the
+    constraint is applied ONCE after the microbatch scan (accumulate in the
+    parameter layout, one reduce at the end); ``zero1_grads_in_scan``
+    additionally constrains the accumulator itself — smaller grad buffer
+    (sharded data-ways) at the cost of a reduce-scatter per microbatch.
+    """
+
+    def compute_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        if n_microbatches > 1:
+            def reshape(x):
+                b = x.shape[0]
+                assert b % n_microbatches == 0, (b, n_microbatches)
+                return x.reshape(n_microbatches, b // n_microbatches, *x.shape[1:])
+
+            micro = jax.tree.map(reshape, batch)
+
+            def body(carry, mb):
+                g_acc, m_acc = carry
+                grads, metrics = compute_grads(state.params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                if grad_constraint is not None and zero1_grads_in_scan:
+                    # pin the accumulator to the ZeRO layout INSIDE the loop
+                    # (a constraint on the init alone does not fix the carry)
+                    g_acc = grad_constraint(g_acc)
+                m_acc = {k: m_acc[k] + metrics[k] for k in m_acc}
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            if grad_constraint is not None and zero1_grads_in_scan:
+                g0 = grad_constraint(g0)
+            (g_sum, m_sum), _ = jax.lax.scan(body, (g0, _zero_metrics(cfg)), micro)
+            grads = jax.tree.map(lambda g: g / n_microbatches, g_sum)
+            metrics = {k: v / n_microbatches for k, v in m_sum.items()}
+        else:
+            grads, metrics = compute_grads(state.params, batch)
+
+        if grad_constraint is not None:
+            grads = grad_constraint(grads)
+
+        lr_scale = schedule(state.opt.step)
+        master, new_opt = adamw_update(opt_cfg, grads, state.opt, lr_scale)
+        new_params = params_from_master(master, state.params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = global_norm(grads)
+        metrics["lr_scale"] = jnp.asarray(lr_scale, jnp.float32)
+        metrics["step"] = new_opt.step.astype(jnp.float32)
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step

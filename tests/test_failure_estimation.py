@@ -1,0 +1,119 @@
+"""MLE failure-rate estimation (paper Sec 3.1.1) + gossip merge (Sec 3.1.4)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.failure import (
+    FailureRateEstimator,
+    PiggybackBus,
+    exponential_lifetimes,
+    gossip_merge,
+    mle_failure_rate,
+)
+
+
+def test_mle_formula():
+    # Eq. 1: mu = K / sum(t_i)
+    assert mle_failure_rate([10.0, 20.0, 30.0]) == pytest.approx(3 / 60.0)
+
+
+def test_mle_requires_data():
+    with pytest.raises(ValueError):
+        mle_failure_rate([])
+
+
+def test_mle_accuracy_matches_paper_band():
+    """Paper Sec 4.2: estimates 'usually carry 10-15% error'.
+
+    With K=32 observations the relative error of the exponential-MLE is
+    ~1/sqrt(K) ~= 18%; check the median error over many trials sits in the
+    paper's reported band.
+    """
+    rng = np.random.default_rng(0)
+    mu = 1 / 7200.0
+    errs = []
+    for _ in range(300):
+        t = exponential_lifetimes(rng, mu, 32)
+        errs.append(abs(mle_failure_rate(t) - mu) / mu)
+    med = float(np.median(errs))
+    assert 0.05 < med < 0.20
+
+
+@settings(max_examples=50, deadline=None)
+@given(mtbf=st.floats(min_value=60.0, max_value=1e6), n=st.integers(min_value=200, max_value=2000))
+def test_property_mle_consistency(mtbf, n):
+    """More data => estimate converges to the true rate."""
+    rng = np.random.default_rng(42)
+    mu = 1.0 / mtbf
+    t = exponential_lifetimes(rng, mu, n)
+    assert mle_failure_rate(t) == pytest.approx(mu, rel=0.25)
+
+
+def test_windowed_estimator_tracks_changing_rate():
+    """Fig. 4 right regime: rate doubles; windowed MLE must follow."""
+    rng = np.random.default_rng(1)
+    est = FailureRateEstimator(window=32)
+    mu1, mu2 = 1 / 14400.0, 1 / 7200.0
+    for t in exponential_lifetimes(rng, mu1, 200):
+        est.observe_failure(t)
+    e1 = est.estimate()
+    for t in exponential_lifetimes(rng, mu2, 200):
+        est.observe_failure(t)
+    e2 = est.estimate()
+    assert e1 == pytest.approx(mu1, rel=0.5)
+    assert e2 == pytest.approx(mu2, rel=0.5)
+    assert e2 > e1 * 1.3  # clearly noticed the doubling
+
+
+def test_prior_used_before_observations():
+    est = FailureRateEstimator(window=8, prior_mu=1 / 3600.0)
+    assert est.estimate() == pytest.approx(1 / 3600.0)
+    with pytest.raises(ValueError):
+        FailureRateEstimator(window=8).estimate()
+
+
+def test_censored_observations_reduce_bias():
+    """Right-censored uptimes add observed time without adding failures."""
+    est = FailureRateEstimator(window=16)
+    est.observe_failure(100.0)
+    mu_only_failures = est.estimate()
+    est.observe_alive(900.0)
+    assert est.estimate() == pytest.approx(1 / 1000.0)
+    assert est.estimate() < mu_only_failures
+
+
+def test_invalid_observations_rejected():
+    est = FailureRateEstimator(window=4)
+    with pytest.raises(ValueError):
+        est.observe_failure(0.0)
+    with pytest.raises(ValueError):
+        est.observe_failure(-5.0)
+
+
+def test_gossip_merge_mean_and_weighted():
+    assert gossip_merge([1.0, 3.0]) == pytest.approx(2.0)
+    assert gossip_merge([1.0, 3.0], weights=[3.0, 1.0]) == pytest.approx(1.5)
+    with pytest.raises(ValueError):
+        gossip_merge([])
+
+
+def test_piggyback_bus_global_average():
+    bus = PiggybackBus()
+    bus.publish(0, mu=1 / 7200.0, V=10.0, T_d=30.0)
+    bus.publish(1, mu=1 / 3600.0, V=30.0, T_d=50.0)
+    mu, v, td = bus.global_estimates()
+    assert mu == pytest.approx((1 / 7200 + 1 / 3600) / 2)
+    assert v == pytest.approx(20.0)
+    assert td == pytest.approx(40.0)
+    assert len(bus) == 2
+
+
+def test_gossip_prevents_smallest_mu_dominating():
+    """Sec 3.1.4's motivation: averaging beats worst-case local estimate."""
+    rng = np.random.default_rng(7)
+    mu = 1 / 7200.0
+    locals_ = [mle_failure_rate(exponential_lifetimes(rng, mu, 16)) for _ in range(16)]
+    merged = gossip_merge(locals_)
+    worst = max(abs(m - mu) / mu for m in locals_)
+    assert abs(merged - mu) / mu < worst

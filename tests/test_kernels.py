@@ -1,0 +1,145 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracles,
+sweeping shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.models.ssm import ssd_chunked
+
+
+# ------------------------------------------------------------------ flash
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bg,r,sq,skv,d", [
+    (2, 1, 128, 128, 64),
+    (1, 4, 256, 256, 128),   # GQA: 4 q-heads per kv head
+    (2, 2, 128, 384, 64),    # decode-style: kv longer than q
+    (1, 1, 512, 512, 128),
+])
+def test_flash_attention_matches_ref(bg, r, sq, skv, d, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(k1, (bg, r, sq, d), dtype)
+    k = jax.random.normal(k2, (bg, skv, d), dtype)
+    v = jax.random.normal(k3, (bg, skv, d), dtype)
+    scale = d ** -0.5
+    out = ops.flash_attention(q, k, v, scale=scale, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, scale=scale)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_softcap_and_noncausal():
+    k1, k2, k3 = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(k1, (1, 2, 128, 64), jnp.float32)
+    k = jax.random.normal(k2, (1, 128, 64), jnp.float32)
+    v = jax.random.normal(k3, (1, 128, 64), jnp.float32)
+    for causal in (True, False):
+        out = ops.flash_attention(q, k, v, scale=0.125, causal=causal,
+                                  softcap=50.0, interpret=True)
+        expect = ref.flash_attention_ref(q, k, v, scale=0.125, causal=causal,
+                                         softcap=50.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_block_size_invariance():
+    k1, k2, k3 = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(k1, (1, 1, 256, 64), jnp.float32)
+    k = jax.random.normal(k2, (1, 256, 64), jnp.float32)
+    v = jax.random.normal(k3, (1, 256, 64), jnp.float32)
+    outs = [np.asarray(ops.flash_attention(q, k, v, scale=0.125,
+                                           block_q=bq, block_kv=bk, interpret=True))
+            for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+
+# -------------------------------------------------------------------- ssd
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 64, 2, 16, 16, 16),
+    (1, 128, 4, 32, 64, 32),
+    (2, 256, 1, 64, 128, 64),
+])
+def test_ssd_kernel_matches_sequential_ref(b, s, h, p, n, chunk, dtype):
+    ks = jax.random.split(jax.random.key(3), 4)
+    x = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, n), dtype) * 0.5
+    C = jax.random.normal(jax.random.fold_in(ks[3], 1), (b, s, n), dtype) * 0.5
+
+    y_k, st_k = ops.ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=True)
+    y_r, st_r = ref.ssd_scan_ref(x, dt, A, B, C)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r),
+                               rtol=tol, atol=tol)
+
+
+def test_ssd_kernel_matches_model_chunked_impl():
+    """Kernel == the models/ssm.py chunked implementation (used in prod)."""
+    ks = jax.random.split(jax.random.key(4), 4)
+    b, s, h, p, n = 2, 128, 2, 32, 32
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, n)) * 0.5
+    C = jax.random.normal(jax.random.fold_in(ks[3], 1), (b, s, n)) * 0.5
+    y_k, st_k = ops.ssd_scan(x, dt, A, B, C, chunk=32, interpret=True)
+    y_m, st_m = ssd_chunked(x, dt, A, B, C, chunk=32)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_m), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_m), rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_kernel_initial_state():
+    ks = jax.random.split(jax.random.key(5), 5)
+    b, s, h, p, n = 1, 64, 2, 16, 16
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, n)) * 0.5
+    C = jax.random.normal(jax.random.fold_in(ks[3], 1), (b, s, n)) * 0.5
+    st0 = jax.random.normal(ks[4], (b, h, p, n)).astype(jnp.float32)
+    y_k, st_k = ops.ssd_scan(x, dt, A, B, C, chunk=16, initial_state=st0,
+                             interpret=True)
+    y_r, st_r = ref.ssd_scan_ref(x, dt, A, B, C, initial_state=st0)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ quant
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,block", [(4096, 512), (8192, 256), (512, 512)])
+def test_quant_roundtrip_error_bound(n, block, dtype):
+    x = jax.random.normal(jax.random.key(6), (n,), dtype)
+    q, s = ops.quantize_blocks(x.astype(jnp.float32), block=block, interpret=True)
+    assert q.dtype == jnp.int8 and s.shape == (n // block,)
+    x2 = ops.dequantize_blocks(q, s, block=block, interpret=True)
+    err = np.abs(np.asarray(x, np.float32) - np.asarray(x2))
+    # max error <= scale/2 per block
+    scales = np.repeat(np.asarray(s), block)
+    assert (err <= scales / 2 + 1e-7).all()
+
+
+@pytest.mark.parametrize("n,block", [(4096, 512), (2048, 128)])
+def test_quant_matches_ref(n, block):
+    x = jax.random.normal(jax.random.key(7), (n,), jnp.float32) * 3.0
+    qk, sk = ops.quantize_blocks(x, block=block, interpret=True)
+    qr, sr = ref.quantize_blocks_ref(x, block)
+    np.testing.assert_array_equal(np.asarray(qk), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+    xk = ops.dequantize_blocks(qk, sk, block=block, interpret=True)
+    xr = ref.dequantize_blocks_ref(qr, sr, block)
+    np.testing.assert_allclose(np.asarray(xk), np.asarray(xr), rtol=1e-6)
+
+
+def test_quant_zero_block():
+    x = jnp.zeros((1024,), jnp.float32)
+    q, s = ops.quantize_blocks(x, block=256, interpret=True)
+    assert (np.asarray(q) == 0).all()
+    x2 = ops.dequantize_blocks(q, s, block=256, interpret=True)
+    assert (np.asarray(x2) == 0).all()

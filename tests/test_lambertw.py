@@ -1,0 +1,84 @@
+"""Lambert W implementation vs scipy + analytic identities."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.special as sps
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.lambertw import lambertw0, lambertw0_jit
+
+
+@pytest.fixture(autouse=True)
+def _x64():
+    """Enable f64 for THIS module only (module-level config mutation leaks
+    into later test files and breaks their f32 scan carries)."""
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+_BRANCH = -1.0 / np.e
+
+
+@pytest.mark.parametrize(
+    "z",
+    [-1.0 / np.e, -0.367, -0.3, -0.1, -1e-6, 0.0, 1e-6, 0.1, 0.5, 1.0, np.e, 10.0, 1e3, 1e6, 1e12],
+)
+def test_matches_scipy(z):
+    ours = float(lambertw0(jnp.float64(z)))
+    ref = float(sps.lambertw(z).real)
+    if np.isnan(ref):  # scipy NaNs at the float-rounded branch point; we clamp.
+        assert ours == pytest.approx(-1.0, abs=1e-6)
+    else:
+        assert ours == pytest.approx(ref, rel=1e-10, abs=1e-10)
+
+
+def test_identity_w_exp_w():
+    z = jnp.logspace(-6, 6, 200, dtype=jnp.float64)
+    z = jnp.concatenate([z, jnp.linspace(_BRANCH, 0.0, 200, dtype=jnp.float64)])
+    w = lambertw0(z)
+    np.testing.assert_allclose(np.asarray(w * jnp.exp(w)), np.asarray(jnp.maximum(z, _BRANCH)),
+                               rtol=1e-9, atol=1e-9)
+
+
+def test_branch_point_exact():
+    assert float(lambertw0(jnp.float64(_BRANCH))) == pytest.approx(-1.0, abs=1e-8)
+    # Slightly below the branch point (rounding noise) clamps to -1.
+    assert float(lambertw0(jnp.float64(_BRANCH - 1e-12))) == pytest.approx(-1.0, abs=1e-6)
+
+
+def test_known_values():
+    assert float(lambertw0(jnp.float64(0.0))) == pytest.approx(0.0, abs=1e-12)
+    assert float(lambertw0(jnp.float64(np.e))) == pytest.approx(1.0, rel=1e-12)
+    assert float(lambertw0(jnp.float64(2 * np.e**2))) == pytest.approx(2.0, rel=1e-12)
+
+
+def test_jit_and_vmap():
+    z = jnp.array([-0.3, 0.0, 1.0, 100.0], dtype=jnp.float64)
+    a = lambertw0_jit(z)
+    b = jax.vmap(lambertw0)(z)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-12)
+
+
+def test_float32_accuracy():
+    z = jnp.array([-0.3, 0.1, 1.0, 50.0], dtype=jnp.float32)
+    ref = sps.lambertw(np.asarray(z, dtype=np.float64)).real
+    np.testing.assert_allclose(np.asarray(lambertw0(z), dtype=np.float64), ref, rtol=1e-5)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(min_value=_BRANCH + 1e-9, max_value=1e9, allow_nan=False, allow_infinity=False))
+def test_property_matches_scipy(z):
+    ours = float(lambertw0(jnp.float64(z)))
+    ref = float(sps.lambertw(z).real)
+    assert ours == pytest.approx(ref, rel=1e-8, abs=1e-8)
+
+
+def test_grad_defined():
+    g = jax.grad(lambda z: lambertw0(z))(jnp.float64(1.0))
+    # dW/dz = W / (z (1 + W)); at z=1, W(1)=0.567143..., so g = W/(1+W).
+    w = float(sps.lambertw(1.0).real)
+    assert float(g) == pytest.approx(w / (1.0 + w), rel=1e-6)

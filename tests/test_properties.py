@@ -1,0 +1,121 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.adaptive import AdaptiveCheckpointController
+from repro.core.utilization import optimal_interval_scalar, utilization_scalar
+from repro.kernels import ops, ref
+from repro.models.ssm import ssd_chunked
+
+
+# ------------------------------------------------------------ decentralization
+@settings(max_examples=25, deadline=None)
+@given(
+    mtbf=st.floats(min_value=600.0, max_value=1e6),
+    v=st.floats(min_value=0.5, max_value=120.0),
+    td=st.floats(min_value=0.5, max_value=300.0),
+    k=st.integers(min_value=1, max_value=2048),
+    n_hosts=st.integers(min_value=2, max_value=8),
+)
+def test_replicated_controllers_agree(mtbf, v, td, k, n_hosts):
+    """The SPMD form of the paper's decentralization: every host feeds the
+    controller the same all-reduced statistics => identical decisions."""
+    ctls = [AdaptiveCheckpointController(k=k, prior_mu=1 / mtbf, prior_v=v)
+            for _ in range(n_hosts)]
+    for c in ctls:
+        c.ingest_gossip(mu=1 / mtbf, V=v, T_d=td, weight=1.0)
+    intervals = {round(c.checkpoint_interval(), 9) for c in ctls}
+    assert len(intervals) == 1
+    iv = intervals.pop()
+    decisions = {c.should_checkpoint(iv * 0.99) for c in ctls}
+    assert decisions == {False}
+
+
+# ----------------------------------------------------------------- monotonics
+@settings(max_examples=60, deadline=None)
+@given(
+    mtbf=st.floats(min_value=300.0, max_value=1e7),
+    v=st.floats(min_value=0.1, max_value=300.0),
+    td=st.floats(min_value=0.1, max_value=600.0),
+    k=st.integers(min_value=1, max_value=4096),
+)
+def test_interval_positive_and_utilization_bounded(mtbf, v, td, k):
+    iv = optimal_interval_scalar(1 / mtbf, k, v, td)
+    assert iv > 0
+    u = utilization_scalar(1 / mtbf, k, 1.0 / iv, v, td)
+    assert 0.0 <= u <= 1.0
+
+
+# ------------------------------------------------------------------ quant
+@settings(max_examples=20, deadline=None)
+@given(
+    scale=st.floats(min_value=1e-3, max_value=1e3),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_quant_roundtrip_bounded_error(scale, seed):
+    # compare against the f32 input the quantizer actually saw
+    x = (np.asarray(jax.random.normal(jax.random.key(seed), (2048,)))
+         * scale).astype(np.float32)
+    q, s = ref.quantize_blocks_ref(jnp.asarray(x), 256)
+    x2 = np.asarray(ref.dequantize_blocks_ref(q, s, 256))
+    per_block_scale = np.repeat(np.asarray(s), 256)
+    assert (np.abs(x - x2) <= per_block_scale / 2 + 1e-6 * scale).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_quant_idempotent(seed):
+    """Quantizing already-quantized values is lossless."""
+    x = jax.random.normal(jax.random.key(seed), (1024,))
+    q, s = ref.quantize_blocks_ref(x, 128)
+    x1 = ref.dequantize_blocks_ref(q, s, 128)
+    q2, s2 = ref.quantize_blocks_ref(x1, 128)
+    x2 = ref.dequantize_blocks_ref(q2, s2, 128)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2), rtol=1e-6)
+
+
+# ------------------------------------------------------------------- SSD
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    chunk=st.sampled_from([8, 16, 32]),
+)
+def test_ssd_chunk_size_invariance(seed, chunk):
+    """The chunked SSD must be independent of the chunk size (vs oracle)."""
+    ks = jax.random.split(jax.random.key(seed), 4)
+    b, s, h, p, n = 1, 64, 2, 8, 8
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, n)) * 0.5
+    C = jax.random.normal(jax.random.fold_in(ks[3], 1), (b, s, n)) * 0.5
+    y_ref, st_ref = ref.ssd_scan_ref(x, dt, A, B, C)
+    y, st_out = ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_out), np.asarray(st_ref), rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------- attention mask
+@settings(max_examples=15, deadline=None)
+@given(
+    sq=st.sampled_from([4, 8, 16]),
+    extra=st.sampled_from([0, 4, 8, 16]),  # kernel contract: Skv % block_kv == 0
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_flash_decode_window_matches_ref(sq, extra, seed):
+    """Bottom-right-aligned causal masking for arbitrary kv overhang."""
+    skv = sq + extra
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    d = 64
+    q = jax.random.normal(k1, (1, 1, sq, d), jnp.float32)
+    k = jax.random.normal(k2, (1, skv, d), jnp.float32)
+    v = jax.random.normal(k3, (1, skv, d), jnp.float32)
+    out = ops.flash_attention(q, k, v, scale=d ** -0.5, block_q=4, block_kv=4,
+                              interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, scale=d ** -0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,141 @@
+"""Paper Sec 4 reproduction: adaptive vs fixed checkpoint intervals.
+
+These tests validate the paper's claims on our simulator:
+  * Fig. 4 left — adaptive outperforms fixed intervals at MTBF 4000/7200/14400s;
+  * Fig. 4 right — under failure-rate doubling (20h) adaptive still wins, and
+    a badly-chosen fixed interval costs ~3x (paper: '3 times the runtime');
+  * Fig. 5 — adaptive wins across checkpoint-overhead and download-overhead
+    sweeps;
+  * estimation error barely costs anything vs a true-rate oracle.
+"""
+import numpy as np
+import pytest
+
+from repro.sim import (
+    ChurnNetwork,
+    FixedIntervalPolicy,
+    compare,
+    constant_mtbf,
+    doubling_mtbf,
+    simulate_job,
+)
+from repro.sim.experiments import PAPER_TD, PAPER_V
+
+SEEDS = range(4)
+FAST = dict(seeds=SEEDS, work=12 * 3600.0, k=16)
+
+
+# ------------------------------------------------------------- fig 4 left
+@pytest.mark.parametrize("mtbf", [4000.0, 7200.0, 14400.0])
+def test_fig4_static_adaptive_wins(mtbf):
+    rels = []
+    for T in (300.0, 1800.0, 7200.0):
+        c = compare(mtbf_fn=constant_mtbf(mtbf), mtbf0=mtbf, fixed_T=T, **FAST)
+        rels.append(c.relative_runtime)
+    # Adaptive must beat or tie every tested fixed interval (paper Fig. 4
+    # shows values near 100% when the fixed choice happens to be near the
+    # optimum — the win there is not needing to know it).
+    assert all(r > 95.0 for r in rels), rels
+    # Overall (geometric mean) the adaptive scheme must win ...
+    assert float(np.exp(np.mean(np.log(rels)))) > 100.0
+    # ... and badly-chosen long intervals must be much worse.
+    assert max(rels) > 200.0
+
+
+def test_fig4_static_fixed_near_optimal_is_close():
+    """A fixed interval near the true optimum should be within ~25% of
+    adaptive — the adaptive win comes from NOT having to know it."""
+    mtbf = 14400.0
+    c = compare(mtbf_fn=constant_mtbf(mtbf), mtbf0=mtbf, fixed_T=240.0, **FAST)
+    assert 85.0 < c.relative_runtime < 135.0
+
+
+# ------------------------------------------------------------ fig 4 right
+def test_fig4_dynamic_doubling_rate():
+    c = compare(mtbf_fn=doubling_mtbf(7200.0), mtbf0=7200.0, fixed_T=300.0, **FAST)
+    assert c.relative_runtime > 100.0
+
+
+def test_fig4_dynamic_bad_fixed_interval_costs_multiples():
+    """Paper Sec 4.2: with MTBF=7200s doubling and a 5-minute fixed interval
+    the fixed approach took ~3x the adaptive runtime in the worst shown
+    case; with longer fixed intervals 'much longer'.  We assert the >= 2x
+    blowup for a long fixed interval under doubling churn."""
+    c = compare(mtbf_fn=doubling_mtbf(7200.0), mtbf0=7200.0, fixed_T=3600.0,
+                seeds=SEEDS, work=24 * 3600.0, k=16)
+    assert c.relative_runtime > 200.0
+
+
+def test_adaptive_tracks_doubling_and_always_finishes():
+    """Adaptive jobs must finish even as the rate keeps doubling."""
+    c = compare(mtbf_fn=doubling_mtbf(7200.0, double_after=10 * 3600.0),
+                mtbf0=7200.0, fixed_T=600.0, seeds=SEEDS, work=12 * 3600.0, k=16)
+    assert c.adaptive.completed
+
+
+# ------------------------------------------------------------------ fig 5
+@pytest.mark.parametrize("V", [5.0, 20.0, 80.0])
+def test_fig5_v_sweep(V):
+    c = compare(mtbf_fn=constant_mtbf(7200.0), mtbf0=7200.0, fixed_T=1800.0,
+                V=V, **FAST)
+    assert c.relative_runtime > 100.0
+
+
+@pytest.mark.parametrize("T_d", [10.0, 50.0, 200.0])
+def test_fig5_td_sweep(T_d):
+    c = compare(mtbf_fn=constant_mtbf(7200.0), mtbf0=7200.0, fixed_T=1800.0,
+                T_d=T_d, **FAST)
+    assert c.relative_runtime > 100.0
+
+
+# ------------------------------------------------------- estimation quality
+def test_oracle_gap_is_small():
+    """The online estimator should capture nearly all of the oracle's win."""
+    c = compare(mtbf_fn=constant_mtbf(7200.0), mtbf0=7200.0, fixed_T=600.0, **FAST)
+    assert c.oracle_gap < 1.10  # within 10% of the perfect-information policy
+
+
+# ----------------------------------------------------------- sim invariants
+def test_wall_time_at_least_work():
+    rng = np.random.default_rng(0)
+    net = ChurnNetwork(64, constant_mtbf(7200.0), rng)
+    res = simulate_job(network=net, policy=FixedIntervalPolicy(600.0), k=8,
+                       work_required=4 * 3600.0, V=PAPER_V, T_d=PAPER_TD)
+    assert res.wall_time >= res.work_required
+    assert res.utilization <= 1.0
+    assert res.wall_time == pytest.approx(
+        res.work_required + res.checkpoint_time + res.restore_time
+        + res.wasted_work, rel=1e-9)
+
+
+def test_no_churn_means_no_overhead_except_checkpoints():
+    rng = np.random.default_rng(0)
+    net = ChurnNetwork(64, constant_mtbf(1e15), rng)  # effectively no churn
+    res = simulate_job(network=net, policy=FixedIntervalPolicy(600.0), k=8,
+                       work_required=3600.0, V=PAPER_V, T_d=PAPER_TD)
+    assert res.n_failures == 0
+    # 3600s of work at interval 600 => 5 interior checkpoints (final cycle skips).
+    assert res.n_checkpoints == 5
+    assert res.wall_time == pytest.approx(3600.0 + 5 * PAPER_V)
+
+
+def test_livelock_censoring():
+    """An absurd fixed interval under heavy churn is censored, not hung."""
+    rng = np.random.default_rng(0)
+    net = ChurnNetwork(64, constant_mtbf(600.0), rng)
+    res = simulate_job(network=net, policy=FixedIntervalPolicy(86400.0), k=16,
+                       work_required=4 * 3600.0, V=PAPER_V, T_d=PAPER_TD,
+                       max_wall_time=48 * 3600.0)
+    assert not res.completed
+    assert res.wall_time >= 48 * 3600.0
+
+
+def test_job_failure_rate_matches_kmu():
+    """Deaths among k slots arrive at ~k*mu (Eq. 7)."""
+    rng = np.random.default_rng(5)
+    mtbf = 7200.0
+    net = ChurnNetwork(32, constant_mtbf(mtbf), rng)
+    k, horizon = 16, 200 * 3600.0
+    n_job_fail = sum(1 for ev in net.deaths_until(horizon) if ev.slot < k)
+    expected = k * horizon / mtbf
+    assert n_job_fail == pytest.approx(expected, rel=0.15)

@@ -1,0 +1,176 @@
+"""Utilization model (paper Sec 3.2): closed form vs numeric optimum + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import importlib
+
+um = importlib.import_module("repro.core.utilization")
+
+
+@pytest.fixture(autouse=True)
+def _x64():
+    """Enable f64 for THIS module only (avoids leaking into other files)."""
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+def _numeric_argmax_lambda(mu, k, V, T_d, lo=1e-8, hi=None, n=20001):
+    """Brute-force argmax of the *unclamped* objective 1 - C*lam.
+
+    (The clamped U of Eq. 10 is identically 0 in infeasible regimes, where
+    the argmax is undefined; the stationary point of 1 - C*lam is what the
+    closed form locates.)
+    """
+    kmu = k * mu
+    hi = hi if hi is not None else kmu * 1e4
+    lam = np.logspace(np.log10(lo * kmu + 1e-12), np.log10(hi), n)
+    u = 1.0 - np.asarray(um.cycle_overhead(mu, k, jnp.asarray(lam), V, T_d)) * lam
+    return lam[int(np.argmax(u))]
+
+
+# ---------------------------------------------------------------- closed form
+@pytest.mark.parametrize(
+    "mu,k,V,T_d",
+    [
+        (1 / 7200.0, 8, 20.0, 50.0),     # paper Sec 4.2 defaults
+        (1 / 4000.0, 8, 20.0, 50.0),
+        (1 / 14400.0, 8, 20.0, 50.0),
+        (1 / 7200.0, 1, 20.0, 50.0),     # single-peer model (Sec 3.2.1)
+        (1 / 7200.0, 64, 5.0, 5.0),
+        (1 / 3600.0, 256, 60.0, 120.0),  # TPU-pod-scale regime
+        (1 / 86400.0, 4096, 30.0, 90.0),
+    ],
+)
+def test_closed_form_matches_numeric_argmax(mu, k, V, T_d):
+    lam_star = float(um.optimal_lambda(mu, k, V, T_d))
+    lam_num = _numeric_argmax_lambda(mu, k, V, T_d)
+
+    def unclamped(lam):
+        return 1.0 - float(um.cycle_overhead(mu, k, lam, V, T_d)) * lam
+
+    # The closed form must achieve at least the grid optimum (up to grid error).
+    assert unclamped(lam_star) >= unclamped(lam_num) - 1e-6
+    assert lam_star == pytest.approx(lam_num, rel=0.02)
+
+
+@settings(max_examples=150, deadline=None)
+@given(
+    mtbf=st.floats(min_value=600.0, max_value=30 * 86400.0),
+    k=st.integers(min_value=1, max_value=4096),
+    V=st.floats(min_value=0.1, max_value=600.0),
+    T_d=st.floats(min_value=0.1, max_value=1200.0),
+)
+def test_property_stationary_point(mtbf, k, V, T_d):
+    """dU/dlam == 0 at the closed-form lambda* (when the job is feasible)."""
+    mu = 1.0 / mtbf
+    lam_star = float(um.optimal_lambda(mu, k, V, T_d))
+    assert lam_star > 0 and np.isfinite(lam_star)
+    du = jax.grad(lambda lam: um.cycle_overhead(mu, k, lam, V, T_d) * lam)(jnp.float64(lam_star))
+    # U = 1 - C*lam  (pre-clamp) => dU/dlam = -d(C lam)/dlam == 0 at optimum.
+    scale = um.cycle_overhead(mu, k, lam_star, V, T_d)  # normalize units
+    assert abs(float(du)) <= 1e-5 * max(1.0, abs(float(scale)))
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    mtbf=st.floats(min_value=600.0, max_value=30 * 86400.0),
+    k=st.integers(min_value=1, max_value=1024),
+    V=st.floats(min_value=0.1, max_value=300.0),
+    T_d=st.floats(min_value=0.1, max_value=600.0),
+)
+def test_property_U_bounds_and_monotonicity(mtbf, k, V, T_d):
+    mu = 1.0 / mtbf
+    lam_star = float(um.optimal_lambda(mu, k, V, T_d))
+    u_star = float(um.utilization(mu, k, lam_star, V, T_d))
+    assert 0.0 <= u_star <= 1.0
+    # Higher failure rate (same everything else) can't increase utilization.
+    u_worse = float(um.utilization(mu * 2, k, float(um.optimal_lambda(mu * 2, k, V, T_d)), V, T_d))
+    assert u_worse <= u_star + 1e-9
+    # More nodes => higher job failure rate => lower utilization.
+    u_bigger = float(um.utilization(mu, 2 * k, float(um.optimal_lambda(mu, 2 * k, V, T_d)), V, T_d))
+    assert u_bigger <= u_star + 1e-9
+
+
+# --------------------------------------------------------------- Eqs 5, 6, 9
+def test_wasted_computation_closed_form_vs_sum():
+    """Eq. 5: the infinite-sum definition equals 1/mu - c_bar/lam."""
+    mu, lam = 1 / 7200.0, 1 / 600.0
+    # numeric: sum_i int_{i/lam}^{(i+1)/lam} mu e^{-mu t} (t - i/lam) dt
+    total = 0.0
+    for i in range(2000):
+        a, b = i / lam, (i + 1) / lam
+        ts = np.linspace(a, b, 200)
+        total += np.trapezoid(mu * np.exp(-mu * ts) * (ts - a), ts)
+    closed = float(um.wasted_computation(mu, 1, lam))
+    assert closed == pytest.approx(total, rel=1e-3)
+
+
+def test_expected_cycles_closed_form_vs_sum():
+    """Eq. 6: c_bar = sum_i i * P(fail in cycle i) = 1/(e^{mu/lam}-1)."""
+    mu, lam = 1 / 7200.0, 1 / 900.0
+    total = 0.0
+    for i in range(5000):
+        a, b = i / lam, (i + 1) / lam
+        total += i * (np.exp(-mu * a) - np.exp(-mu * b))
+    assert float(um.expected_cycles_per_failure(mu, 1, lam)) == pytest.approx(total, rel=1e-4)
+
+
+def test_wasted_computation_bounded_by_interval():
+    """Paper Sec 2: runtime wasted per restart has upper bound 1/lam."""
+    for lam in [1 / 60.0, 1 / 600.0, 1 / 3600.0]:
+        for mu in [1 / 1000.0, 1 / 7200.0, 1 / 86400.0]:
+            w = float(um.wasted_computation(mu, 4, lam))
+            assert 0.0 < w < 1.0 / lam
+
+
+def test_multi_peer_is_single_peer_with_kmu():
+    """Eqs 7-8: k-peer model == single peer at rate k*mu."""
+    mu, k, lam = 1 / 7200.0, 16, 1 / 300.0
+    assert float(um.wasted_computation(mu, k, lam)) == pytest.approx(
+        float(um.wasted_computation(mu * k, 1, lam)), rel=1e-12)
+    assert float(um.expected_cycles_per_failure(mu, k, lam)) == pytest.approx(
+        float(um.expected_cycles_per_failure(mu * k, 1, lam)), rel=1e-12)
+
+
+# ------------------------------------------------------------------ regimes
+def test_infeasible_regime_reports_zero_utilization():
+    """Huge k with huge overheads: U==0 means 'too many peers' (Sec 3.2.3)."""
+    mu = 1 / 600.0       # 10-minute MTBF
+    k = 10_000
+    V, T_d = 30.0, 120.0
+    lam_star = float(um.optimal_lambda(mu, k, V, T_d))
+    assert float(um.utilization(mu, k, lam_star, V, T_d)) == 0.0
+    assert not bool(um.feasible(mu, k, V, T_d))
+
+
+def test_feasible_small_job():
+    assert bool(um.feasible(1 / 7200.0, 8, 20.0, 50.0))
+
+
+def test_lower_failure_rate_lengthens_interval():
+    ivs = [float(um.optimal_interval(1.0 / m, 8, 20.0, 50.0)) for m in (4000, 7200, 14400)]
+    assert ivs[0] < ivs[1] < ivs[2]
+
+
+def test_higher_overhead_lengthens_interval():
+    ivs = [float(um.optimal_interval(1 / 7200.0, 8, v, 50.0)) for v in (5.0, 20.0, 80.0)]
+    assert ivs[0] < ivs[1] < ivs[2]
+
+
+def test_against_young_daly_order_of_magnitude():
+    """lambda* should be within ~2x of Young/Daly for small-overhead regimes."""
+    mu, k, V, T_d = 1 / 14400.0, 8, 5.0, 5.0
+    iv = float(um.optimal_interval(mu, k, V, T_d))
+    young = float(um.young_interval(mu, k, V))
+    assert 0.5 * young <= iv <= 2.0 * young
+
+
+def test_report_dataclass():
+    r = um.UtilizationReport.evaluate(1 / 7200.0, 8, 20.0, 50.0)
+    assert r.feasible and 0 < r.U_star < 1 and r.interval_star == pytest.approx(1 / r.lam_star)
