@@ -12,9 +12,17 @@ from typing import List
 from repro.sim import fig4_dynamic, fig4_static, fig5_td_sweep, fig5_v_sweep
 
 # Benchmark-scale settings: smaller than the paper's full day-long jobs so
-# the suite finishes in minutes on CPU, same regimes.
+# the suite finishes in minutes on CPU, same regimes.  All grids run on the
+# batched engine (repro.sim.engine); `fast=True` shrinks them to a smoke
+# grid for CI.
 KW = dict(seeds=range(4), work=12 * 3600.0, k=16)
+FAST_KW = dict(seeds=range(2), work=4 * 3600.0, k=16)
 INTERVALS = (300.0, 900.0, 3600.0)
+FAST_INTERVALS = (300.0, 3600.0)
+
+
+def _kw(fast: bool) -> tuple[dict, tuple]:
+    return (FAST_KW, FAST_INTERVALS) if fast else (KW, INTERVALS)
 
 
 def _rows(figure: str, results) -> List[str]:
@@ -28,27 +36,31 @@ def _rows(figure: str, results) -> List[str]:
     return rows
 
 
-def fig4_left() -> List[str]:
+def fig4_left(fast: bool = False) -> List[str]:
+    kw, intervals = _kw(fast)
     res = fig4_static(mtbfs=(4000.0, 7200.0, 14400.0),
-                      fixed_intervals=INTERVALS, **KW)
+                      fixed_intervals=intervals, **kw)
     return _rows("fig4_left_mtbf", res)
 
 
-def fig4_right() -> List[str]:
+def fig4_right(fast: bool = False) -> List[str]:
+    kw, intervals = _kw(fast)
     res = fig4_dynamic(mtbfs=(4000.0, 7200.0, 14400.0),
-                       fixed_intervals=INTERVALS, **KW)
+                       fixed_intervals=intervals, **kw)
     return _rows("fig4_right_doubling", res)
 
 
-def fig5_left() -> List[str]:
+def fig5_left(fast: bool = False) -> List[str]:
+    kw, intervals = _kw(fast)
     res = fig5_v_sweep(overheads=(5.0, 20.0, 80.0),
-                       fixed_intervals=INTERVALS, **KW)
+                       fixed_intervals=intervals, **kw)
     return _rows("fig5_left_ckpt_overhead", res)
 
 
-def fig5_right() -> List[str]:
+def fig5_right(fast: bool = False) -> List[str]:
+    kw, intervals = _kw(fast)
     res = fig5_td_sweep(downloads=(10.0, 50.0, 200.0),
-                        fixed_intervals=INTERVALS, **KW)
+                        fixed_intervals=intervals, **kw)
     return _rows("fig5_right_download", res)
 
 
@@ -56,8 +68,8 @@ HEADER = ("figure,param,fixed_T_seconds,relative_runtime_pct,"
           "adaptive_hours,fixed_hours,oracle_gap")
 
 
-def run_all() -> List[str]:
+def run_all(fast: bool = False) -> List[str]:
     rows = [HEADER]
     for fn in (fig4_left, fig4_right, fig5_left, fig5_right):
-        rows.extend(fn())
+        rows.extend(fn(fast))
     return rows

@@ -16,6 +16,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig5,kernels,e2e,roofline")
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny smoke grids (CI): fewer seeds/intervals, short jobs")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -33,7 +35,7 @@ def main() -> None:
             sections += [paper_figs.fig5_left, paper_figs.fig5_right]
         for fn in sections:
             t = time.monotonic()
-            for row in fn():
+            for row in fn(fast=args.fast):
                 fig, param, T, rel, ah, fh, gap = row.split(",")
                 us = float(ah) * 3600 * 1e6  # adaptive wall in us
                 print(f"{fig}_p{param}_T{T},{us:.0f},"
@@ -49,7 +51,7 @@ def main() -> None:
 
     if want("e2e"):
         from benchmarks import e2e_adaptive
-        for row in e2e_adaptive.run_all()[1:]:
+        for row in e2e_adaptive.run_all(fast=args.fast)[1:]:
             print(row, flush=True)
 
     if want("roofline"):

@@ -1,6 +1,10 @@
 """Reproduce the paper's evaluation (Figs. 4 and 5) and print the tables.
 
     PYTHONPATH=src python examples/paper_repro.py [--plot out.png] [--fast]
+                 [--engine batched|reference] [--backend auto|jax|numpy]
+
+The default engine is the batched Monte-Carlo kernel (repro.sim.engine);
+``--engine reference`` re-runs the grids on the per-event heap simulator.
 """
 import argparse
 
@@ -11,10 +15,16 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--plot", default=None, help="write a matplotlib png")
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--engine", default="batched", choices=("batched", "reference"))
+    ap.add_argument("--backend", default="auto", choices=("auto", "jax", "numpy"),
+                    help="batched-engine backend")
     args = ap.parse_args()
 
     kw = dict(seeds=range(2 if args.fast else 6),
-              work=(6 if args.fast else 24) * 3600.0, k=16)
+              work=(6 if args.fast else 24) * 3600.0, k=16,
+              engine=args.engine)
+    if args.engine == "batched":
+        kw["backend"] = args.backend
     ivals = (300.0, 900.0, 1800.0, 3600.0)
 
     print("== Fig 4 (left): constant churn, MTBF in {4000, 7200, 14400}s ==")

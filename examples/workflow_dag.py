@@ -1,0 +1,70 @@
+"""A 3-stage volunteer-computing work flow under churn (the paper's target).
+
+    PYTHONPATH=src python examples/workflow_dag.py [--scenario NAME] [--seeds N]
+
+Builds the paper's deployment shape — inter-dependent processes on a P2P
+volunteer network — as a preprocess -> train -> evaluate DAG, runs it with
+the batched Monte-Carlo engine under a time-varying churn scenario, and
+compares the adaptive checkpoint policy against a naive fixed interval on
+workflow makespan.
+"""
+import argparse
+
+from repro.sim import PolicyConfig, Stage, WorkflowSpec, scenario, simulate_workflow
+
+V, TD = 20.0, 50.0
+
+
+def build_workflow() -> WorkflowSpec:
+    return WorkflowSpec(stages=(
+        Stage("preprocess", work=2 * 3600.0, k=8),
+        Stage("train", work=10 * 3600.0, k=16, deps=("preprocess",), handoff=180.0),
+        Stage("evaluate", work=1 * 3600.0, k=4, deps=("train",), handoff=60.0),
+    ))
+
+
+def report(name: str, res) -> None:
+    print(f"\n== {name} ==")
+    print(f"{'stage':12s} {'start_h':>8s} {'finish_h':>9s} {'handoff_s':>10s} "
+          f"{'failures':>9s} {'ckpts':>6s}")
+    for sname, sr in res.stages.items():
+        print(f"{sname:12s} {sr.start.mean() / 3600:8.2f} {sr.finish.mean() / 3600:9.2f} "
+              f"{sr.handoff_time.mean():10.1f} {sr.sim.n_failures.mean():9.1f} "
+              f"{sr.sim.n_checkpoints.mean():6.1f}")
+    print(f"makespan {res.mean_makespan / 3600:.2f}h  completed={res.all_completed}  "
+          f"critical path: {' -> '.join(res.critical_path)}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="diurnal",
+                    help="registry scenario name (constant, doubling, diurnal, "
+                         "flash_crowd, weibull)")
+    ap.add_argument("--mtbf", type=float, default=7200.0)
+    ap.add_argument("--seeds", type=int, default=8)
+    ap.add_argument("--backend", default="auto", choices=("auto", "jax", "numpy"))
+    args = ap.parse_args()
+
+    scen_kw = {"mtbf0" if args.scenario == "doubling" else
+               "scale" if args.scenario == "weibull" else "mtbf": args.mtbf}
+    scen = scenario(args.scenario, **scen_kw)
+    spec = build_workflow()
+    print(f"workflow: {len(spec)} stages under scenario {scen.name!r}")
+
+    adaptive = simulate_workflow(
+        spec, scen, seeds=range(args.seeds), V=V, T_d=TD, backend=args.backend,
+        policy=PolicyConfig(kind="adaptive", prior_mu=1.0 / args.mtbf, prior_v=V))
+    report("adaptive checkpointing", adaptive)
+
+    fixed = simulate_workflow(
+        spec, scen, seeds=range(args.seeds), V=V, T_d=TD, backend=args.backend,
+        policy=PolicyConfig(kind="fixed", fixed_T=3600.0))
+    report("fixed 1h checkpointing", fixed)
+
+    rel = 100.0 * fixed.mean_makespan / adaptive.mean_makespan
+    print(f"\nworkflow relative runtime (Eq. 11 on makespan): {rel:.1f}% "
+          f"({'adaptive wins' if rel > 100 else 'fixed wins'})")
+
+
+if __name__ == "__main__":
+    main()

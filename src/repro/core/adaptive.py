@@ -71,6 +71,16 @@ class _Ema:
         self._weight = (1.0 - self.alpha) * self._weight + self.alpha
         return self.value
 
+    def set(self, x: float) -> None:
+        """Overwrite the average with an externally-blended value.
+
+        Used by gossip ingestion: the blend weight was already applied by
+        the caller, so the value must land exactly — routing it through
+        :meth:`update` would smooth it a second time.
+        """
+        self._value = float(x)
+        self._weight = 1.0
+
     @property
     def initialized(self) -> bool:
         return self._weight > 0.0
@@ -171,8 +181,11 @@ class AdaptiveCheckpointController:
         # Re-seed the estimator so subsequent local observations keep moving it.
         self.mu_est = FailureRateEstimator(window=self.mu_window, prior_mu=merged_mu)
         if V > 0:
-            self._ckpt_overhead.update(V if not self._ckpt_overhead.initialized
-                                       else (1 - weight) * self._ckpt_overhead.value + weight * V)
+            # The blend is applied here once; _Ema.set stores it verbatim
+            # (update() would EMA-damp the already-blended value, skewing
+            # every ingest toward the stale local estimate).
+            self._ckpt_overhead.set(V if not self._ckpt_overhead.initialized
+                                    else (1 - weight) * self._ckpt_overhead.value + weight * V)
         if T_d > 0:
             self._t_d = (1 - weight) * (self._t_d if self._t_d is not None else T_d) + weight * T_d
         self._invalidate()

@@ -1,11 +1,27 @@
-"""Discrete-event churn simulator reproducing the paper's Sec 4 evaluation."""
+"""Churn simulation subsystem reproducing (and extending) the paper's Sec 4.
+
+Layered (DESIGN.md Sec 1):
+
+* :mod:`repro.sim.scenarios` — registry of named churn environments.
+* :mod:`repro.sim.network` / :mod:`repro.sim.job` — per-event reference
+  simulator (the parity oracle).
+* :mod:`repro.sim.engine` — batched cycle-level Monte-Carlo kernel
+  (JAX ``lax.scan`` + NumPy fallback).
+* :mod:`repro.sim.workflow` — inter-dependent DAG stages (the paper's
+  "work flows").
+* :mod:`repro.sim.experiments` — the Fig. 4/5 grids on either engine.
+"""
+from repro.sim.engine import BatchResult, CellSpec, PolicyConfig, run_cells
 from repro.sim.experiments import (
     Comparison,
+    GridEntry,
     compare,
+    compare_grid,
     fig4_dynamic,
     fig4_static,
     fig5_td_sweep,
     fig5_v_sweep,
+    scenario_sweep,
     summarize,
 )
 from repro.sim.job import (
@@ -16,22 +32,51 @@ from repro.sim.job import (
     simulate_job,
 )
 from repro.sim.network import ChurnNetwork, DeathEvent, constant_mtbf, doubling_mtbf
+from repro.sim.scenarios import (
+    Scenario,
+    available_scenarios,
+    register_scenario,
+    scenario,
+)
+from repro.sim.workflow import (
+    Stage,
+    StageResult,
+    WorkflowResult,
+    WorkflowSpec,
+    simulate_workflow,
+)
 
 __all__ = [
     "AdaptivePolicy",
+    "BatchResult",
+    "CellSpec",
     "ChurnNetwork",
     "Comparison",
     "DeathEvent",
     "FixedIntervalPolicy",
+    "GridEntry",
     "OraclePolicy",
+    "PolicyConfig",
+    "Scenario",
     "SimResult",
+    "Stage",
+    "StageResult",
+    "WorkflowResult",
+    "WorkflowSpec",
+    "available_scenarios",
     "compare",
+    "compare_grid",
     "constant_mtbf",
     "doubling_mtbf",
     "fig4_dynamic",
     "fig4_static",
     "fig5_td_sweep",
     "fig5_v_sweep",
+    "register_scenario",
+    "run_cells",
+    "scenario",
+    "scenario_sweep",
     "simulate_job",
+    "simulate_workflow",
     "summarize",
 ]

@@ -1,0 +1,538 @@
+"""Batched cycle-level Monte-Carlo engine for checkpoint-policy simulation.
+
+The per-event reference (:func:`repro.sim.job.simulate_job`) walks a Python
+heap of individual peer deaths — exact, but serial and slow.  This engine
+simulates at *checkpoint-cycle* granularity and is vectorized over a batch
+of (seed x policy-config x scenario) cells:
+
+* **JAX backend** — one ``lax.scan`` step per cycle with the whole cell
+  batch as the carried state, jitted in float64, chunked so the host loop
+  can exit as soon as every cell finishes.
+* **NumPy backend** — the same step function driven by a Python loop over
+  vectorized batch arrays; no compilation latency, eager-debuggable, and
+  the double-precision reference the JAX path is tested against.  (The
+  wider package imports jax at module scope, so this is a no-JIT path, not
+  a no-JAX-install path.)
+
+Model equivalence with the reference simulator (DESIGN.md Sec 3): the k job
+peers have exponential lifetimes with hazard mu(t), so the job-level failure
+process is Poisson with rate k*mu(t).  A cycle or restore attempt of length
+L starting at t therefore survives with probability exp(-k mu L), and the
+failure offset within a failed attempt is the exponential draw itself —
+exactly the distribution the heap delivers, without materializing per-peer
+events.
+
+Two deliberate approximations (both switchable, both mean-preserving):
+
+* The adaptive estimator's observation stream (deaths among the ``watch``
+  neighbourhood) is fed in expectation — watch*mu*dt decayed through the
+  same window-K MLE — instead of Poisson-sampled per step.  The windowed
+  estimate tracks the true rate with the same lag as the paper's Eq. 1
+  estimator but without sampling jitter.
+* **Macro-stepping**: when a cycle's survival probability drops below
+  ``macro_threshold``, the number of consecutive failures before the next
+  success is sampled exactly (geometric), and the elapsed time of that
+  whole failure burst — truncated-exponential attempt + geometric restore
+  retries per failure — is drawn from a normal with the burst's exact mean
+  and variance (CLT), capped by the scenario's hazard coherence time so
+  time-varying rates are still honoured.  This turns livelocked /
+  failure-dominated cells from tens of thousands of steps into tens.
+  ``macro_threshold=0`` disables it for exact parity runs.
+
+The adaptive policy mirrors :class:`AdaptiveCheckpointController`: a
+windowed-MLE failure-rate estimate (exposure form, Gamma-prior smoothed),
+exact V after the first checkpoint, T_d initialized to V until a restore is
+seen, and the same interval clamps.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from repro.core.lambertw import lambertw0_numpy
+from repro.sim.job import SimResult
+from repro.sim.scenarios import (
+    CONSTANT,
+    DIURNAL,
+    DOUBLING,
+    FLASH_CROWD,
+    TRACE,
+    Scenario,
+    hazard_kernel,
+)
+
+try:  # pragma: no cover - exercised implicitly by backend selection
+    import jax
+    import jax.numpy as jnp
+
+    _HAVE_JAX = True
+except Exception:  # pragma: no cover
+    _HAVE_JAX = False
+
+_E = math.e
+_POLICY_IDS = {"fixed": 0, "adaptive": 1, "oracle": 2}
+_CHUNK = 256   # lax.scan steps per jitted call; host checks completion between
+_LW_ITERS = 4  # Halley iterations for the per-step W0 (cubic convergence:
+               # 3 reaches 1e-14 over the paper's argument range; one spare)
+_MACRO_CAP = 1e9  # absolute bound on failures folded into one macro step
+_RNG_BLOCK = 256  # numpy backend: uniforms/normals pregenerated per seed
+
+
+@dataclass(frozen=True)
+class PolicyConfig:
+    """Which interval rule a cell runs, plus the adaptive policy's knobs.
+
+    Mirrors the fields of :class:`AdaptiveCheckpointController` /
+    :class:`FixedIntervalPolicy` / :class:`OraclePolicy` so a cell spec is a
+    complete, hashable description of the policy.
+    """
+
+    kind: str = "adaptive"  # "fixed" | "adaptive" | "oracle"
+    fixed_T: float = 600.0
+    prior_mu: float = 1.0 / (4 * 3600.0)
+    prior_v: float = 10.0
+    prior_count: int = 4
+    window: int = 32
+    min_interval: float = 1.0
+    max_interval: float = 24 * 3600.0
+
+    def __post_init__(self) -> None:
+        if self.kind not in _POLICY_IDS:
+            raise ValueError(f"unknown policy kind {self.kind!r}")
+        if self.kind == "fixed" and self.fixed_T <= 0:
+            raise ValueError("fixed_T must be positive")
+
+
+@dataclass(frozen=True)
+class CellSpec:
+    """One simulation cell: a job under a scenario, policy, and seed."""
+
+    scenario: Scenario
+    policy: PolicyConfig
+    seed: int = 0
+    k: int = 16
+    work: float = 24 * 3600.0
+    V: float = 20.0
+    T_d: float = 50.0
+    watch: Optional[int] = None  # default min(4k, n_slots), like simulate_job
+    n_slots: int = 128
+    max_wall_time: float = float("inf")
+    t0: float = 0.0  # wall-clock offset (workflow stages start mid-scenario)
+
+
+@dataclass(frozen=True)
+class BatchResult:
+    """Struct-of-arrays result for a cell batch (shapes all [B])."""
+
+    wall_time: np.ndarray
+    work_required: np.ndarray
+    n_checkpoints: np.ndarray
+    n_failures: np.ndarray
+    wasted_work: np.ndarray
+    checkpoint_time: np.ndarray
+    restore_time: np.ndarray
+    completed: np.ndarray
+    n_steps: int  # engine steps executed (diagnostic / benchmark)
+
+    def __len__(self) -> int:
+        return int(self.wall_time.shape[0])
+
+    def result(self, i: int) -> SimResult:
+        """The i-th cell as the reference simulator's :class:`SimResult`."""
+        return SimResult(
+            wall_time=float(self.wall_time[i]),
+            work_required=float(self.work_required[i]),
+            n_checkpoints=int(self.n_checkpoints[i]),
+            n_failures=int(self.n_failures[i]),
+            wasted_work=float(self.wasted_work[i]),
+            checkpoint_time=float(self.checkpoint_time[i]),
+            restore_time=float(self.restore_time[i]),
+            completed=bool(self.completed[i]),
+        )
+
+
+class _Params(NamedTuple):
+    """Packed per-cell constants (all shape [B] except the trace tables)."""
+
+    pol: np.ndarray          # policy kind id
+    fixed_T: np.ndarray
+    prior_mu: np.ndarray
+    prior_v: np.ndarray
+    prior_count: np.ndarray
+    log_decay: np.ndarray    # log(1 - 1/window): estimator decay per death
+    min_iv: np.ndarray
+    max_iv: np.ndarray
+    k: np.ndarray
+    work: np.ndarray
+    V: np.ndarray
+    T_d: np.ndarray
+    watch: np.ndarray
+    max_wall: np.ndarray
+    t0: np.ndarray
+    scen_kind: np.ndarray
+    scen_p: np.ndarray       # [B, 4]
+    trace_t: np.ndarray      # [B, L]
+    trace_mtbf: np.ndarray   # [B, L]
+    trace_min_gap: np.ndarray
+
+
+class _State(NamedTuple):
+    """Per-cell mutable simulation state (all shape [B]; floats for jit)."""
+
+    t: np.ndarray            # absolute wall clock (starts at t0)
+    done: np.ndarray         # committed work
+    in_restore: np.ndarray   # bool
+    finished: np.ndarray     # bool
+    censored: np.ndarray     # bool
+    n_ckpt: np.ndarray
+    n_fail: np.ndarray
+    wasted: np.ndarray
+    ckpt_time: np.ndarray
+    restore_time: np.ndarray
+    ema_d: np.ndarray        # decayed observed-death count (estimator)
+    ema_T: np.ndarray        # decayed observed exposure (slot-seconds)
+    seen_ckpt: np.ndarray    # bool: V has been measured
+    seen_restore: np.ndarray  # bool: T_d has been measured
+
+
+def _pack(cells: Sequence[CellSpec]) -> _Params:
+    B = len(cells)
+    if B == 0:
+        raise ValueError("need at least one cell")
+    f = lambda vals: np.asarray(vals, dtype=np.float64)
+    watch = [min(4 * c.k, c.n_slots) if c.watch is None
+             else min(c.watch, c.n_slots) for c in cells]
+    for c in cells:
+        if c.k > c.n_slots:
+            raise ValueError(f"job needs {c.k} slots but network has {c.n_slots}")
+    L = max(2, max(len(c.scenario.trace_t) for c in cells))
+    trace_t = np.zeros((B, L))
+    trace_mtbf = np.ones((B, L))
+    min_gap = np.full(B, np.inf)
+    for i, c in enumerate(cells):
+        tt, tm = c.scenario.trace_t, c.scenario.trace_mtbf
+        if tt:
+            n = len(tt)
+            trace_t[i, :n] = tt
+            trace_mtbf[i, :n] = tm
+            trace_t[i, n:] = tt[-1] + np.arange(1, L - n + 1)  # keep ascending
+            trace_mtbf[i, n:] = tm[-1]
+            if n > 1:
+                min_gap[i] = float(np.min(np.diff(tt)))
+    return _Params(
+        pol=np.asarray([_POLICY_IDS[c.policy.kind] for c in cells], dtype=np.int64),
+        fixed_T=f([c.policy.fixed_T for c in cells]),
+        prior_mu=f([c.policy.prior_mu for c in cells]),
+        prior_v=f([c.policy.prior_v for c in cells]),
+        prior_count=f([c.policy.prior_count for c in cells]),
+        log_decay=f([math.log1p(-1.0 / c.policy.window) for c in cells]),
+        min_iv=f([c.policy.min_interval for c in cells]),
+        max_iv=f([c.policy.max_interval for c in cells]),
+        k=f([c.k for c in cells]),
+        work=f([c.work for c in cells]),
+        V=f([c.V for c in cells]),
+        T_d=f([c.T_d for c in cells]),
+        watch=f(watch),
+        max_wall=f([c.max_wall_time for c in cells]),
+        t0=f([c.t0 for c in cells]),
+        scen_kind=np.asarray([c.scenario.kind for c in cells], dtype=np.int64),
+        scen_p=f([c.scenario.params for c in cells]),
+        trace_t=trace_t,
+        trace_mtbf=trace_mtbf,
+        trace_min_gap=min_gap,
+    )
+
+
+def _init_state(p: _Params, xp) -> _State:
+    B = p.k.shape[0]
+    zeros = xp.zeros(B)
+    false = xp.zeros(B, dtype=bool)
+    return _State(t=xp.asarray(p.t0), done=zeros, in_restore=false,
+                  finished=false, censored=false, n_ckpt=zeros, n_fail=zeros,
+                  wasted=zeros, ckpt_time=zeros, restore_time=zeros,
+                  ema_d=zeros, ema_T=zeros, seen_ckpt=false, seen_restore=false)
+
+
+def _opt_interval(mu, k, V, T_d, xp, lw):
+    """Vectorized 1/lambda* (paper Sec 3.2.3), inf at the V->0 branch point."""
+    kmu = k * mu
+    arg = (V * kmu - T_d * kmu - 1.0) / (T_d * kmu + 1.0) / _E
+    x = lw(arg) + 1.0
+    return xp.where(x > 0.0, x / kmu, xp.inf)
+
+
+def _coherence(t, p: _Params, xp):
+    """How far ahead the hazard can be treated as locally constant.
+
+    Bounds macro-step jumps so time-varying scenarios keep their shape:
+    within the returned horizon mu(t) changes by <~10%.
+    """
+    p1, p2, p3 = p.scen_p[..., 1], p.scen_p[..., 2], p.scen_p[..., 3]
+    inf = xp.inf
+    c_doub = p1 / 8.0
+    c_diur = p2 / 32.0
+    c_flash = xp.where(t < p2, p2 - t, xp.where(t < p2 + p3, p2 + p3 - t, inf))
+    c_trace = p.trace_min_gap / 4.0
+    return xp.where(p.scen_kind == DOUBLING, c_doub,
+           xp.where(p.scen_kind == DIURNAL, c_diur,
+           xp.where(p.scen_kind == FLASH_CROWD, c_flash,
+           xp.where(p.scen_kind == TRACE, c_trace, inf))))
+
+
+def _trunc_exp_moments(kmu, L, q, xp):
+    """Mean/variance of X ~ Exp(kmu) conditioned on X < L; q = exp(-kmu L)."""
+    inv = 1.0 / kmu
+    ratio = q / xp.maximum(1.0 - q, 1e-300)
+    m = inv - L * ratio
+    ex2 = 2.0 * inv * inv - (L * L + 2.0 * L * inv) * ratio
+    v = xp.maximum(ex2 - m * m, 0.0)
+    return m, v
+
+
+def _attempt(s: _State, p: _Params, xp, lw):
+    """Pure pre-sampling half of a step: what is each cell about to do?"""
+    mu = hazard_kernel(s.t, p.scen_kind, p.scen_p, p.trace_t, p.trace_mtbf, xp)
+    kmu = p.k * mu
+    active = ~s.finished
+    # Censoring is checked at the top of the work loop (not inside restore
+    # retries), matching simulate_job.
+    censor_now = active & ~s.in_restore & (s.t - p.t0 > p.max_wall)
+    att = active & ~censor_now
+
+    # Policy intervals — all three computed, selected branchlessly.  The
+    # adaptive and oracle Lambert-W evaluations are stacked into one call:
+    # the W iterations dominate per-step transcendental count.
+    mu_hat = (s.ema_d + p.prior_count) / (s.ema_T + p.prior_count / p.prior_mu)
+    V_hat = xp.where(s.seen_ckpt, p.V, p.prior_v)
+    Td_hat = xp.where(s.seen_restore, p.T_d, V_hat)
+    iv2 = _opt_interval(
+        xp.stack([mu_hat, mu]), p.k,
+        xp.stack([xp.maximum(V_hat, 1e-6), p.V]),
+        xp.stack([Td_hat, p.T_d]), xp, lw)
+    iv_adaptive = xp.clip(iv2[0], p.min_iv, p.max_iv)
+    iv_oracle = iv2[1]
+    interval = xp.where(p.pol == 0, p.fixed_T,
+                        xp.where(p.pol == 1, iv_adaptive, iv_oracle))
+    interval = xp.maximum(interval, 1e-3)
+
+    remaining = xp.maximum(p.work - s.done, 0.0)
+    work_target = xp.minimum(interval, remaining)
+    is_final = work_target >= remaining
+    cycle_len = work_target + xp.where(is_final, 0.0, p.V)
+    attempt_len = xp.where(s.in_restore, p.T_d, cycle_len)
+    return mu, kmu, attempt_len, work_target, is_final, cycle_len, censor_now, att
+
+
+def _apply(s: _State, p: _Params, pre, u, z, macro_threshold, xp) -> _State:
+    """Pure post-sampling half: advance each cell by one (macro-)attempt.
+
+    ``u`` is a uniform draw (failure time for regular cells, geometric
+    failure count for macro cells); ``z`` a standard normal (macro burst
+    duration).
+    """
+    mu, kmu, attempt_len, work_target, is_final, cycle_len, censor_now, att = pre
+    p_surv = xp.exp(-kmu * cycle_len)
+
+    # ---------------- macro path: a whole failure burst ------------------ #
+    # Failures before the next completed cycle ~ Geometric(p_surv); each
+    # failure costs a truncated-exp attempt plus a geometric number of
+    # restore tries.  Means/variances are exact; the burst duration is
+    # their CLT normal.  The jump is capped by the hazard coherence time
+    # (and the censor horizon) so mu(t) stays locally valid.
+    r = xp.exp(-kmu * p.T_d)                       # restore attempt succeeds
+    m_a, v_a = _trunc_exp_moments(kmu, cycle_len, p_surv, xp)
+    m_r, v_r = _trunc_exp_moments(kmu, p.T_d, r, xp)
+    retries = 1.0 / xp.maximum(r, 1e-300) - 1.0    # mean failed restore tries
+    mean_restore = p.T_d + retries * m_r
+    var_restore = retries * v_r + (retries / xp.maximum(r, 1e-300)) * m_r * m_r
+    pair_m = m_a + mean_restore                    # one failure+recovery
+    pair_v = v_a + v_r + var_restore
+    M_want = xp.floor(xp.log(xp.maximum(u, 1e-300))
+                      / xp.minimum(xp.log1p(-p_surv), -1e-300))
+    horizon = xp.minimum(_coherence(s.t, p, xp),
+                         0.5 * (p.t0 + p.max_wall - s.t) + pair_m)
+    M_cap = xp.floor(horizon / xp.maximum(pair_m, 1e-300))
+    M = xp.clip(xp.minimum(M_want, M_cap), 0.0, _MACRO_CAP)
+    macro = (att & ~s.in_restore & (p_surv < macro_threshold)
+             & xp.isfinite(kmu) & (kmu > 0.0) & (M >= 1.0))
+    capped = macro & (M < M_want)
+    m_ok = macro & ~capped                         # burst ends in a success
+    burst = xp.maximum(M * pair_m + z * xp.sqrt(M * pair_v), 0.0)
+    burst_waste = xp.minimum(M * m_a, burst)
+
+    # ---------------- regular path: one attempt, exact ------------------- #
+    # (Cells whose macro cap rounded to zero step exactly this round.)
+    reg = att & ~macro
+    t_fail = -xp.log1p(-u) / kmu
+    fail = t_fail < attempt_len
+    dt = xp.where(reg, xp.minimum(t_fail, attempt_len), 0.0)
+    ws = reg & ~s.in_restore & ~fail   # work cycle completed
+    wf = reg & ~s.in_restore & fail    # work cycle lost to churn
+    rs = reg & s.in_restore & ~fail    # restore (image download) completed
+    rf = reg & s.in_restore & fail     # restore attempt lost to churn
+    interior = (ws | m_ok) & ~is_final             # completed cycle, checkpoints
+
+    t = s.t + xp.where(ws, cycle_len,
+             xp.where(wf | rf, dt,
+             xp.where(rs, p.T_d,
+             xp.where(macro, burst + xp.where(m_ok, cycle_len, 0.0), 0.0))))
+    done = xp.where(ws | m_ok,
+                    xp.where(is_final, p.work, s.done + work_target), s.done)
+    n_ckpt = s.n_ckpt + interior
+    ckpt_time = s.ckpt_time + xp.where(interior, p.V, 0.0)
+    n_fail = s.n_fail + wf + xp.where(macro, M, 0.0)
+    wasted = s.wasted + xp.where(wf, dt, 0.0) + xp.where(macro, burst_waste, 0.0)
+    restore_time = (s.restore_time + xp.where(rf, dt, xp.where(rs, p.T_d, 0.0))
+                    + xp.where(macro, burst - burst_waste, 0.0))
+    in_restore = (s.in_restore | wf) & ~rs
+    finished = s.finished | censor_now | ((ws | m_ok) & is_final)
+    censored = s.censored | censor_now
+    seen_ckpt = s.seen_ckpt | interior
+    seen_restore = s.seen_restore | rs | m_ok | capped
+
+    # Estimator: expected deaths in the whole watch neighbourhood over the
+    # elapsed time, decayed through the window-K MLE (Eq. 1, exposure form).
+    elapsed = t - s.t
+    d = p.watch * mu * elapsed
+    beta = xp.exp(d * p.log_decay)
+    ema_d = s.ema_d * beta + d
+    ema_T = s.ema_T * beta + p.watch * elapsed
+
+    return _State(t=t, done=done, in_restore=in_restore, finished=finished,
+                  censored=censored, n_ckpt=n_ckpt, n_fail=n_fail,
+                  wasted=wasted, ckpt_time=ckpt_time, restore_time=restore_time,
+                  ema_d=ema_d, ema_T=ema_T, seen_ckpt=seen_ckpt,
+                  seen_restore=seen_restore)
+
+
+# --------------------------------------------------------------------------- #
+# NumPy backend.                                                               #
+# --------------------------------------------------------------------------- #
+
+def _lw_numpy(z):
+    return lambertw0_numpy(z, iters=_LW_ITERS)
+
+
+def _run_numpy(p: _Params, seeds: Sequence[int], max_steps: int,
+               macro_threshold: float) -> tuple:
+    # One stream per UNIQUE seed, consumed positionally (draw i belongs to
+    # step i): a cell's realization depends only on its own seed, never on
+    # batch composition, and cells sharing a seed share churn randomness —
+    # common random numbers across the policies of a comparison, like the
+    # reference engine's seed reuse.
+    uniq, inv = np.unique(np.asarray(list(seeds), dtype=np.int64),
+                          return_inverse=True)
+    gens = [np.random.default_rng(int(sd)) for sd in uniq]
+    s = _init_state(p, np)
+    steps = 0
+    block_u = block_z = None
+    j = _RNG_BLOCK
+    # Unused branches of the branchless step routinely overflow (exp of a
+    # huge rate, inf * 0) before being masked out — silence numpy there.
+    with np.errstate(all="ignore"):
+        while steps < max_steps and not s.finished.all():
+            if j == _RNG_BLOCK:  # refill per-seed blocks
+                block_u = np.stack([g.random(_RNG_BLOCK) for g in gens])
+                block_z = np.stack([g.standard_normal(_RNG_BLOCK) for g in gens])
+                j = 0
+            steps += 1
+            pre = _attempt(s, p, np, _lw_numpy)
+            u = block_u[inv, j]
+            z = block_z[inv, j]
+            j += 1
+            s = _apply(s, p, pre, u, z, macro_threshold, np)
+    return s, steps
+
+
+# --------------------------------------------------------------------------- #
+# JAX backend: lax.scan over attempt steps, chunked for early exit.            #
+# --------------------------------------------------------------------------- #
+
+if _HAVE_JAX:
+
+    def lambertw0_jnp(z):
+        from repro.core.lambertw import lambertw0
+
+        return lambertw0(z, iters=_LW_ITERS)
+
+    def _jax_chunk(state_and_keys, p: _Params, macro_threshold: float):
+        def body(carry, _):
+            s, keys = carry
+            pre = _attempt(s, p, jnp, lambertw0_jnp)
+            # Per-CELL keys (seeded from CellSpec.seed): realizations are
+            # independent of batch composition, and same-seed cells share
+            # churn randomness (common random numbers across policies).
+            splits = jax.vmap(lambda k: jax.random.split(k, 3))(keys)
+            keys, k1, k2 = splits[:, 0], splits[:, 1], splits[:, 2]
+            u = jax.vmap(lambda k: jax.random.uniform(k, dtype=jnp.float64))(k1)
+            z = jax.vmap(lambda k: jax.random.normal(k, dtype=jnp.float64))(k2)
+            return (_apply(s, p, pre, u, z, macro_threshold, jnp), keys), None
+
+        (s, keys), _ = jax.lax.scan(body, state_and_keys, None, length=_CHUNK)
+        return s, keys
+
+    _jax_chunk_jit = None  # compiled lazily (needs x64 enabled at trace time)
+
+
+def _run_jax(p: _Params, seeds: Sequence[int], max_steps: int,
+             macro_threshold: float) -> tuple:
+    global _jax_chunk_jit
+    with jax.experimental.enable_x64(True):
+        if _jax_chunk_jit is None:
+            _jax_chunk_jit = jax.jit(_jax_chunk, static_argnums=2)
+        pj = _Params(*(jnp.asarray(a) for a in p))
+        keys = jax.vmap(jax.random.PRNGKey)(
+            jnp.asarray(list(seeds), dtype=jnp.uint32))
+        s = _init_state(pj, jnp)
+        steps = 0
+        while steps < max_steps:
+            s, keys = _jax_chunk_jit((s, keys), pj, macro_threshold)
+            steps += _CHUNK
+            if bool(s.finished.all()):
+                break
+        return _State(*(np.asarray(a) for a in s)), steps
+
+
+# --------------------------------------------------------------------------- #
+# Public entry point.                                                          #
+# --------------------------------------------------------------------------- #
+
+def run_cells(cells: Sequence[CellSpec], *, backend: str = "auto",
+              max_steps: int = 400_000,
+              macro_threshold: float = 0.05) -> BatchResult:
+    """Simulate every cell to completion (or censoring) and return a batch.
+
+    ``backend``: "auto" (JAX when importable, else numpy), "jax", "numpy".
+    ``max_steps`` bounds the attempt loop; cells still running when it is
+    exhausted are reported censored at their current wall clock.
+    ``macro_threshold``: cycle survival probability below which failure
+    bursts are macro-stepped (see module docstring); 0 disables.
+    """
+    if backend == "auto":
+        backend = "jax" if _HAVE_JAX else "numpy"
+    if backend == "jax" and not _HAVE_JAX:
+        raise RuntimeError("JAX backend requested but jax is not importable")
+    if backend not in ("jax", "numpy"):
+        raise ValueError(f"unknown backend {backend!r}")
+
+    p = _pack(cells)
+    seeds = [c.seed for c in cells]
+    run = _run_jax if backend == "jax" else _run_numpy
+    s, steps = run(p, seeds, max_steps, float(macro_threshold))
+
+    ran_out = ~np.asarray(s.finished)
+    completed = ~(np.asarray(s.censored) | ran_out)
+    return BatchResult(
+        wall_time=np.asarray(s.t) - p.t0,
+        work_required=p.work,
+        n_checkpoints=np.asarray(s.n_ckpt).astype(np.int64),
+        n_failures=np.asarray(s.n_fail).astype(np.int64),
+        wasted_work=np.asarray(s.wasted),
+        checkpoint_time=np.asarray(s.ckpt_time),
+        restore_time=np.asarray(s.restore_time),
+        completed=completed,
+        n_steps=steps,
+    )

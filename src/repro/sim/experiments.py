@@ -9,15 +9,24 @@ Values > 100% mean the adaptive scheme is faster.  Each configuration is
 averaged over several seeds (the paper averages over repeated simulation
 runs; churn realizations are heavy-tailed so we use the mean of many
 trials).
+
+Two execution engines are available (DESIGN.md Sec 3):
+
+* ``engine="batched"`` (default) — the vectorized cycle-level Monte-Carlo
+  kernel in :mod:`repro.sim.engine`; every (policy x seed) cell of a
+  comparison runs in one batch.
+* ``engine="reference"`` — the original per-event heap simulator
+  (:func:`repro.sim.job.simulate_job`), kept as the parity oracle.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.adaptive import AdaptiveCheckpointController
+from repro.sim.engine import BatchResult, CellSpec, PolicyConfig, run_cells
 from repro.sim.job import (
     AdaptivePolicy,
     FixedIntervalPolicy,
@@ -26,6 +35,7 @@ from repro.sim.job import (
     simulate_job,
 )
 from repro.sim.network import ChurnNetwork, MtbfFn, constant_mtbf, doubling_mtbf
+from repro.sim.scenarios import Scenario, scenario
 
 # Paper Sec 4.2 defaults.
 PAPER_V = 20.0
@@ -60,10 +70,11 @@ class Comparison:
         return self.adaptive_wall / self.oracle_wall
 
 
-def _mean_wall(
+def _mean_wall_reference(
     policy_factory: Callable[[], object],
     *,
     mtbf_fn: MtbfFn,
+    lifetime_sampler: Optional[Callable] = None,
     k: int,
     work: float,
     V: float,
@@ -76,7 +87,7 @@ def _mean_wall(
     last = None
     for seed in seeds:
         rng = np.random.default_rng(seed)
-        net = ChurnNetwork(n_slots, mtbf_fn, rng)
+        net = ChurnNetwork(n_slots, mtbf_fn, rng, lifetime_sampler=lifetime_sampler)
         res = simulate_job(
             network=net, policy=policy_factory(), k=k, work_required=work,
             V=V, T_d=T_d, max_wall_time=max_wall_factor * work,
@@ -87,9 +98,125 @@ def _mean_wall(
     return float(np.mean(walls)), last
 
 
+def _resolve_scenario(mtbf_fn: Optional[MtbfFn], scen: Optional[Scenario],
+                      mtbf0: float) -> tuple[Optional[Scenario], Optional[MtbfFn]]:
+    """Accept either a structured Scenario or a legacy ``mtbf_fn`` callable
+    (recovering the scenario from the tag that constant_mtbf/doubling_mtbf
+    attach).  Untagged callables only run on the reference engine."""
+    if scen is None and mtbf_fn is not None:
+        scen = getattr(mtbf_fn, "scenario", None)
+    if scen is not None and mtbf_fn is None:
+        mtbf_fn = scen.mtbf_fn
+    if scen is None and mtbf_fn is None:
+        scen = scenario("constant", mtbf=mtbf0)
+        mtbf_fn = scen.mtbf_fn
+    return scen, mtbf_fn
+
+
+@dataclass(frozen=True)
+class GridEntry:
+    """One comparison point of a figure grid (scenario + fixed T + costs)."""
+
+    scenario: Scenario
+    mtbf0: float
+    fixed_T: float
+    V: float = PAPER_V
+    T_d: float = PAPER_TD
+
+
+def compare_grid(
+    entries: Sequence[GridEntry],
+    *,
+    k: int = DEFAULT_K,
+    work: float = DEFAULT_WORK,
+    seeds: Sequence[int] = tuple(range(8)),
+    n_slots: int = DEFAULT_SLOTS,
+    engine: str = "batched",
+    backend: str = "auto",
+    max_wall_factor: float = 50.0,
+) -> List[Comparison]:
+    """Run a whole figure grid of comparisons.
+
+    On the batched engine every (entry x policy x seed) cell goes into ONE
+    :func:`run_cells` batch — this is where the vectorization pays off: a
+    full Fig. 4 grid is a single ``lax.scan`` rather than hundreds of
+    per-event Python loops.
+    """
+    entries = list(entries)
+    seeds = list(seeds)
+    S = len(seeds)
+    if engine == "reference":
+        return [
+            _compare_reference(e, k=k, work=work, seeds=seeds, n_slots=n_slots,
+                               max_wall_factor=max_wall_factor)
+            for e in entries
+        ]
+    if engine != "batched":
+        raise ValueError(f"unknown engine {engine!r}")
+
+    cells = []
+    for e in entries:
+        policies = (
+            PolicyConfig(kind="adaptive", prior_mu=1.0 / e.mtbf0, prior_v=e.V),
+            PolicyConfig(kind="fixed", fixed_T=e.fixed_T),
+            PolicyConfig(kind="oracle"),
+        )
+        for pol in policies:
+            for s in seeds:
+                cells.append(CellSpec(
+                    scenario=e.scenario, policy=pol, seed=s, k=k, work=work,
+                    V=e.V, T_d=e.T_d, n_slots=n_slots,
+                    max_wall_time=max_wall_factor * work))
+    res = run_cells(cells, backend=backend)
+    walls = res.wall_time.reshape(len(entries), 3, S).mean(axis=2)
+    out = []
+    for i, e in enumerate(entries):
+        a_wall, f_wall, o_wall = (float(w) for w in walls[i])
+        out.append(Comparison(
+            mtbf0=e.mtbf0, fixed_T=e.fixed_T, adaptive_wall=a_wall,
+            fixed_wall=f_wall, oracle_wall=o_wall,
+            adaptive=res.result((i * 3 + 0) * S + S - 1),
+            fixed=res.result((i * 3 + 1) * S + S - 1)))
+    return out
+
+
+def _compare_reference(e: GridEntry, *, k: int, work: float,
+                       seeds: Sequence[int], n_slots: int,
+                       max_wall_factor: float,
+                       mtbf_fn: Optional[MtbfFn] = None) -> Comparison:
+    """Per-event heap comparison.  ``mtbf_fn`` overrides the scenario's rate
+    function for legacy untagged callables (then ``e.scenario`` may be None)."""
+    prior_mu = 1.0 / e.mtbf0
+    sampler = None
+    if mtbf_fn is None:
+        mtbf_fn = e.scenario.mtbf_fn
+        sampler = e.scenario.sample_lifetime
+
+    def adaptive_factory():
+        return AdaptivePolicy(AdaptiveCheckpointController(
+            k=k, prior_mu=prior_mu, prior_v=e.V, mu_window=32))
+
+    def fixed_factory():
+        return FixedIntervalPolicy(T=e.fixed_T)
+
+    def oracle_factory():
+        return OraclePolicy(k=k, V=e.V, T_d=e.T_d, mtbf_fn=mtbf_fn)
+
+    kw = dict(mtbf_fn=mtbf_fn, lifetime_sampler=sampler, k=k, work=work,
+              V=e.V, T_d=e.T_d, seeds=seeds,
+              n_slots=n_slots, max_wall_factor=max_wall_factor)
+    a_wall, a_res = _mean_wall_reference(adaptive_factory, **kw)
+    f_wall, f_res = _mean_wall_reference(fixed_factory, **kw)
+    o_wall, _ = _mean_wall_reference(oracle_factory, **kw)
+    return Comparison(mtbf0=e.mtbf0, fixed_T=e.fixed_T, adaptive_wall=a_wall,
+                      fixed_wall=f_wall, oracle_wall=o_wall,
+                      adaptive=a_res, fixed=f_res)
+
+
 def compare(
     *,
-    mtbf_fn: MtbfFn,
+    mtbf_fn: Optional[MtbfFn] = None,
+    scenario: Optional[Scenario] = None,
     mtbf0: float,
     fixed_T: float,
     k: int = DEFAULT_K,
@@ -98,34 +225,33 @@ def compare(
     T_d: float = PAPER_TD,
     seeds: Sequence[int] = tuple(range(8)),
     n_slots: int = DEFAULT_SLOTS,
+    engine: str = "batched",
+    backend: str = "auto",
+    max_wall_factor: float = 50.0,
 ) -> Comparison:
     """Run adaptive vs fixed(T) vs oracle under identical conditions."""
-    prior_mu = 1.0 / mtbf0  # adaptive starts from the nominal rate, then tracks
-
-    def adaptive_factory():
-        return AdaptivePolicy(AdaptiveCheckpointController(
-            k=k, prior_mu=prior_mu, prior_v=V, mu_window=32))
-
-    def fixed_factory():
-        return FixedIntervalPolicy(T=fixed_T)
-
-    def oracle_factory():
-        return OraclePolicy(k=k, V=V, T_d=T_d, mtbf_fn=mtbf_fn)
-
-    a_wall, a_res = _mean_wall(adaptive_factory, mtbf_fn=mtbf_fn, k=k, work=work,
-                               V=V, T_d=T_d, seeds=seeds, n_slots=n_slots)
-    f_wall, f_res = _mean_wall(fixed_factory, mtbf_fn=mtbf_fn, k=k, work=work,
-                               V=V, T_d=T_d, seeds=seeds, n_slots=n_slots)
-    o_wall, _ = _mean_wall(oracle_factory, mtbf_fn=mtbf_fn, k=k, work=work,
-                           V=V, T_d=T_d, seeds=seeds, n_slots=n_slots)
-    return Comparison(mtbf0=mtbf0, fixed_T=fixed_T, adaptive_wall=a_wall,
-                      fixed_wall=f_wall, oracle_wall=o_wall,
-                      adaptive=a_res, fixed=f_res)
+    scen, mtbf_fn = _resolve_scenario(mtbf_fn, scenario, mtbf0)
+    entry = GridEntry(scenario=scen, mtbf0=mtbf0, fixed_T=fixed_T, V=V, T_d=T_d)
+    if scen is None:
+        # Untagged bare callable: the vectorized kernel cannot trace it.
+        return _compare_reference(entry, k=k, work=work, seeds=list(seeds),
+                                  n_slots=n_slots, max_wall_factor=max_wall_factor,
+                                  mtbf_fn=mtbf_fn)
+    return compare_grid([entry], k=k, work=work, seeds=seeds, n_slots=n_slots,
+                        engine=engine, backend=backend,
+                        max_wall_factor=max_wall_factor)[0]
 
 
 # --------------------------------------------------------------------------- #
 # The four paper experiments.                                                  #
 # --------------------------------------------------------------------------- #
+
+def _grid(entries: Sequence[GridEntry], keys: Sequence[float],
+          fixed_intervals: Sequence[float], kw: dict) -> Dict[float, List[Comparison]]:
+    """Run one batched grid and regroup as {key: [Comparison per T]}."""
+    comps = iter(compare_grid(entries, **kw))
+    return {key: [next(comps) for _ in fixed_intervals] for key in keys}
+
 
 def fig4_static(
     mtbfs: Sequence[float] = PAPER_MTBFS,
@@ -133,11 +259,9 @@ def fig4_static(
     **kw,
 ) -> Dict[float, List[Comparison]]:
     """Fig. 4 left: constant departure rates (MTBF = 4000/7200/14400 s)."""
-    return {
-        m: [compare(mtbf_fn=constant_mtbf(m), mtbf0=m, fixed_T=T, **kw)
-            for T in fixed_intervals]
-        for m in mtbfs
-    }
+    entries = [GridEntry(scenario("constant", mtbf=m), mtbf0=m, fixed_T=T)
+               for m in mtbfs for T in fixed_intervals]
+    return _grid(entries, mtbfs, fixed_intervals, kw)
 
 
 def fig4_dynamic(
@@ -147,11 +271,10 @@ def fig4_dynamic(
     **kw,
 ) -> Dict[float, List[Comparison]]:
     """Fig. 4 right: departure rate doubles over 20 hours."""
-    return {
-        m: [compare(mtbf_fn=doubling_mtbf(m, double_after), mtbf0=m, fixed_T=T, **kw)
-            for T in fixed_intervals]
-        for m in mtbfs
-    }
+    entries = [GridEntry(scenario("doubling", mtbf0=m, double_after=double_after),
+                         mtbf0=m, fixed_T=T)
+               for m in mtbfs for T in fixed_intervals]
+    return _grid(entries, mtbfs, fixed_intervals, kw)
 
 
 def fig5_v_sweep(
@@ -161,11 +284,10 @@ def fig5_v_sweep(
     **kw,
 ) -> Dict[float, List[Comparison]]:
     """Fig. 5 left: vary checkpoint overhead V at fixed T_d=50s, MTBF=7200s."""
-    return {
-        v: [compare(mtbf_fn=constant_mtbf(mtbf), mtbf0=mtbf, fixed_T=T, V=v, **kw)
-            for T in fixed_intervals]
-        for v in overheads
-    }
+    entries = [GridEntry(scenario("constant", mtbf=mtbf), mtbf0=mtbf,
+                         fixed_T=T, V=v)
+               for v in overheads for T in fixed_intervals]
+    return _grid(entries, overheads, fixed_intervals, kw)
 
 
 def fig5_td_sweep(
@@ -175,11 +297,32 @@ def fig5_td_sweep(
     **kw,
 ) -> Dict[float, List[Comparison]]:
     """Fig. 5 right: vary image download overhead T_d at fixed V=20s."""
-    return {
-        td: [compare(mtbf_fn=constant_mtbf(mtbf), mtbf0=mtbf, fixed_T=T, T_d=td, **kw)
-             for T in fixed_intervals]
-        for td in downloads
-    }
+    entries = [GridEntry(scenario("constant", mtbf=mtbf), mtbf0=mtbf,
+                         fixed_T=T, T_d=td)
+               for td in downloads for T in fixed_intervals]
+    return _grid(entries, downloads, fixed_intervals, kw)
+
+
+def scenario_sweep(
+    scenarios: Sequence[Scenario],
+    fixed_T: float = 1800.0,
+    mtbf0: float = 7200.0,
+    **kw,
+) -> Dict[str, Comparison]:
+    """Beyond-paper: Eq. 11 across arbitrary registry scenarios, one batch.
+
+    Keys are scenario names; duplicates (several parameterizations of one
+    kind) are disambiguated with a ``#i`` suffix rather than silently
+    overwriting each other.
+    """
+    entries = [GridEntry(s, mtbf0=mtbf0, fixed_T=fixed_T) for s in scenarios]
+    comps = compare_grid(entries, **kw)
+    names = [s.name for s in scenarios]
+    out = {}
+    for i, (name, c) in enumerate(zip(names, comps)):
+        key = name if names.count(name) == 1 else f"{name}#{i}"
+        out[key] = c
+    return out
 
 
 def summarize(results: Dict[float, List[Comparison]]) -> str:

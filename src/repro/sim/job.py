@@ -30,6 +30,7 @@ from repro.sim.network import ChurnNetwork, MtbfFn
 
 
 class CheckpointPolicy(Protocol):
+    def tick(self, now: float) -> None: ...
     def interval(self) -> float: ...
     def on_checkpoint(self, overhead: float) -> None: ...
     def on_restore(self, downtime: float) -> None: ...
@@ -41,6 +42,9 @@ class FixedIntervalPolicy:
     """The naive baseline: user-chosen constant interval (Sec 1.2.2)."""
 
     T: float
+
+    def tick(self, now: float) -> None:  # pragma: no cover - noop
+        pass
 
     def interval(self) -> float:
         return self.T
@@ -60,6 +64,9 @@ class AdaptivePolicy:
     """The paper's adaptive scheme driving the simulated job."""
 
     controller: AdaptiveCheckpointController
+
+    def tick(self, now: float) -> None:  # pragma: no cover - noop
+        pass
 
     def interval(self) -> float:
         return self.controller.checkpoint_interval()
@@ -176,8 +183,7 @@ def simulate_job(
                 n_failures=n_fail, wasted_work=wasted, checkpoint_time=ckpt_time,
                 restore_time=restore_time, completed=False,
             )
-        if isinstance(policy, OraclePolicy):
-            policy.tick(t)
+        policy.tick(t)
         interval = max(policy.interval(), 1e-3)
         work_target = min(interval, work_required - done)
         # The cycle: work_target seconds of compute, then (if not finished)

@@ -16,11 +16,16 @@ from typing import Callable, Iterator, Optional
 
 import numpy as np
 
+from repro.sim.scenarios import Scenario, scenario
+
 MtbfFn = Callable[[float], float]  # wall time (s) -> current MTBF (s)
 
 
 def constant_mtbf(mtbf: float) -> MtbfFn:
-    return lambda t: mtbf
+    """Constant-rate ``MtbfFn``, tagged with its registry :class:`Scenario`
+    so :func:`repro.sim.experiments.compare` can route it onto the batched
+    engine (the tag rides on the callable's ``.scenario`` attribute)."""
+    return scenario("constant", mtbf=mtbf).mtbf_fn
 
 
 def doubling_mtbf(mtbf0: float, double_after: float = 20 * 3600.0,
@@ -30,9 +35,11 @@ def doubling_mtbf(mtbf0: float, double_after: float = 20 * 3600.0,
     ``mtbf_floor`` bounds the decay: the paper's trace data (Sec 2) never
     shows session times below minutes, and an unbounded doubling schedule
     makes censored (livelocked) fixed-interval runs generate exponentially
-    many churn events.
+    many churn events.  Tagged with its :class:`Scenario` like
+    :func:`constant_mtbf`.
     """
-    return lambda t: max(mtbf0 / (2.0 ** (t / double_after)), mtbf_floor)
+    return scenario("doubling", mtbf0=mtbf0, double_after=double_after,
+                    mtbf_floor=mtbf_floor).mtbf_fn
 
 
 @dataclass(frozen=True)
@@ -49,21 +56,39 @@ class ChurnNetwork:
     job state — the paper's failure model).
     """
 
-    def __init__(self, n_slots: int, mtbf_fn: MtbfFn, rng: np.random.Generator):
+    def __init__(self, n_slots: int, mtbf_fn: MtbfFn, rng: np.random.Generator,
+                 lifetime_sampler: Optional[Callable[[np.random.Generator, float], float]] = None):
+        """``lifetime_sampler(rng, birth)`` overrides the default
+        Exp(mtbf_fn(birth)) session lengths — e.g. heavy-tailed Weibull
+        lifetimes from the scenario registry."""
         if n_slots <= 0:
             raise ValueError("need at least one peer slot")
         self.n_slots = n_slots
         self.mtbf_fn = mtbf_fn
         self.rng = rng
+        self.lifetime_sampler = lifetime_sampler
         self._heap: list[tuple[float, int, float]] = []  # (death_time, slot, birth_time)
         for slot in range(n_slots):
             self._spawn(slot, birth=0.0)
 
+    @classmethod
+    def from_scenario(cls, scen: Scenario, n_slots: int,
+                      rng: np.random.Generator) -> "ChurnNetwork":
+        """Build a network whose churn follows a registry scenario, including
+        its lifetime distribution (Weibull scenarios sample true heavy
+        tails here; the batched engine approximates them by renewal rate)."""
+        return cls(n_slots, scen.mtbf_fn, rng, lifetime_sampler=scen.sample_lifetime)
+
     def _spawn(self, slot: int, birth: float) -> None:
-        mtbf = self.mtbf_fn(birth)
-        if mtbf <= 0:
-            raise ValueError(f"MTBF must be positive, got {mtbf} at t={birth}")
-        lifetime = self.rng.exponential(mtbf)
+        if self.lifetime_sampler is not None:
+            lifetime = float(self.lifetime_sampler(self.rng, birth))
+            if lifetime <= 0:
+                raise ValueError(f"sampled lifetime must be positive, got {lifetime}")
+        else:
+            mtbf = self.mtbf_fn(birth)
+            if mtbf <= 0:
+                raise ValueError(f"MTBF must be positive, got {mtbf} at t={birth}")
+            lifetime = self.rng.exponential(mtbf)
         heapq.heappush(self._heap, (birth + lifetime, slot, birth))
 
     def next_death(self) -> DeathEvent:

@@ -1,0 +1,262 @@
+"""Churn scenario registry shared by both simulation engines.
+
+A :class:`Scenario` describes the per-peer failure environment as a
+(possibly time-varying) hazard rate plus, where it differs, a session
+lifetime sampler.  The same object drives
+
+* the per-event reference simulator (:mod:`repro.sim.network` /
+  :mod:`repro.sim.job`) through :attr:`Scenario.mtbf_fn` and
+  :meth:`Scenario.sample_lifetime`, and
+* the batched Monte-Carlo engine (:mod:`repro.sim.engine`) through the
+  vectorized :func:`hazard_kernel`, which is branchless so heterogeneous
+  scenarios can share one ``vmap``/``lax.scan`` batch.
+
+Scenarios are registered by name so experiment grids, benchmarks, and the
+CLI can enumerate them:
+
+    >>> from repro.sim.scenarios import scenario, available_scenarios
+    >>> s = scenario("diurnal", mtbf=7200.0, amplitude=0.5)
+    >>> sorted(available_scenarios())  # doctest: +ELLIPSIS
+    ['constant', 'diurnal', 'doubling', 'flash_crowd', 'trace', 'weibull']
+
+The paper evaluates constant and doubling departure rates (Fig. 4); the
+diurnal, flash-crowd, Weibull, and trace scenarios extend the evaluation to
+the richer churn observed in BOINC/Gnutella-style deployments (Sec 2).
+"""
+from __future__ import annotations
+
+import bisect
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Sequence, Tuple
+
+import numpy as np
+
+# Stable kind ids — the batched engine selects hazard formulas branchlessly
+# with these (see hazard_kernel), so the numbering is part of the contract.
+CONSTANT, DOUBLING, DIURNAL, FLASH_CROWD, WEIBULL, TRACE = range(6)
+
+_TWO_PI = 2.0 * math.pi
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A named churn environment.
+
+    ``params`` is a fixed-width tuple so heterogeneous scenarios stack into
+    one ``[B, 4]`` array for the batched engine; unused slots hold 1.0 (a
+    benign value for every formula) rather than 0 to keep the branchless
+    kernel free of spurious divides.  ``trace_t``/``trace_mtbf`` are only
+    populated for the trace kind.
+    """
+
+    name: str
+    kind: int
+    params: Tuple[float, float, float, float]
+    trace_t: Tuple[float, ...] = ()
+    trace_mtbf: Tuple[float, ...] = ()
+
+    # ------------------------------------------------------------------ #
+    # Scalar path (reference simulator, oracle policy).                   #
+    # ------------------------------------------------------------------ #
+    def mtbf(self, t: float) -> float:
+        """Per-peer MTBF (1/hazard) at wall time ``t`` — pure-python fast
+        path; the per-event simulator calls this once per session spawn."""
+        p0, p1, p2, p3 = self.params
+        if self.kind == CONSTANT:
+            return p0
+        if self.kind == DOUBLING:
+            return max(p0 * 2.0 ** (-t / p1), p2)
+        if self.kind == DIURNAL:
+            return p0 / (1.0 + p1 * math.sin(_TWO_PI * (t + p3) / p2))
+        if self.kind == FLASH_CROWD:
+            return p1 if p2 <= t < p2 + p3 else p0
+        if self.kind == WEIBULL:
+            return p2  # steady-state effective MTBF = E[lifetime]
+        # TRACE: piecewise-constant, holding the last value past the end.
+        i = bisect.bisect_right(self.trace_t, t) - 1
+        return self.trace_mtbf[max(i, 0)]
+
+    def hazard_scalar(self, t: float) -> float:
+        return 1.0 / self.mtbf(t)
+
+    @property
+    def mtbf_fn(self) -> Callable[[float], float]:
+        """An ``MtbfFn`` for :class:`repro.sim.network.ChurnNetwork`.
+
+        The returned callable is tagged with ``.scenario`` so higher layers
+        (``repro.sim.experiments.compare``) can recover the structured
+        scenario from legacy ``mtbf_fn=`` arguments and route them onto the
+        batched engine.
+        """
+        mtbf = self.mtbf
+
+        def wrapped(t: float) -> float:
+            return mtbf(t)
+
+        wrapped.scenario = self  # type: ignore[attr-defined]
+        return wrapped
+
+    def sample_lifetime(self, rng: np.random.Generator, birth: float) -> float:
+        """One session lifetime for a peer born at ``birth`` (reference sim).
+
+        Exponential with the birth-time MTBF for every kind except Weibull,
+        which draws true heavy-tailed lifetimes (the batched engine models
+        Weibull by its steady-state renewal rate instead — DESIGN.md Sec 4).
+        """
+        if self.kind == WEIBULL:
+            scale, shape = self.params[0], self.params[1]
+            return float(scale * rng.weibull(shape))
+        return float(rng.exponential(self.mtbf(birth)))
+
+
+# --------------------------------------------------------------------------- #
+# Vectorized hazard kernel (batched engine).                                   #
+# --------------------------------------------------------------------------- #
+
+def hazard_kernel(t, kind, p, trace_t, trace_mtbf, xp):
+    """Branchless per-peer failure rate for a batch of cells.
+
+    Shapes: ``t`` [B], ``kind`` [B] int, ``p`` [B, 4], ``trace_t`` /
+    ``trace_mtbf`` [B, L] (dummy length-2 rows for non-trace cells).  ``xp``
+    is ``numpy`` or ``jax.numpy``; every branch is evaluated and selected
+    with ``where`` so the same code jits under ``lax.scan``.
+    """
+    p0, p1, p2, p3 = p[..., 0], p[..., 1], p[..., 2], p[..., 3]
+    r_const = 1.0 / p0
+    r_doub = 1.0 / xp.maximum(p0 * xp.exp2(-t / p1), p2)
+    r_diur = (1.0 + p1 * xp.sin(_TWO_PI * (t + p3) / p2)) / p0
+    in_spike = (t >= p2) & (t < p2 + p3)
+    r_flash = 1.0 / xp.where(in_spike, p1, p0)
+    r_weib = 1.0 / p2
+    # Piecewise-constant trace lookup; L is small so the O(L) mask-sum is
+    # cheaper (and jit-friendlier) than batched searchsorted.
+    idx = xp.sum((trace_t <= t[..., None]).astype(p.dtype), axis=-1) - 1.0
+    idx = xp.clip(idx, 0, trace_t.shape[-1] - 1).astype(kind.dtype)
+    m_trace = xp.take_along_axis(trace_mtbf, idx[..., None], axis=-1)[..., 0]
+    r_trace = 1.0 / m_trace
+
+    rate = xp.where(kind == CONSTANT, r_const,
+           xp.where(kind == DOUBLING, r_doub,
+           xp.where(kind == DIURNAL, r_diur,
+           xp.where(kind == FLASH_CROWD, r_flash,
+           xp.where(kind == WEIBULL, r_weib, r_trace)))))
+    return rate
+
+
+# --------------------------------------------------------------------------- #
+# Registry.                                                                    #
+# --------------------------------------------------------------------------- #
+
+_REGISTRY: Dict[str, Callable[..., Scenario]] = {}
+
+
+def register_scenario(name: str):
+    """Decorator: register a scenario factory under ``name``."""
+
+    def deco(factory: Callable[..., Scenario]):
+        if name in _REGISTRY:
+            raise ValueError(f"scenario {name!r} already registered")
+        _REGISTRY[name] = factory
+        return factory
+
+    return deco
+
+
+def scenario(name: str, **kwargs) -> Scenario:
+    """Instantiate a registered scenario by name."""
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; available: {sorted(_REGISTRY)}") from None
+    return factory(**kwargs)
+
+
+def available_scenarios() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+@register_scenario("constant")
+def constant(mtbf: float = 7200.0) -> Scenario:
+    """Constant departure rate (paper Fig. 4 left)."""
+    if mtbf <= 0:
+        raise ValueError("mtbf must be positive")
+    return Scenario("constant", CONSTANT, (float(mtbf), 1.0, 1.0, 1.0))
+
+
+@register_scenario("doubling")
+def doubling(mtbf0: float = 7200.0, double_after: float = 20 * 3600.0,
+             mtbf_floor: float = 300.0) -> Scenario:
+    """Failure rate doubles every ``double_after`` seconds (Fig. 4 right).
+
+    ``mtbf_floor`` bounds the decay — trace data (Sec 2) never shows session
+    times below minutes, and an unbounded schedule makes censored runs
+    generate exponentially many events.
+    """
+    if min(mtbf0, double_after, mtbf_floor) <= 0:
+        raise ValueError("mtbf0, double_after, mtbf_floor must be positive")
+    return Scenario("doubling", DOUBLING,
+                    (float(mtbf0), float(double_after), float(mtbf_floor), 1.0))
+
+
+@register_scenario("diurnal")
+def diurnal(mtbf: float = 7200.0, amplitude: float = 0.6,
+            period: float = 86400.0, phase: float = 0.0) -> Scenario:
+    """Sinusoidal day/night churn: rate(t) = (1 + a sin(2pi (t+phase)/P)) / mtbf.
+
+    Volunteer populations churn hardest when users reclaim their machines
+    (evenings); ``amplitude`` in [0, 1) is the relative swing of the rate.
+    """
+    if not 0.0 <= amplitude < 1.0:
+        raise ValueError("amplitude must be in [0, 1)")
+    if mtbf <= 0 or period <= 0:
+        raise ValueError("mtbf and period must be positive")
+    return Scenario("diurnal", DIURNAL,
+                    (float(mtbf), float(amplitude), float(period), float(phase)))
+
+
+@register_scenario("flash_crowd")
+def flash_crowd(mtbf: float = 7200.0, spike_mtbf: float = 900.0,
+                at: float = 6 * 3600.0, duration: float = 2 * 3600.0) -> Scenario:
+    """A correlated departure spike: MTBF drops to ``spike_mtbf`` during
+    [at, at + duration) — e.g. a popular event pulling volunteers away."""
+    if min(mtbf, spike_mtbf, duration) <= 0 or at < 0:
+        raise ValueError("mtbf, spike_mtbf, duration must be positive; at >= 0")
+    return Scenario("flash_crowd", FLASH_CROWD,
+                    (float(mtbf), float(spike_mtbf), float(at), float(duration)))
+
+
+@register_scenario("weibull")
+def weibull(scale: float = 7200.0, shape: float = 0.6) -> Scenario:
+    """Heavy-tailed session lifetimes ~ Weibull(scale, shape).
+
+    ``shape < 1`` gives the decreasing hazard seen in P2P traces (many
+    short-lived peers, a long-lived core).  The reference simulator samples
+    true Weibull lifetimes; the batched engine uses the steady-state renewal
+    rate 1 / E[lifetime] = 1 / (scale * Gamma(1 + 1/shape)).
+    """
+    if scale <= 0 or shape <= 0:
+        raise ValueError("scale and shape must be positive")
+    mean = scale * math.gamma(1.0 + 1.0 / shape)
+    return Scenario("weibull", WEIBULL, (float(scale), float(shape), float(mean), 1.0))
+
+
+@register_scenario("trace")
+def trace(times: Sequence[float], mtbfs: Sequence[float]) -> Scenario:
+    """Trace-driven churn: piecewise-constant MTBF from measured arrays.
+
+    ``times`` must be ascending and start at 0; the last MTBF holds forever.
+    """
+    times = tuple(float(t) for t in times)
+    mtbfs = tuple(float(m) for m in mtbfs)
+    if len(times) != len(mtbfs) or not times:
+        raise ValueError("times and mtbfs must be equal-length and non-empty")
+    if times[0] != 0.0 or any(b <= a for a, b in zip(times, times[1:])):
+        raise ValueError("times must be strictly ascending and start at 0")
+    if min(mtbfs) <= 0:
+        raise ValueError("mtbfs must be positive")
+    if len(times) == 1:  # pad so batched interp always has >= 2 points
+        times, mtbfs = times + (times[0] + 1.0,), mtbfs * 2
+    return Scenario("trace", TRACE, (1.0, 1.0, 1.0, 1.0),
+                    trace_t=times, trace_mtbf=mtbfs)

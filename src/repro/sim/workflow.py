@@ -1,0 +1,227 @@
+"""Work flows of inter-dependent jobs on the churn network (paper's target).
+
+The paper's deployment model (and Rahman et al.'s "Checkpointing to minimize
+completion time for Inter-dependent Parallel Processes on Volunteer Grids")
+is not a single monolithic job but a *work flow*: a DAG of stages where each
+stage is itself a k-peer checkpointed job and edges carry checkpoint-image /
+intermediate-result hand-offs.
+
+Semantics (DESIGN.md Sec 5):
+
+* A stage becomes *ready* when every dependency has finished; before
+  computing it must fetch each dependency's output, paying that edge's
+  hand-off cost.  A churn event among the stage's k peers during a fetch
+  loses the partial transfer and forces a retry (the same failure model the
+  engine applies to restore downloads).
+* The stage then runs as one engine cell, offset to its absolute start time
+  so time-varying scenarios (doubling, diurnal, flash crowd) stay aligned
+  across the whole workflow.
+* Failure propagation is containment by checkpointing: a stage's committed
+  output survives peer churn (it lives in the P2P checkpoint store), so an
+  upstream death never un-finishes a finished stage — it only delays
+  dependents through the critical path.  A *censored* (livelocked) stage,
+  however, never produces output: every transitive dependent is marked
+  unfinished and the workflow is reported incomplete.
+
+Every stage x seed cell is simulated with the batched engine; stages are
+batched across seeds, so a whole workflow costs one engine call per stage.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.sim.engine import BatchResult, CellSpec, PolicyConfig, run_cells
+from repro.sim.scenarios import Scenario, hazard_kernel
+
+
+@dataclass(frozen=True)
+class Stage:
+    """One checkpointed job inside the workflow DAG."""
+
+    name: str
+    work: float                      # fault-free compute seconds
+    k: int = 16                      # peers running this stage
+    deps: Tuple[str, ...] = ()       # names of stages whose output we consume
+    handoff: float = 0.0             # seconds to fetch EACH dependency's output
+    V: Optional[float] = None        # per-stage checkpoint overhead override
+    T_d: Optional[float] = None      # per-stage restore overhead override
+
+
+@dataclass(frozen=True)
+class WorkflowSpec:
+    """A validated DAG of stages."""
+
+    stages: Tuple[Stage, ...]
+
+    def __post_init__(self) -> None:
+        names = [s.name for s in self.stages]
+        if len(set(names)) != len(names):
+            raise ValueError("stage names must be unique")
+        known = set(names)
+        for s in self.stages:
+            missing = set(s.deps) - known
+            if missing:
+                raise ValueError(f"stage {s.name!r} depends on unknown {sorted(missing)}")
+            if s.work <= 0 or s.k <= 0 or s.handoff < 0:
+                raise ValueError(f"stage {s.name!r}: need work>0, k>0, handoff>=0")
+        self.topo_order()  # raises on cycles
+
+    def __len__(self) -> int:
+        return len(self.stages)
+
+    def topo_order(self) -> Tuple[Stage, ...]:
+        """Kahn topological sort; raises ValueError on cycles."""
+        by_name = {s.name: s for s in self.stages}
+        indeg = {s.name: len(s.deps) for s in self.stages}
+        dependents: Dict[str, List[str]] = {s.name: [] for s in self.stages}
+        for s in self.stages:
+            for d in s.deps:
+                dependents[d].append(s.name)
+        ready = [n for n, d in indeg.items() if d == 0]
+        order: List[Stage] = []
+        while ready:
+            n = ready.pop()
+            order.append(by_name[n])
+            for m in dependents[n]:
+                indeg[m] -= 1
+                if indeg[m] == 0:
+                    ready.append(m)
+        if len(order) != len(self.stages):
+            cyclic = sorted(n for n, d in indeg.items() if d > 0)
+            raise ValueError(f"workflow DAG has a cycle through {cyclic}")
+        return tuple(order)
+
+
+@dataclass(frozen=True)
+class StageResult:
+    """Per-seed timings of one stage (arrays of shape [n_seeds])."""
+
+    stage: Stage
+    ready: np.ndarray      # all deps finished
+    start: np.ndarray      # ready + hand-off transfers (incl. churn retries)
+    finish: np.ndarray     # start + simulated stage wall time
+    handoff_time: np.ndarray
+    sim: BatchResult
+    completed: np.ndarray  # stage AND all its deps completed
+
+    @property
+    def mean_wall(self) -> float:
+        return float(np.mean(self.finish - self.start))
+
+
+@dataclass(frozen=True)
+class WorkflowResult:
+    stages: Dict[str, StageResult]
+    makespan: np.ndarray       # per-seed absolute finish of the last stage
+    completed: np.ndarray      # per-seed: every stage completed
+    critical_path: Tuple[str, ...]  # chain maximizing mean finish times
+
+    @property
+    def mean_makespan(self) -> float:
+        return float(np.mean(self.makespan))
+
+    @property
+    def all_completed(self) -> bool:
+        return bool(self.completed.all())
+
+
+def _handoff_times(rng: np.random.Generator, scen: Scenario, k: int,
+                   t_start: np.ndarray, total: float,
+                   max_time: float) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized churn-exposed transfer: fetch ``total`` seconds of output
+    starting at per-seed times ``t_start``; a churn event among the k
+    consuming peers restarts the transfer (same model as engine restores).
+
+    Returns (elapsed, completed).  A transfer whose retries exceed
+    ``max_time`` is censored — the stage's churn can livelock a hand-off
+    exactly like it livelocks a job, and must be reported, not spun on.
+    """
+    n = t_start.shape[0]
+    if total <= 0.0:
+        return np.zeros_like(t_start), np.ones(n, dtype=bool)
+    t = t_start.astype(np.float64).copy()
+    pending = np.ones(n, dtype=bool)
+    ok_flags = np.ones(n, dtype=bool)
+    kind = np.full(n, scen.kind)
+    p = np.broadcast_to(np.asarray(scen.params), (n, 4))
+    trace_t = np.asarray(scen.trace_t or (0.0, 1.0))[None, :]
+    trace_m = np.asarray(scen.trace_mtbf or (1.0, 1.0))[None, :]
+    while pending.any():
+        kmu = k * hazard_kernel(t, kind, p, trace_t, trace_m, np)
+        u = rng.uniform(size=n)
+        t_fail = -np.log1p(-u) / kmu
+        ok = pending & (t_fail >= total)
+        retry = pending & ~ok
+        t = np.where(ok, t + total, np.where(retry, t + t_fail, t))
+        censor = retry & (t - t_start > max_time)
+        ok_flags &= ~censor
+        pending = retry & ~censor
+    return t - t_start, ok_flags
+
+
+def simulate_workflow(
+    spec: WorkflowSpec,
+    scen: Scenario,
+    *,
+    policy: PolicyConfig = PolicyConfig(kind="adaptive"),
+    seeds: Sequence[int] = (0, 1, 2, 3),
+    V: float = 20.0,
+    T_d: float = 50.0,
+    n_slots: int = 128,
+    max_wall_factor: float = 50.0,
+    backend: str = "auto",
+) -> WorkflowResult:
+    """Run the whole DAG under churn, batched across seeds per stage."""
+    seeds = list(seeds)
+    n = len(seeds)
+    order = spec.topo_order()
+    rng = np.random.default_rng(np.random.SeedSequence(list(seeds)))
+    finish: Dict[str, np.ndarray] = {}
+    completed: Dict[str, np.ndarray] = {}
+    results: Dict[str, StageResult] = {}
+
+    for idx, stage in enumerate(order):
+        ready = np.zeros(n)
+        deps_ok = np.ones(n, dtype=bool)
+        for d in stage.deps:
+            ready = np.maximum(ready, finish[d])
+            deps_ok &= completed[d]
+        total_handoff = stage.handoff * len(stage.deps)
+        handoff, handoff_ok = _handoff_times(
+            rng, scen, stage.k, ready, total_handoff,
+            max_time=max_wall_factor * max(total_handoff, stage.work))
+        deps_ok &= handoff_ok
+        start = ready + handoff
+        v = stage.V if stage.V is not None else V
+        td = stage.T_d if stage.T_d is not None else T_d
+        cells = [
+            CellSpec(scenario=scen, policy=policy, seed=1000 * idx + s,
+                     k=stage.k, work=stage.work, V=v, T_d=td, n_slots=n_slots,
+                     max_wall_time=max_wall_factor * stage.work, t0=float(start[i]))
+            for i, s in enumerate(seeds)
+        ]
+        sim = run_cells(cells, backend=backend)
+        fin = start + sim.wall_time
+        ok = deps_ok & sim.completed
+        finish[stage.name] = fin
+        completed[stage.name] = ok
+        results[stage.name] = StageResult(stage=stage, ready=ready, start=start,
+                                          finish=fin, handoff_time=handoff,
+                                          sim=sim, completed=ok)
+
+    makespan = np.max(np.stack([finish[s.name] for s in spec.stages]), axis=0)
+    all_ok = np.all(np.stack([completed[s.name] for s in spec.stages]), axis=0)
+
+    # Critical path: walk back from the stage with the largest mean finish
+    # through the dependency that gated each start.
+    by_name = {s.name: s for s in spec.stages}
+    cur = max(results, key=lambda nme: float(np.mean(results[nme].finish)))
+    path = [cur]
+    while by_name[cur].deps:
+        cur = max(by_name[cur].deps, key=lambda d: float(np.mean(results[d].finish)))
+        path.append(cur)
+    return WorkflowResult(stages=results, makespan=makespan, completed=all_ok,
+                          critical_path=tuple(reversed(path)))

@@ -1,6 +1,7 @@
 """MLE failure-rate estimation (paper Sec 3.1.1) + gossip merge (Sec 3.1.4)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

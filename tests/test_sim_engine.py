@@ -1,0 +1,281 @@
+"""Batched engine vs per-event reference: parity, invariants, scenarios, DAGs.
+
+The batched engine (repro.sim.engine) must be statistically interchangeable
+with the heap simulator (repro.sim.job) — same failure process, same policy
+behaviour, same censoring semantics.  Exact invariants are checked per cell;
+distributional parity is checked on mean wall times over many seeds with a
+tolerance band (both estimators are unbiased, so the gap shrinks as 1/sqrt(N)).
+"""
+import numpy as np
+import pytest
+
+from repro.sim import (
+    CellSpec,
+    ChurnNetwork,
+    FixedIntervalPolicy,
+    PolicyConfig,
+    Stage,
+    WorkflowSpec,
+    available_scenarios,
+    compare,
+    constant_mtbf,
+    fig4_static,
+    run_cells,
+    scenario,
+    scenario_sweep,
+    simulate_job,
+    simulate_workflow,
+)
+from repro.sim.scenarios import hazard_kernel
+
+V, TD = 20.0, 50.0
+
+
+def _heap_mean(scen, policy_factory, *, seeds, k=16, work=6 * 3600.0,
+               n_slots=128, max_wall=None, **sim_kw):
+    walls, res = [], []
+    for s in seeds:
+        rng = np.random.default_rng(s)
+        net = ChurnNetwork.from_scenario(scen, n_slots, rng)
+        r = simulate_job(network=net, policy=policy_factory(), k=k,
+                         work_required=work, V=V, T_d=TD,
+                         max_wall_time=max_wall or float("inf"), **sim_kw)
+        walls.append(r.wall_time)
+        res.append(r)
+    return float(np.mean(walls)), res
+
+
+# --------------------------------------------------------------- registry
+def test_registry_names_and_factories():
+    names = available_scenarios()
+    for expected in ("constant", "doubling", "diurnal", "flash_crowd",
+                     "weibull", "trace"):
+        assert expected in names
+    with pytest.raises(KeyError):
+        scenario("nope")
+    with pytest.raises(ValueError):
+        scenario("diurnal", amplitude=1.5)
+    with pytest.raises(ValueError):
+        scenario("trace", times=(0.0, 1.0), mtbfs=(100.0,))
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("constant", dict(mtbf=5000.0)),
+    ("doubling", dict(mtbf0=7200.0, double_after=3600.0)),
+    ("diurnal", dict(mtbf=7200.0, amplitude=0.5, period=86400.0)),
+    ("flash_crowd", dict(mtbf=7200.0, spike_mtbf=600.0, at=3600.0, duration=1800.0)),
+    ("weibull", dict(scale=7200.0, shape=0.7)),
+    ("trace", dict(times=(0.0, 3600.0, 7200.0), mtbfs=(4000.0, 2000.0, 8000.0))),
+])
+def test_scalar_mtbf_matches_vectorized_hazard(name, kw):
+    """Scenario.mtbf (heap path) and hazard_kernel (engine path) agree."""
+    s = scenario(name, **kw)
+    ts = np.asarray([0.0, 1800.0, 3599.0, 3600.0, 5400.0, 40000.0, 2e5])
+    B = ts.shape[0]
+    kind = np.full(B, s.kind)
+    p = np.broadcast_to(np.asarray(s.params), (B, 4))
+    L = max(2, len(s.trace_t))
+    tt = np.zeros((B, L))
+    tm = np.ones((B, L))
+    if s.trace_t:
+        tt[:, :len(s.trace_t)] = s.trace_t
+        tm[:, :len(s.trace_mtbf)] = s.trace_mtbf
+    rates = hazard_kernel(ts, kind, p, tt, tm, np)
+    for t, r in zip(ts, rates):
+        assert r == pytest.approx(1.0 / s.mtbf(float(t)), rel=1e-12), (name, t)
+
+
+def test_mtbf_fn_is_tagged_and_matches():
+    fn = constant_mtbf(4321.0)
+    assert fn.scenario.kind == scenario("constant", mtbf=4321.0).kind
+    assert fn(0.0) == 4321.0
+    assert fn(1e6) == 4321.0
+
+
+def test_weibull_heap_lifetimes_are_heavy_tailed():
+    s = scenario("weibull", scale=7200.0, shape=0.5)
+    rng = np.random.default_rng(0)
+    lifes = np.asarray([s.sample_lifetime(rng, 0.0) for _ in range(4000)])
+    # Mean matches scale * Gamma(1 + 1/shape) = 2 * scale for shape=0.5 ...
+    assert lifes.mean() == pytest.approx(2 * 7200.0, rel=0.15)
+    # ... and the tail is heavier than exponential with the same mean.
+    expo = rng.exponential(lifes.mean(), size=4000)
+    assert np.quantile(lifes, 0.99) > np.quantile(expo, 0.99)
+
+
+# ------------------------------------------------------- exact invariants
+def _cells(scen, pol, n, **kw):
+    base = dict(k=16, work=6 * 3600.0, V=V, T_d=TD)
+    base.update(kw)
+    return [CellSpec(scenario=scen, policy=pol, seed=s, **base) for s in range(n)]
+
+
+def test_engine_invariants_completed_cells():
+    res = run_cells(_cells(scenario("constant", mtbf=7200.0),
+                           PolicyConfig(kind="fixed", fixed_T=600.0), 16),
+                    backend="numpy")
+    assert res.completed.all()
+    assert (res.wall_time >= res.work_required).all()
+    total = (res.work_required + res.checkpoint_time + res.restore_time
+             + res.wasted_work)
+    np.testing.assert_allclose(res.wall_time, total, rtol=1e-9)
+
+
+def test_engine_no_churn_exact_schedule():
+    """Mirror of the heap's no-churn test: 3600s at T=600 => 5 checkpoints."""
+    res = run_cells(_cells(scenario("constant", mtbf=1e15),
+                           PolicyConfig(kind="fixed", fixed_T=600.0), 4,
+                           work=3600.0),
+                    backend="numpy")
+    assert (res.n_failures == 0).all()
+    assert (res.n_checkpoints == 5).all()
+    np.testing.assert_allclose(res.wall_time, 3600.0 + 5 * V, rtol=1e-12)
+
+
+def test_engine_censors_livelocked_cells():
+    """Absurd fixed interval under heavy churn: both engines censor."""
+    scen = scenario("constant", mtbf=600.0)
+    max_wall = 48 * 3600.0
+    res = run_cells(_cells(scen, PolicyConfig(kind="fixed", fixed_T=86400.0), 4,
+                           work=4 * 3600.0, max_wall_time=max_wall),
+                    backend="numpy")
+    assert not res.completed.any()
+    assert (res.wall_time >= max_wall).all()
+    _, heap = _heap_mean(scen, lambda: FixedIntervalPolicy(86400.0),
+                         seeds=range(4), work=4 * 3600.0, max_wall=max_wall)
+    assert not any(r.completed for r in heap)  # censoring flags agree
+
+
+# ------------------------------------------------- distributional parity
+def test_parity_fixed_policy_mean_wall():
+    """Same scenario, fixed policy: engine and heap means agree within band."""
+    scen = scenario("constant", mtbf=7200.0)
+    n = 64
+    res = run_cells(_cells(scen, PolicyConfig(kind="fixed", fixed_T=600.0), n),
+                    backend="numpy", macro_threshold=0.0)
+    heap_mean, _ = _heap_mean(scen, lambda: FixedIntervalPolicy(600.0),
+                              seeds=range(n))
+    assert res.wall_time.mean() == pytest.approx(heap_mean, rel=0.06)
+
+
+def test_parity_adaptive_policy_mean_wall():
+    """Adaptive estimators differ in noise shape, so the band is looser."""
+    scen = scenario("constant", mtbf=7200.0)
+    n = 32
+    from repro.core.adaptive import AdaptiveCheckpointController
+    from repro.sim import AdaptivePolicy
+
+    pol = PolicyConfig(kind="adaptive", prior_mu=1 / 7200.0, prior_v=V)
+    res = run_cells(_cells(scen, pol, n), backend="numpy")
+    heap_mean, _ = _heap_mean(
+        scen,
+        lambda: AdaptivePolicy(AdaptiveCheckpointController(
+            k=16, prior_mu=1 / 7200.0, prior_v=V, mu_window=32)),
+        seeds=range(n))
+    assert res.wall_time.mean() == pytest.approx(heap_mean, rel=0.10)
+
+
+def test_macro_stepping_preserves_means():
+    """Failure-dominated regime: macro bursts match exact stepping."""
+    scen = scenario("constant", mtbf=4000.0)
+    n = 48
+    cells = _cells(scen, PolicyConfig(kind="fixed", fixed_T=1200.0), n,
+                   max_wall_time=50 * 6 * 3600.0)
+    exact = run_cells(cells, backend="numpy", macro_threshold=0.0)
+    fast = run_cells(cells, backend="numpy", macro_threshold=0.05)
+    assert fast.n_steps < exact.n_steps / 10  # it actually fast-forwards
+    assert fast.wall_time.mean() == pytest.approx(exact.wall_time.mean(), rel=0.08)
+    assert fast.n_failures.mean() == pytest.approx(exact.n_failures.mean(), rel=0.08)
+
+
+def test_jax_backend_matches_numpy_backend():
+    jax = pytest.importorskip("jax")
+    del jax
+    scen = scenario("constant", mtbf=7200.0)
+    n = 48
+    cells = _cells(scen, PolicyConfig(kind="fixed", fixed_T=900.0), n)
+    a = run_cells(cells, backend="numpy")
+    b = run_cells(cells, backend="jax")
+    assert b.completed.all()
+    assert b.wall_time.mean() == pytest.approx(a.wall_time.mean(), rel=0.08)
+    total = (b.work_required + b.checkpoint_time + b.restore_time
+             + b.wasted_work)
+    np.testing.assert_allclose(b.wall_time, total, rtol=1e-9)
+
+
+# ------------------------------------------------------- grids & sweeps
+def test_fig4_static_batched_structure_and_result():
+    res = fig4_static(mtbfs=(4000.0,), fixed_intervals=(300.0, 3600.0),
+                      seeds=range(3), work=4 * 3600.0, k=16, backend="numpy")
+    comps = res[4000.0]
+    assert [c.fixed_T for c in comps] == [300.0, 3600.0]
+    # Paper's qualitative claim under high churn: adaptive wins (Eq. 11 > 100).
+    assert all(c.relative_runtime > 100.0 for c in comps)
+
+
+def test_scenario_sweep_mixes_kinds_in_one_batch():
+    scens = [scenario("constant", mtbf=7200.0),
+             scenario("diurnal", mtbf=7200.0, amplitude=0.5),
+             scenario("weibull", scale=7200.0, shape=0.7),
+             scenario("trace", times=(0.0, 7200.0), mtbfs=(7200.0, 3600.0))]
+    out = scenario_sweep(scens, fixed_T=1800.0, seeds=range(2),
+                         work=4 * 3600.0, k=16, backend="numpy")
+    assert set(out) == {"constant", "diurnal", "weibull", "trace"}
+    for c in out.values():
+        assert c.adaptive_wall > 0 and np.isfinite(c.adaptive_wall)
+
+
+def test_compare_untagged_callable_falls_back_to_reference():
+    c = compare(mtbf_fn=lambda t: 7200.0, mtbf0=7200.0, fixed_T=1800.0,
+                seeds=range(2), work=2 * 3600.0, k=8)
+    assert c.adaptive_wall > 0
+
+
+# ------------------------------------------------------------- workflows
+def _chain():
+    return WorkflowSpec(stages=(
+        Stage("a", work=3600.0, k=8),
+        Stage("b", work=2 * 3600.0, k=16, deps=("a",), handoff=120.0),
+        Stage("c", work=1800.0, k=4, deps=("b",), handoff=60.0),
+    ))
+
+
+def test_workflow_chain_runs_end_to_end_under_churn():
+    res = simulate_workflow(_chain(), scenario("constant", mtbf=7200.0),
+                            seeds=range(4), V=V, T_d=TD, backend="numpy")
+    assert res.all_completed
+    a, b, c = (res.stages[n] for n in "abc")
+    assert (b.ready == a.finish).all()
+    assert (b.start >= b.ready + 120.0).all()  # hand-off cost, churn can add
+    assert (c.finish == res.makespan).all()
+    assert res.critical_path == ("a", "b", "c")
+    # Stage wall times include churn overhead: finish - start >= work.
+    for sr in (a, b, c):
+        assert (sr.finish - sr.start >= sr.stage.work).all()
+
+
+def test_workflow_diamond_waits_for_slowest_parent():
+    spec = WorkflowSpec(stages=(
+        Stage("src", work=1800.0, k=8),
+        Stage("fast", work=1800.0, k=8, deps=("src",)),
+        Stage("slow", work=4 * 3600.0, k=8, deps=("src",)),
+        Stage("sink", work=900.0, k=8, deps=("fast", "slow"), handoff=60.0),
+    ))
+    res = simulate_workflow(spec, scenario("constant", mtbf=7200.0),
+                            seeds=range(3), V=V, T_d=TD, backend="numpy")
+    assert (res.stages["sink"].ready ==
+            np.maximum(res.stages["fast"].finish,
+                       res.stages["slow"].finish)).all()
+    # Two hand-offs for the sink.
+    assert (res.stages["sink"].start >= res.stages["sink"].ready + 120.0).all()
+    assert "slow" in res.critical_path
+
+
+def test_workflow_validation():
+    with pytest.raises(ValueError):
+        WorkflowSpec(stages=(Stage("x", 1.0, deps=("missing",)),))
+    with pytest.raises(ValueError):
+        WorkflowSpec(stages=(Stage("x", 1.0, deps=("y",)),
+                             Stage("y", 1.0, deps=("x",))))
+    with pytest.raises(ValueError):
+        WorkflowSpec(stages=(Stage("x", 1.0), Stage("x", 2.0)))
