@@ -3,7 +3,7 @@
 One section per paper table/figure plus the framework benches.  Prints
 ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig4,fig5,kernels,e2e,roofline]
+    PYTHONPATH=src python -m benchmarks.run [--only fig4,fig5,kernels,e2e,roofline,offload]
 """
 from __future__ import annotations
 
@@ -15,7 +15,7 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig4,fig5,kernels,e2e,roofline")
+                    help="comma list: fig4,fig5,kernels,e2e,roofline,offload")
     ap.add_argument("--fast", action="store_true",
                     help="tiny smoke grids (CI): fewer seeds/intervals, short jobs")
     args = ap.parse_args()
@@ -53,6 +53,14 @@ def main() -> None:
         from benchmarks import e2e_adaptive
         for row in e2e_adaptive.run_all(fast=args.fast)[1:]:
             print(row, flush=True)
+
+    if want("offload"):
+        from benchmarks import server_offload
+        t = time.monotonic()
+        for row in server_offload.run_all(fast=args.fast)[1:]:
+            print(row, flush=True)
+        sys.stderr.write(f"[bench] server_offload done in "
+                         f"{time.monotonic() - t:.0f}s\n")
 
     if want("roofline"):
         from benchmarks import roofline

@@ -1,0 +1,54 @@
+"""Server-offload benchmark: P2P checkpoint storage vs the work-pool server.
+
+The paper's architectural claim (abstract, Sec 1-2): storing checkpoints
+on peers off-loads the work-pool server.  This benchmark runs the same
+jobs under the same churn scenarios with checkpoints on the server (R=0:
+every upload and every restore crosses the shared server pipe) and on R
+peer replicas (restores stripe across surviving holders, the server only
+serves the all-replicas-lost fallback), and reports completion time plus
+the aggregate server I/O each mode imposes.
+
+Emits ``name,us_per_call,derived`` rows (harness convention): one row per
+(scenario x R) cell; the derived column carries the CSV payload
+(server GB, wall hours, restore source split).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.p2p import TransferModel
+from repro.sim import scenario, server_offload_sweep
+
+MTBF = 7200.0
+R_VALUES = (0, 3)
+TRANSFER = TransferModel(img_bytes=200e6, peer_uplink=5e6, peer_downlink=50e6,
+                         server_capacity=100e6, server_load=20.0)
+
+KW = dict(seeds=range(8), work=12 * 3600.0, k=16)
+FAST_KW = dict(seeds=range(3), work=4 * 3600.0, k=16)
+
+
+def _scenarios():
+    return [scenario("constant", mtbf=MTBF),
+            scenario("diurnal", mtbf=MTBF, amplitude=0.6),
+            scenario("flash_crowd", mtbf=MTBF, spike_mtbf=900.0,
+                     at=2 * 3600.0, duration=2 * 3600.0)]
+
+
+def run_all(fast: bool = False) -> List[str]:
+    kw = FAST_KW if fast else KW
+    cells = server_offload_sweep(_scenarios(), R_values=R_VALUES,
+                                 transfer=TRANSFER, mtbf0=MTBF, **kw)
+    rows = ["name,us_per_call,derived"]
+    baseline = {c.scenario: c.mean_server_bytes for c in cells if c.R == 0}
+    for c in cells:
+        offload = (1.0 - c.mean_server_bytes / baseline[c.scenario]
+                   if baseline.get(c.scenario) else 0.0)
+        rows.append(
+            f"offload_{c.scenario}_R{c.R},{c.mean_wall * 1e6:.0f},"
+            f"server_GB={c.mean_server_bytes / 1e9:.3f};"
+            f"wall_h={c.mean_wall / 3600:.2f};"
+            f"srv_restores={c.mean_server_restores:.1f};"
+            f"peer_restores={c.mean_peer_restores:.1f};"
+            f"server_io_saved={100 * offload:.1f}%")
+    return rows

@@ -8,10 +8,16 @@ thread, overlapped with subsequent steps.  The measured blocking time is
 reported to the adaptive controller as V — exactly the quantity the paper's
 Eq. 2 probe estimates, but measured directly (DESIGN.md Sec 2).
 
-Replication: each checkpoint is copied to R 'neighbour' stores (distinct
+Replication: each checkpoint is copied to 'neighbour' stores (distinct
 directories standing in for other hosts' disks / other cells' filestores),
-the analogue of the paper's P2P distributed storage.  Restore falls back
-through replicas when the primary is corrupt or missing.
+the analogue of the paper's P2P distributed storage.  Placement follows
+the overlay's rule (:func:`repro.p2p.rendezvous_placement`): when
+``replication_factor`` R is set, each step's image lands on the R
+neighbours that win the deterministic highest-random-weight hash for that
+step — every host computes the same holder set with no coordination, and
+successive steps spread load across the neighbourhood.  ``None`` keeps
+the legacy copy-to-all behaviour.  Restore falls back through replicas
+when the primary is corrupt or missing.
 """
 from __future__ import annotations
 
@@ -27,6 +33,7 @@ import jax
 import numpy as np
 
 from repro.ckpt import store
+from repro.p2p.overlay import rendezvous_placement
 
 Params = Any
 
@@ -36,6 +43,7 @@ class AsyncCheckpointer:
     root: str
     replicas: Sequence[str] = ()
     n_shards: int = 4
+    replication_factor: Optional[int] = None  # R neighbours per step (HRW)
     _q: queue.Queue = field(default_factory=lambda: queue.Queue(maxsize=2), repr=False)
     _thread: Optional[threading.Thread] = field(default=None, repr=False)
     _exc: Optional[BaseException] = field(default=None, repr=False)
@@ -61,7 +69,7 @@ class AsyncCheckpointer:
             try:
                 t0 = time.monotonic()
                 path = store.save_pytree(self.root, step, snapshot, self.n_shards)
-                for r in self.replicas:
+                for r in self._placement(step):
                     dst = os.path.join(r, os.path.basename(path))
                     if os.path.exists(dst):
                         shutil.rmtree(dst)
@@ -72,6 +80,13 @@ class AsyncCheckpointer:
             finally:
                 with self._lock:
                     self._pending -= 1
+
+    def _placement(self, step: int) -> Sequence[str]:
+        """Replica directories receiving this step's image."""
+        if self.replication_factor is None:
+            return self.replicas
+        return rendezvous_placement(f"step_{step}", list(self.replicas),
+                                    self.replication_factor)
 
     # ------------------------------------------------------------------ #
     def save(self, step: int, tree: Params) -> float:
@@ -111,16 +126,23 @@ class AsyncCheckpointer:
 
     # ------------------------------------------------------------------ #
     def restore_latest(self, like: Params) -> Optional[tuple]:
-        """(step, tree) from primary, falling back through replicas."""
+        """(step, tree) from the newest checkpoint found anywhere.
+
+        Candidates from the primary and every replica are tried newest
+        first (ties prefer the primary): with R-way placement the newest
+        image may live only on the HRW-chosen neighbours, and a corrupt or
+        missing copy falls back to the next-newest surviving replica.
+        """
+        found = []
         for root in (self.root, *self.replicas):
-            found = store.latest_checkpoint(root)
-            if found is None:
-                continue
-            step, path = found
+            got = store.latest_checkpoint(root)
+            if got is not None:
+                found.append(got)
+        for step, path in sorted(found, key=lambda sp: sp[0], reverse=True):
             try:
                 return step, store.load_pytree(path, like)
             except Exception:
-                continue  # corrupt replica — try the next neighbour
+                continue  # corrupt copy — try the next candidate
         return None
 
     def gc(self, keep: int = 3) -> None:

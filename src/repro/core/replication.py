@@ -18,6 +18,14 @@ failure rate is approximately
 
 which for R=1 degrades to mu and for R=2 gives the classic 2 mu^2 t_repair.
 The job-level rate is then k * mu_eff, fed into the same utilization model.
+
+The same R-of-N survival law now has an exact, *simulated* counterpart in
+the P2P checkpoint store: :func:`repro.p2p.overlay.stationary_loss_rate`
+is the closed-form steady-state all-replicas-dead transition rate of the
+alternating-renewal holder process, and
+:class:`repro.p2p.overlay.ReplicaSetProcess` simulates it per event.
+``effective_failure_rate`` is the small-rate (mu * t_repair << 1) limit of
+both; tests/test_p2p.py cross-checks all three against each other.
 """
 from __future__ import annotations
 
@@ -27,10 +35,21 @@ from dataclasses import dataclass
 from repro.core.utilization import UtilizationReport, optimal_lambda, utilization
 
 
-def effective_failure_rate(mu: float, R: int, t_repair: float) -> float:
-    """Effective per-process failure rate under R-way replication."""
+def effective_failure_rate(mu: float, R: int, t_repair: float,
+                           exact: bool = False) -> float:
+    """Effective per-process failure rate under R-way replication.
+
+    ``exact=True`` returns the stationary all-replicas-dead transition
+    rate of the alternating-renewal holder process instead of the cascade
+    approximation — the law the P2P checkpoint store simulates.  The two
+    agree to leading order in mu * t_repair.
+    """
     if R < 1:
         raise ValueError("replication factor must be >= 1")
+    if exact:
+        from repro.p2p.overlay import stationary_loss_rate
+
+        return stationary_loss_rate(mu, R, t_repair)
     if R == 1:
         return mu
     # Probability all R-1 surviving replicas also die within the repair

@@ -1,0 +1,35 @@
+"""Peer-to-peer checkpoint-storage overlay (DESIGN.md Sec 6).
+
+Models *where* checkpoint replicas live and what they cost to fetch, so
+the restore time T_d the rest of the system consumes is endogenous:
+
+* :mod:`repro.p2p.overlay` — holder membership under churn (alternating-
+  renewal replica slots, stationary availability, HRW placement).
+* :mod:`repro.p2p.transfer` — peer-uplink striping vs the contended
+  work-pool server pipe.
+* :mod:`repro.p2p.store` — :class:`StoreSpec` for the batched engine and
+  the per-event :class:`P2PCheckpointStore` parity oracle.
+
+This package is deliberately independent of :mod:`repro.sim` (the sim
+layer imports it, not the reverse) so the same placement/transfer laws
+also drive the real checkpointer (:mod:`repro.ckpt.async_ckpt`).
+"""
+from repro.p2p.overlay import (
+    ReplicaSetProcess,
+    availability,
+    rendezvous_placement,
+    stationary_loss_rate,
+)
+from repro.p2p.store import R_MAX, P2PCheckpointStore, StoreSpec
+from repro.p2p.transfer import TransferModel
+
+__all__ = [
+    "P2PCheckpointStore",
+    "R_MAX",
+    "ReplicaSetProcess",
+    "StoreSpec",
+    "TransferModel",
+    "availability",
+    "rendezvous_placement",
+    "stationary_loss_rate",
+]

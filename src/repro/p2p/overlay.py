@@ -1,0 +1,146 @@
+"""P2P storage overlay: holder membership under churn and replica placement.
+
+The paper's architecture off-loads checkpoint storage from the work-pool
+server onto the peers themselves (Sec 1-2): each job's checkpoint image is
+replicated to R *holder* peers picked from the overlay.  Holders churn like
+every other volunteer, so the overlay continuously re-replicates: when a
+holder departs, a replacement is recruited and the image re-copied from a
+surviving replica (or the server's master copy when none survives).
+
+This module models that membership process and the placement rule:
+
+* :func:`availability` — stationary probability that one holder slot is
+  serving.  A slot alternates ALIVE (Exp lifetime, hazard mu) and REPAIRING
+  (mean ``t_repair`` to recruit + re-copy); by alternating-renewal theory
+  the up-fraction is E[up] / (E[up] + E[down]) = 1 / (1 + mu * t_repair),
+  independent of the repair-time distribution.
+* :class:`ReplicaSetProcess` — the exact event-driven R-slot process, used
+  as the parity oracle for the batched engine's closed-form replica-
+  survival law (each slot i.i.d. Bernoulli(availability) at any instant —
+  exact in steady state because exponential phases are memoryless and the
+  process is started stationary).
+* :func:`rendezvous_placement` — highest-random-weight (HRW) placement of
+  an item on R of N nodes.  Deterministic given (key, membership), so every
+  peer computes the same holder set with no coordination — the same
+  "no additional message" property the paper's estimator piggybacking has —
+  and membership changes only remap the items whose holders departed.
+* :func:`stationary_loss_rate` — the exact steady-state rate at which the
+  replica SET transitions to all-dead, cross-checked in the tests against
+  the small-rate approximation ``repro.core.replication.
+  effective_failure_rate`` and against :class:`ReplicaSetProcess`.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Callable, List, Sequence
+
+import numpy as np
+
+MtbfFn = Callable[[float], float]  # wall time (s) -> per-peer MTBF (s)
+
+
+def availability(mu: float, t_repair: float) -> float:
+    """Stationary up-probability of one holder slot: 1 / (1 + mu*t_repair)."""
+    if mu < 0 or t_repair < 0:
+        raise ValueError("mu and t_repair must be non-negative")
+    return 1.0 / (1.0 + mu * t_repair)
+
+
+def stationary_loss_rate(mu: float, R: int, t_repair: float) -> float:
+    """Exact steady-state rate of replica-set loss (all R holders dead).
+
+    The set enters the all-dead state when exactly one holder is alive and
+    it dies: rate = P(exactly 1 alive) * mu = R * A * (1-A)^(R-1) * mu with
+    A = availability(mu, t_repair).  For mu*t_repair << 1 this reduces to
+    R * mu * (mu*t_repair)^(R-1), the small-rate cascade approximation of
+    :func:`repro.core.replication.effective_failure_rate`.
+    """
+    if R < 1:
+        raise ValueError("replication factor must be >= 1")
+    A = availability(mu, t_repair)
+    return R * A * (1.0 - A) ** (R - 1) * mu
+
+
+class ReplicaSetProcess:
+    """Event-driven alternating-renewal process of R holder slots.
+
+    Each slot alternates ALIVE (lifetime ~ Exp with the birth-time hazard
+    of ``mtbf_fn``) and REPAIRING (replacement recruitment + re-copy,
+    duration ~ Exp(mean ``t_repair``)).  Repair is always possible: a
+    replacement copies from a surviving replica, or from the work-pool
+    server's master copy when none survives (the paper's server fallback).
+
+    The process is initialized *stationary* at ``t0`` — each slot up with
+    probability :func:`availability` and exponential phases are memoryless —
+    so the marginal of :meth:`n_alive` at any later time is exactly
+    Binomial(R, availability(mu, t_repair)) under constant churn.  This is
+    the per-replica parity oracle for the batched engine's closed-form law.
+    """
+
+    def __init__(self, R: int, mtbf_fn: MtbfFn, t_repair: float,
+                 rng: np.random.Generator, t0: float = 0.0):
+        if R < 0:
+            raise ValueError("replication factor must be >= 0")
+        if t_repair <= 0:
+            raise ValueError("t_repair must be positive")
+        self.R = R
+        self.mtbf_fn = mtbf_fn
+        self.t_repair = float(t_repair)
+        self.rng = rng
+        self.t0 = float(t0)
+        self.t = float(t0)
+        self.n_losses = 0  # transitions into the all-dead state
+        mtbf0 = mtbf_fn(t0)
+        A = availability(1.0 / mtbf0, t_repair)
+        self._up = np.zeros(R, dtype=bool)
+        self._next = np.full(R, np.inf)
+        for i in range(R):
+            self._up[i] = rng.random() < A
+            hold = mtbf0 if self._up[i] else t_repair
+            self._next[i] = t0 + rng.exponential(hold)
+
+    def advance(self, t: float) -> None:
+        """Process holder deaths/repairs up to wall time ``t``, in order."""
+        while self.R:
+            i = int(np.argmin(self._next))
+            te = float(self._next[i])
+            if te > t:
+                break
+            if self._up[i]:
+                self._up[i] = False
+                self._next[i] = te + self.rng.exponential(self.t_repair)
+                if not self._up.any():
+                    self.n_losses += 1
+            else:
+                self._up[i] = True
+                self._next[i] = te + self.rng.exponential(self.mtbf_fn(te))
+        self.t = max(self.t, float(t))
+
+    def n_alive(self, t: float) -> int:
+        """Surviving replica count at wall time ``t`` (advances the process)."""
+        self.advance(t)
+        return int(self._up.sum())
+
+    def loss_rate(self) -> float:
+        """Observed all-dead transition rate over the advanced horizon."""
+        elapsed = self.t - self.t0
+        return self.n_losses / elapsed if elapsed > 0 else 0.0
+
+
+def rendezvous_placement(key: str, nodes: Sequence[str], R: int) -> List[str]:
+    """Pick R of ``nodes`` to hold ``key`` by highest-random-weight hashing.
+
+    Every participant evaluates the same deterministic score
+    sha1(key | node), so the holder set needs no coordinator, and removing
+    a node only remaps the keys it held (minimal disruption — the property
+    that keeps re-replication traffic proportional to churn, not to the
+    population).
+    """
+    if R < 0:
+        raise ValueError("replication factor must be >= 0")
+    scored = sorted(
+        nodes,
+        key=lambda nd: hashlib.sha1(f"{key}|{nd}".encode()).hexdigest(),
+        reverse=True,
+    )
+    return list(scored[:min(R, len(scored))])

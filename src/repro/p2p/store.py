@@ -1,0 +1,116 @@
+"""The P2P checkpoint store: spec for the batched engine + per-event oracle.
+
+:class:`StoreSpec` is the complete, hashable description a simulation cell
+carries: replication factor, re-replication (repair) time, and the
+:class:`~repro.p2p.transfer.TransferModel`.  The batched engine packs its
+derived scalars (``td_up1``, ``td_cap``, ``td_server``) and samples the
+surviving-replica count in closed form — m ~ Binomial(R, availability) —
+so the ``lax.scan`` step stays batched.
+
+:class:`P2PCheckpointStore` is the per-event counterpart driving the heap
+reference simulator (:func:`repro.sim.job.simulate_job`): an exact
+:class:`~repro.p2p.overlay.ReplicaSetProcess` evolves individual holder
+deaths and repairs, and every restore reads the *actual* surviving count.
+The engine's closed form must reproduce its statistics
+(tests/test_p2p.py), the same parity discipline the engine already holds
+against the heap for the churn process itself.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.p2p.overlay import ReplicaSetProcess, availability
+from repro.p2p.transfer import TransferModel
+
+# The batched engine unrolls the Binomial(R, A) inverse-CDF over a fixed
+# number of terms; R beyond this adds no meaningful availability anyway
+# (loss probability is already (mu*t_repair)^R).
+R_MAX = 8
+
+
+@dataclass(frozen=True)
+class StoreSpec:
+    """Replica placement + transfer description carried by a simulation cell.
+
+    ``R = 0`` is the server-only baseline: no peer replicas, every restore
+    (and every checkpoint upload) hits the work-pool server.
+    """
+
+    R: int = 3
+    t_repair: float = 600.0            # recruit replacement + re-copy image
+    transfer: TransferModel = field(default_factory=TransferModel)
+
+    def __post_init__(self) -> None:
+        if not 0 <= self.R <= R_MAX:
+            raise ValueError(f"R must be in [0, {R_MAX}]")
+        if self.t_repair <= 0:
+            raise ValueError("t_repair must be positive")
+
+    # Packed scalars for the vectorized engine: restore from m sources is
+    # max(td_up1 / m, td_cap), i.e. img / min(m*uplink, downlink).
+    @property
+    def td_up1(self) -> float:
+        return self.transfer.img_bytes / self.transfer.peer_uplink
+
+    @property
+    def td_cap(self) -> float:
+        return self.transfer.img_bytes / self.transfer.peer_downlink
+
+    @property
+    def td_server(self) -> float:
+        return self.transfer.server_seconds()
+
+    def availability(self, mu: float) -> float:
+        return availability(mu, self.t_repair)
+
+    def availability_at(self, mu):
+        """Vectorized holder availability 1/(1 + mu*t_repair) (mu array-ok)."""
+        return 1.0 / (1.0 + mu * self.t_repair)
+
+
+class P2PCheckpointStore:
+    """Per-event replica store for the heap reference simulator.
+
+    Tracks individual holder deaths/repairs via
+    :class:`ReplicaSetProcess` and accounts the server I/O each job
+    imposes: checkpoint uploads when R=0 (server-only mode) and fallback
+    restores when every peer replica is lost.
+    """
+
+    def __init__(self, spec: StoreSpec, mtbf_fn: Callable[[float], float],
+                 rng: np.random.Generator, t0: float = 0.0):
+        self.spec = spec
+        self.holders = ReplicaSetProcess(spec.R, mtbf_fn, spec.t_repair,
+                                         rng, t0=t0)
+        self.server_bytes = 0.0
+        self.n_server_restores = 0
+        self.n_peer_restores = 0
+        self._last_from_server = False
+
+    def restore_seconds_at(self, t: float) -> float:
+        """Endogenous T_d for a restore attempt starting at wall time ``t``.
+
+        Reads the exact surviving replica count; the attempt's source is
+        remembered so :meth:`commit_restore` can account it on success.
+        """
+        m = self.holders.n_alive(t)
+        self._last_from_server = m == 0
+        return self.spec.transfer.restore_seconds(m)
+
+    def commit_restore(self) -> None:
+        """The in-flight restore completed (no churn interrupted it)."""
+        if self._last_from_server:
+            self.n_server_restores += 1
+            self.server_bytes += self.spec.transfer.img_bytes
+        else:
+            self.n_peer_restores += 1
+
+    def commit_checkpoint(self) -> None:
+        """A checkpoint was written.  Server-only mode uploads the image to
+        the work-pool server; with peer replicas the image goes to holders
+        and costs the server nothing."""
+        if self.spec.R == 0:
+            self.server_bytes += self.spec.transfer.img_bytes

@@ -1,0 +1,83 @@
+"""Bandwidth/transfer model for checkpoint images (peer uplinks vs server).
+
+Anderson & Fedak quantify the volunteer fleet's aggregate storage and
+network capacity: individually slow peer uplinks, in aggregate dwarfing
+the project server's shared pipe.  This module turns those capacities into
+restore/fetch times:
+
+* fetching from m surviving peer replicas stripes the image across their
+  uplinks, capped by the restoring peer's downlink:
+  ``t = img / min(m * peer_uplink, peer_downlink)``;
+* falling back to the work-pool server pays for the shared pipe: the
+  server's capacity is divided among ``server_load`` concurrent flows
+  (checkpoint uploads, input downloads, other jobs' restores), so one
+  restore gets ``server_capacity / (1 + server_load)``.
+
+These two laws are what make the paper's restore time T_d *endogenous*:
+the engine derives every restore's duration from the surviving replica
+count and this model instead of treating T_d as an exogenous constant.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class TransferModel:
+    """Link capacities and image size, all in bytes / bytes-per-second."""
+
+    img_bytes: float = 200e6        # checkpoint image size
+    peer_uplink: float = 5e6        # one holder's serving bandwidth
+    peer_downlink: float = 50e6     # restoring peer's receive cap
+    server_capacity: float = 100e6  # work-pool server's shared pipe
+    server_load: float = 20.0       # concurrent flows sharing that pipe
+
+    def __post_init__(self) -> None:
+        if min(self.img_bytes, self.peer_uplink, self.peer_downlink,
+               self.server_capacity) <= 0:
+            raise ValueError("sizes and bandwidths must be positive")
+        if self.server_load < 0:
+            raise ValueError("server_load must be non-negative")
+
+    # ------------------------------------------------------------------ #
+    @property
+    def server_share(self) -> float:
+        """Bandwidth one flow gets from the contended server pipe."""
+        return self.server_capacity / (1.0 + self.server_load)
+
+    def server_seconds(self) -> float:
+        """Restore duration from the server (the m=0 fallback)."""
+        return self.img_bytes / self.server_share
+
+    def peer_seconds(self, m: int) -> float:
+        """Restore duration striped across m >= 1 surviving replicas."""
+        if m < 1:
+            raise ValueError("need at least one surviving replica")
+        return self.img_bytes / min(m * self.peer_uplink, self.peer_downlink)
+
+    def restore_seconds(self, m: int) -> float:
+        """Endogenous T_d for a restore finding m surviving replicas."""
+        return self.peer_seconds(m) if m >= 1 else self.server_seconds()
+
+    def expected_restore_seconds(self, R: int, avail: float) -> float:
+        """E[T_d] under m ~ Binomial(R, avail) — the oracle policy's view."""
+        if not 0.0 <= avail <= 1.0:
+            raise ValueError("avail must be a probability")
+        return sum(
+            math.comb(R, m) * avail ** m * (1.0 - avail) ** (R - m)
+            * self.restore_seconds(m)
+            for m in range(R + 1)
+        )
+
+
+def striped_restore_seconds(m, td_up1, td_cap, td_server, xp):
+    """Vectorized :meth:`TransferModel.restore_seconds`: peer-uplink
+    striping ``max(td_up1/m, td_cap)`` for m >= 1, server fallback for
+    m = 0.  The ONE place the transfer law lives for array consumers —
+    the batched engine (packed per-cell scalars) and the workflow's edge
+    fetches both call this, so the laws cannot drift apart.  ``xp`` is
+    ``numpy`` or ``jax.numpy``.
+    """
+    td_m = xp.maximum(td_up1 / xp.maximum(m, 1.0), td_cap)
+    return xp.where(m >= 1.0, td_m, td_server)

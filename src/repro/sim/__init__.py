@@ -9,19 +9,26 @@ Layered (DESIGN.md Sec 1):
   (JAX ``lax.scan`` + NumPy fallback).
 * :mod:`repro.sim.workflow` — inter-dependent DAG stages (the paper's
   "work flows").
-* :mod:`repro.sim.experiments` — the Fig. 4/5 grids on either engine.
+* :mod:`repro.sim.experiments` — the Fig. 4/5 grids on either engine,
+  plus the server-offload sweep over :mod:`repro.p2p` storage modes.
+
+Cells carrying a :class:`repro.p2p.StoreSpec` derive restore times
+endogenously from the P2P checkpoint store (DESIGN.md Sec 6).
 """
 from repro.sim.engine import BatchResult, CellSpec, PolicyConfig, run_cells
 from repro.sim.experiments import (
     Comparison,
     GridEntry,
+    OffloadCell,
     compare,
     compare_grid,
     fig4_dynamic,
     fig4_static,
     fig5_td_sweep,
     fig5_v_sweep,
+    offload_csv,
     scenario_sweep,
+    server_offload_sweep,
     summarize,
 )
 from repro.sim.job import (
@@ -55,6 +62,7 @@ __all__ = [
     "DeathEvent",
     "FixedIntervalPolicy",
     "GridEntry",
+    "OffloadCell",
     "OraclePolicy",
     "PolicyConfig",
     "Scenario",
@@ -72,10 +80,12 @@ __all__ = [
     "fig4_static",
     "fig5_td_sweep",
     "fig5_v_sweep",
+    "offload_csv",
     "register_scenario",
     "run_cells",
     "scenario",
     "scenario_sweep",
+    "server_offload_sweep",
     "simulate_job",
     "simulate_workflow",
     "summarize",

@@ -43,16 +43,34 @@ The adaptive policy mirrors :class:`AdaptiveCheckpointController`: a
 windowed-MLE failure-rate estimate (exposure form, Gamma-prior smoothed),
 exact V after the first checkpoint, T_d initialized to V until a restore is
 seen, and the same interval clamps.
+
+**Endogenous restore times** (DESIGN.md Sec 6): a cell carrying a
+:class:`repro.p2p.StoreSpec` derives every restore's duration from the
+P2P checkpoint store instead of the exogenous ``T_d`` constant.  Each of
+the R replica holders is up with the stationary availability
+A = 1/(1 + mu(t) * t_repair) (alternating-renewal law, exact for the
+memoryless holder process the per-replica heap oracle runs), so the
+surviving count is m ~ Binomial(R, A), sampled branchlessly per restore
+attempt by unrolling the inverse CDF over ``repro.p2p.store.R_MAX`` terms.
+The attempt then lasts ``max(td_up1/m, td_cap)`` seconds (peer-uplink
+striping) or ``td_server`` when all replicas are lost (server fallback),
+and the engine accounts the aggregate server I/O each cell imposes.
+Store cells never macro-step: the burst closed form assumes a constant
+restore time, so their survival threshold is treated as 0.
 """
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import dataclass
 from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
 
 from repro.core.lambertw import lambertw0_numpy
+from repro.p2p.store import R_MAX as _R_MAX
+from repro.p2p.store import StoreSpec
+from repro.p2p.transfer import striped_restore_seconds
 from repro.sim.job import SimResult
 from repro.sim.scenarios import (
     CONSTANT,
@@ -121,6 +139,7 @@ class CellSpec:
     n_slots: int = 128
     max_wall_time: float = float("inf")
     t0: float = 0.0  # wall-clock offset (workflow stages start mid-scenario)
+    store: Optional[StoreSpec] = None  # endogenous T_d from the P2P store
 
 
 @dataclass(frozen=True)
@@ -135,6 +154,9 @@ class BatchResult:
     checkpoint_time: np.ndarray
     restore_time: np.ndarray
     completed: np.ndarray
+    server_bytes: np.ndarray       # I/O imposed on the work-pool server
+    n_server_restores: np.ndarray  # restores served by the server fallback
+    n_peer_restores: np.ndarray    # restores served from peer replicas
     n_steps: int  # engine steps executed (diagnostic / benchmark)
 
     def __len__(self) -> int:
@@ -151,6 +173,9 @@ class BatchResult:
             checkpoint_time=float(self.checkpoint_time[i]),
             restore_time=float(self.restore_time[i]),
             completed=bool(self.completed[i]),
+            server_bytes=float(self.server_bytes[i]),
+            n_server_restores=int(self.n_server_restores[i]),
+            n_peer_restores=int(self.n_peer_restores[i]),
         )
 
 
@@ -177,6 +202,13 @@ class _Params(NamedTuple):
     trace_t: np.ndarray      # [B, L]
     trace_mtbf: np.ndarray   # [B, L]
     trace_min_gap: np.ndarray
+    store_on: np.ndarray     # bool: T_d is endogenous (P2P store cell)
+    R: np.ndarray            # replica count (float for jit)
+    repair: np.ndarray       # holder re-replication time
+    td_up1: np.ndarray       # img / peer_uplink  (one-source restore)
+    td_cap: np.ndarray       # img / peer_downlink (striping floor)
+    td_srv: np.ndarray       # img / server_share (all-replicas-lost)
+    img_bytes: np.ndarray    # checkpoint image size (server accounting)
 
 
 class _State(NamedTuple):
@@ -196,6 +228,10 @@ class _State(NamedTuple):
     ema_T: np.ndarray        # decayed observed exposure (slot-seconds)
     seen_ckpt: np.ndarray    # bool: V has been measured
     seen_restore: np.ndarray  # bool: T_d has been measured
+    td_obs: np.ndarray       # last observed restore duration (store cells)
+    sv_bytes: np.ndarray     # server I/O imposed so far
+    n_srv: np.ndarray        # restores served by the server fallback
+    n_peer: np.ndarray       # restores served from peer replicas
 
 
 def _pack(cells: Sequence[CellSpec]) -> _Params:
@@ -243,6 +279,14 @@ def _pack(cells: Sequence[CellSpec]) -> _Params:
         trace_t=trace_t,
         trace_mtbf=trace_mtbf,
         trace_min_gap=min_gap,
+        store_on=np.asarray([c.store is not None for c in cells], dtype=bool),
+        R=f([c.store.R if c.store else 0 for c in cells]),
+        repair=f([c.store.t_repair if c.store else 1.0 for c in cells]),
+        td_up1=f([c.store.td_up1 if c.store else c.T_d for c in cells]),
+        td_cap=f([c.store.td_cap if c.store else c.T_d for c in cells]),
+        td_srv=f([c.store.td_server if c.store else c.T_d for c in cells]),
+        img_bytes=f([c.store.transfer.img_bytes if c.store else 0.0
+                     for c in cells]),
     )
 
 
@@ -253,7 +297,9 @@ def _init_state(p: _Params, xp) -> _State:
     return _State(t=xp.asarray(p.t0), done=zeros, in_restore=false,
                   finished=false, censored=false, n_ckpt=zeros, n_fail=zeros,
                   wasted=zeros, ckpt_time=zeros, restore_time=zeros,
-                  ema_d=zeros, ema_T=zeros, seen_ckpt=false, seen_restore=false)
+                  ema_d=zeros, ema_T=zeros, seen_ckpt=false, seen_restore=false,
+                  td_obs=xp.asarray(p.T_d), sv_bytes=zeros, n_srv=zeros,
+                  n_peer=zeros)
 
 
 def _opt_interval(mu, k, V, T_d, xp, lw):
@@ -292,8 +338,49 @@ def _trunc_exp_moments(kmu, L, q, xp):
     return m, v
 
 
-def _attempt(s: _State, p: _Params, xp, lw):
-    """Pure pre-sampling half of a step: what is each cell about to do?"""
+def _replica_draw(mu, u2, p: _Params, xp):
+    """Endogenous restore law: sample the surviving replica count and turn
+    it into this attempt's restore duration (DESIGN.md Sec 6).
+
+    Each holder is up with the stationary availability A = 1/(1 + mu * t_r)
+    (alternating renewal; exact vs the per-replica heap oracle because the
+    holder process is memoryless and started stationary), so m ~
+    Binomial(R, A).  The inverse CDF is unrolled over R_MAX terms with the
+    pmf recurrence pmf_{j+1} = pmf_j * (R-j)/(j+1) * A/(1-A) — branchless,
+    so store and legacy cells share one jitted step.  Returns
+    (td_rest, from_server, td_expect): the sampled attempt duration (legacy
+    cells keep p.T_d), whether it hits the server fallback, and E[td] for
+    the oracle policy.
+    """
+    A = xp.clip(1.0 / (1.0 + mu * p.repair), 1e-12, 1.0 - 1e-12)
+    ratio = A / (1.0 - A)
+    pmf = (1.0 - A) ** p.R                    # P(m = 0)
+    cdf = pmf
+    m = xp.zeros_like(mu)
+    etd = pmf * p.td_srv                      # E[td] accumulator: m=0 term
+    for j in range(_R_MAX):
+        m = m + (u2 > cdf)
+        pmf = xp.maximum(pmf * (p.R - j) / (j + 1.0) * ratio, 0.0)
+        cdf = cdf + pmf
+        etd = etd + pmf * striped_restore_seconds(j + 1.0, p.td_up1,
+                                                  p.td_cap, p.td_srv, xp)
+    m = xp.minimum(m, p.R)                    # guard pmf underflow at A ~ 1
+    td_endo = striped_restore_seconds(m, p.td_up1, p.td_cap, p.td_srv, xp)
+    td_rest = xp.where(p.store_on, td_endo, p.T_d)
+    from_server = p.store_on & (m < 1.0)
+    td_expect = xp.where(p.store_on, etd, p.T_d)
+    return td_rest, from_server, td_expect
+
+
+def _attempt(s: _State, p: _Params, u2, xp, lw, any_store: bool):
+    """Pure pre-sampling half of a step: what is each cell about to do?
+
+    ``u2`` is this step's replica-survival uniform (store cells sample the
+    surviving holder count from it; legacy cells ignore it).  ``any_store``
+    is static per batch: all-legacy batches skip the R_MAX-term replica
+    unroll entirely (the u2 stream is still consumed so a cell's
+    realization never depends on batch composition).
+    """
     mu = hazard_kernel(s.t, p.scen_kind, p.scen_p, p.trace_t, p.trace_mtbf, xp)
     kmu = p.k * mu
     active = ~s.finished
@@ -302,16 +389,25 @@ def _attempt(s: _State, p: _Params, xp, lw):
     censor_now = active & ~s.in_restore & (s.t - p.t0 > p.max_wall)
     att = active & ~censor_now
 
+    if any_store:
+        td_rest, from_server, td_expect = _replica_draw(mu, u2, p, xp)
+    else:
+        td_rest, from_server, td_expect = p.T_d, p.store_on, p.T_d
+
     # Policy intervals — all three computed, selected branchlessly.  The
     # adaptive and oracle Lambert-W evaluations are stacked into one call:
     # the W iterations dominate per-step transcendental count.
     mu_hat = (s.ema_d + p.prior_count) / (s.ema_T + p.prior_count / p.prior_mu)
     V_hat = xp.where(s.seen_ckpt, p.V, p.prior_v)
-    Td_hat = xp.where(s.seen_restore, p.T_d, V_hat)
+    # Adaptive cells mirror observe_restore: the last measured restore
+    # duration (endogenous for store cells); oracle cells know the law and
+    # use E[td] under the true availability.
+    td_known = xp.where(p.store_on, s.td_obs, p.T_d)
+    Td_hat = xp.where(s.seen_restore, td_known, V_hat)
     iv2 = _opt_interval(
         xp.stack([mu_hat, mu]), p.k,
         xp.stack([xp.maximum(V_hat, 1e-6), p.V]),
-        xp.stack([Td_hat, p.T_d]), xp, lw)
+        xp.stack([Td_hat, td_expect]), xp, lw)
     iv_adaptive = xp.clip(iv2[0], p.min_iv, p.max_iv)
     iv_oracle = iv2[1]
     interval = xp.where(p.pol == 0, p.fixed_T,
@@ -322,8 +418,9 @@ def _attempt(s: _State, p: _Params, xp, lw):
     work_target = xp.minimum(interval, remaining)
     is_final = work_target >= remaining
     cycle_len = work_target + xp.where(is_final, 0.0, p.V)
-    attempt_len = xp.where(s.in_restore, p.T_d, cycle_len)
-    return mu, kmu, attempt_len, work_target, is_final, cycle_len, censor_now, att
+    attempt_len = xp.where(s.in_restore, td_rest, cycle_len)
+    return (mu, kmu, attempt_len, work_target, is_final, cycle_len,
+            censor_now, att, td_rest, from_server)
 
 
 def _apply(s: _State, p: _Params, pre, u, z, macro_threshold, xp) -> _State:
@@ -333,7 +430,8 @@ def _apply(s: _State, p: _Params, pre, u, z, macro_threshold, xp) -> _State:
     failure count for macro cells); ``z`` a standard normal (macro burst
     duration).
     """
-    mu, kmu, attempt_len, work_target, is_final, cycle_len, censor_now, att = pre
+    (mu, kmu, attempt_len, work_target, is_final, cycle_len, censor_now, att,
+     td_rest, from_server) = pre
     p_surv = xp.exp(-kmu * cycle_len)
 
     # ---------------- macro path: a whole failure burst ------------------ #
@@ -356,7 +454,9 @@ def _apply(s: _State, p: _Params, pre, u, z, macro_threshold, xp) -> _State:
                          0.5 * (p.t0 + p.max_wall - s.t) + pair_m)
     M_cap = xp.floor(horizon / xp.maximum(pair_m, 1e-300))
     M = xp.clip(xp.minimum(M_want, M_cap), 0.0, _MACRO_CAP)
-    macro = (att & ~s.in_restore & (p_surv < macro_threshold)
+    # Store cells never macro-step: the burst closed form above assumes a
+    # constant per-failure restore time, which endogenous T_d is not.
+    macro = (att & ~s.in_restore & ~p.store_on & (p_surv < macro_threshold)
              & xp.isfinite(kmu) & (kmu > 0.0) & (M >= 1.0))
     capped = macro & (M < M_want)
     m_ok = macro & ~capped                         # burst ends in a success
@@ -377,7 +477,7 @@ def _apply(s: _State, p: _Params, pre, u, z, macro_threshold, xp) -> _State:
 
     t = s.t + xp.where(ws, cycle_len,
              xp.where(wf | rf, dt,
-             xp.where(rs, p.T_d,
+             xp.where(rs, td_rest,
              xp.where(macro, burst + xp.where(m_ok, cycle_len, 0.0), 0.0))))
     done = xp.where(ws | m_ok,
                     xp.where(is_final, p.work, s.done + work_target), s.done)
@@ -385,13 +485,22 @@ def _apply(s: _State, p: _Params, pre, u, z, macro_threshold, xp) -> _State:
     ckpt_time = s.ckpt_time + xp.where(interior, p.V, 0.0)
     n_fail = s.n_fail + wf + xp.where(macro, M, 0.0)
     wasted = s.wasted + xp.where(wf, dt, 0.0) + xp.where(macro, burst_waste, 0.0)
-    restore_time = (s.restore_time + xp.where(rf, dt, xp.where(rs, p.T_d, 0.0))
+    restore_time = (s.restore_time + xp.where(rf, dt, xp.where(rs, td_rest, 0.0))
                     + xp.where(macro, burst - burst_waste, 0.0))
     in_restore = (s.in_restore | wf) & ~rs
     finished = s.finished | censor_now | ((ws | m_ok) & is_final)
     censored = s.censored | censor_now
     seen_ckpt = s.seen_ckpt | interior
     seen_restore = s.seen_restore | rs | m_ok | capped
+    td_obs = xp.where(rs, td_rest, s.td_obs)  # mirror of observe_restore
+    # Server I/O accounting: server-only cells (R=0) upload every interior
+    # checkpoint; any store cell whose restore found no surviving replica
+    # downloads the image from the server fallback.
+    srv_ckpt = interior & p.store_on & (p.R < 1.0)
+    srv_rest = rs & from_server  # exclusive with srv_ckpt (work vs restore)
+    sv_bytes = s.sv_bytes + xp.where(srv_ckpt | srv_rest, p.img_bytes, 0.0)
+    n_srv = s.n_srv + srv_rest
+    n_peer = s.n_peer + (rs & p.store_on & ~from_server)
 
     # Estimator: expected deaths in the whole watch neighbourhood over the
     # elapsed time, decayed through the window-K MLE (Eq. 1, exposure form).
@@ -405,7 +514,8 @@ def _apply(s: _State, p: _Params, pre, u, z, macro_threshold, xp) -> _State:
                   censored=censored, n_ckpt=n_ckpt, n_fail=n_fail,
                   wasted=wasted, ckpt_time=ckpt_time, restore_time=restore_time,
                   ema_d=ema_d, ema_T=ema_T, seen_ckpt=seen_ckpt,
-                  seen_restore=seen_restore)
+                  seen_restore=seen_restore, td_obs=td_obs, sv_bytes=sv_bytes,
+                  n_srv=n_srv, n_peer=n_peer)
 
 
 # --------------------------------------------------------------------------- #
@@ -417,7 +527,7 @@ def _lw_numpy(z):
 
 
 def _run_numpy(p: _Params, seeds: Sequence[int], max_steps: int,
-               macro_threshold: float) -> tuple:
+               macro_threshold: float, any_store: bool) -> tuple:
     # One stream per UNIQUE seed, consumed positionally (draw i belongs to
     # step i): a cell's realization depends only on its own seed, never on
     # batch composition, and cells sharing a seed share churn randomness —
@@ -428,7 +538,7 @@ def _run_numpy(p: _Params, seeds: Sequence[int], max_steps: int,
     gens = [np.random.default_rng(int(sd)) for sd in uniq]
     s = _init_state(p, np)
     steps = 0
-    block_u = block_z = None
+    block_u = block_z = block_u2 = None
     j = _RNG_BLOCK
     # Unused branches of the branchless step routinely overflow (exp of a
     # huge rate, inf * 0) before being masked out — silence numpy there.
@@ -437,12 +547,14 @@ def _run_numpy(p: _Params, seeds: Sequence[int], max_steps: int,
             if j == _RNG_BLOCK:  # refill per-seed blocks
                 block_u = np.stack([g.random(_RNG_BLOCK) for g in gens])
                 block_z = np.stack([g.standard_normal(_RNG_BLOCK) for g in gens])
+                block_u2 = np.stack([g.random(_RNG_BLOCK) for g in gens])
                 j = 0
             steps += 1
-            pre = _attempt(s, p, np, _lw_numpy)
             u = block_u[inv, j]
             z = block_z[inv, j]
+            u2 = block_u2[inv, j]
             j += 1
+            pre = _attempt(s, p, u2, np, _lw_numpy, any_store)
             s = _apply(s, p, pre, u, z, macro_threshold, np)
     return s, steps
 
@@ -458,17 +570,20 @@ if _HAVE_JAX:
 
         return lambertw0(z, iters=_LW_ITERS)
 
-    def _jax_chunk(state_and_keys, p: _Params, macro_threshold: float):
+    def _jax_chunk(state_and_keys, p: _Params, macro_threshold: float,
+                   any_store: bool):
         def body(carry, _):
             s, keys = carry
-            pre = _attempt(s, p, jnp, lambertw0_jnp)
             # Per-CELL keys (seeded from CellSpec.seed): realizations are
             # independent of batch composition, and same-seed cells share
             # churn randomness (common random numbers across policies).
-            splits = jax.vmap(lambda k: jax.random.split(k, 3))(keys)
-            keys, k1, k2 = splits[:, 0], splits[:, 1], splits[:, 2]
+            splits = jax.vmap(lambda k: jax.random.split(k, 4))(keys)
+            keys, k1, k2, k3 = (splits[:, 0], splits[:, 1], splits[:, 2],
+                                splits[:, 3])
             u = jax.vmap(lambda k: jax.random.uniform(k, dtype=jnp.float64))(k1)
             z = jax.vmap(lambda k: jax.random.normal(k, dtype=jnp.float64))(k2)
+            u2 = jax.vmap(lambda k: jax.random.uniform(k, dtype=jnp.float64))(k3)
+            pre = _attempt(s, p, u2, jnp, lambertw0_jnp, any_store)
             return (_apply(s, p, pre, u, z, macro_threshold, jnp), keys), None
 
         (s, keys), _ = jax.lax.scan(body, state_and_keys, None, length=_CHUNK)
@@ -478,18 +593,18 @@ if _HAVE_JAX:
 
 
 def _run_jax(p: _Params, seeds: Sequence[int], max_steps: int,
-             macro_threshold: float) -> tuple:
+             macro_threshold: float, any_store: bool) -> tuple:
     global _jax_chunk_jit
     with jax.experimental.enable_x64(True):
         if _jax_chunk_jit is None:
-            _jax_chunk_jit = jax.jit(_jax_chunk, static_argnums=2)
+            _jax_chunk_jit = jax.jit(_jax_chunk, static_argnums=(2, 3))
         pj = _Params(*(jnp.asarray(a) for a in p))
         keys = jax.vmap(jax.random.PRNGKey)(
             jnp.asarray(list(seeds), dtype=jnp.uint32))
         s = _init_state(pj, jnp)
         steps = 0
         while steps < max_steps:
-            s, keys = _jax_chunk_jit((s, keys), pj, macro_threshold)
+            s, keys = _jax_chunk_jit((s, keys), pj, macro_threshold, any_store)
             steps += _CHUNK
             if bool(s.finished.all()):
                 break
@@ -505,14 +620,17 @@ def run_cells(cells: Sequence[CellSpec], *, backend: str = "auto",
               macro_threshold: float = 0.05) -> BatchResult:
     """Simulate every cell to completion (or censoring) and return a batch.
 
-    ``backend``: "auto" (JAX when importable, else numpy), "jax", "numpy".
+    ``backend``: "auto" (the ``REPRO_SIM_BACKEND`` env var when set, else
+    JAX when importable, else numpy), "jax", "numpy".
     ``max_steps`` bounds the attempt loop; cells still running when it is
     exhausted are reported censored at their current wall clock.
     ``macro_threshold``: cycle survival probability below which failure
-    bursts are macro-stepped (see module docstring); 0 disables.
+    bursts are macro-stepped (see module docstring); 0 disables.  Cells
+    with a :class:`repro.p2p.StoreSpec` never macro-step (endogenous T_d).
     """
     if backend == "auto":
-        backend = "jax" if _HAVE_JAX else "numpy"
+        backend = os.environ.get("REPRO_SIM_BACKEND") or (
+            "jax" if _HAVE_JAX else "numpy")
     if backend == "jax" and not _HAVE_JAX:
         raise RuntimeError("JAX backend requested but jax is not importable")
     if backend not in ("jax", "numpy"):
@@ -520,8 +638,9 @@ def run_cells(cells: Sequence[CellSpec], *, backend: str = "auto",
 
     p = _pack(cells)
     seeds = [c.seed for c in cells]
+    any_store = any(c.store is not None for c in cells)
     run = _run_jax if backend == "jax" else _run_numpy
-    s, steps = run(p, seeds, max_steps, float(macro_threshold))
+    s, steps = run(p, seeds, max_steps, float(macro_threshold), any_store)
 
     ran_out = ~np.asarray(s.finished)
     completed = ~(np.asarray(s.censored) | ran_out)
@@ -534,5 +653,8 @@ def run_cells(cells: Sequence[CellSpec], *, backend: str = "auto",
         checkpoint_time=np.asarray(s.ckpt_time),
         restore_time=np.asarray(s.restore_time),
         completed=completed,
+        server_bytes=np.asarray(s.sv_bytes),
+        n_server_restores=np.asarray(s.n_srv).astype(np.int64),
+        n_peer_restores=np.asarray(s.n_peer).astype(np.int64),
         n_steps=steps,
     )

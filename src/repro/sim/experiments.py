@@ -26,6 +26,8 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.adaptive import AdaptiveCheckpointController
+from repro.p2p.store import StoreSpec
+from repro.p2p.transfer import TransferModel
 from repro.sim.engine import BatchResult, CellSpec, PolicyConfig, run_cells
 from repro.sim.job import (
     AdaptivePolicy,
@@ -323,6 +325,90 @@ def scenario_sweep(
         key = name if names.count(name) == 1 else f"{name}#{i}"
         out[key] = c
     return out
+
+
+# --------------------------------------------------------------------------- #
+# Server-offload experiment (the abstract's P2P storage claim).                #
+# --------------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class OffloadCell:
+    """One (scenario x replication mode) cell of the server-offload sweep."""
+
+    scenario: str
+    R: int                      # 0 = server-only baseline
+    mean_wall: float            # mean completion wall time (s)
+    mean_server_bytes: float    # mean server I/O per job (bytes)
+    mean_server_restores: float
+    mean_peer_restores: float
+    completed_frac: float
+
+    def csv_row(self) -> str:
+        return (f"{self.scenario},{self.R},{self.mean_wall:.1f},"
+                f"{self.mean_server_bytes:.0f},{self.mean_server_restores:.2f},"
+                f"{self.mean_peer_restores:.2f},{self.completed_frac:.3f}")
+
+
+OFFLOAD_CSV_HEADER = ("scenario,R,mean_wall_s,server_bytes,server_restores,"
+                      "peer_restores,completed_frac")
+
+
+def server_offload_sweep(
+    scenarios: Optional[Sequence[Scenario]] = None,
+    R_values: Sequence[int] = (0, 3),
+    *,
+    transfer: Optional[TransferModel] = None,
+    t_repair: float = 600.0,
+    k: int = DEFAULT_K,
+    work: float = DEFAULT_WORK,
+    seeds: Sequence[int] = tuple(range(8)),
+    n_slots: int = DEFAULT_SLOTS,
+    mtbf0: float = 7200.0,
+    backend: str = "auto",
+    max_wall_factor: float = 50.0,
+) -> List[OffloadCell]:
+    """Server-only vs P2P-offloaded checkpoint storage, one engine batch.
+
+    This is the figure the abstract promises: the same jobs under the same
+    churn, storing checkpoints either on the work-pool server (R=0 — every
+    checkpoint upload and every restore hits the shared server pipe) or on
+    R peer replicas (restores stripe across surviving holders; the server
+    only serves the rare all-replicas-lost fallback).  Reports completion
+    time AND the aggregate server I/O each mode imposes, per scenario.
+    """
+    if scenarios is None:
+        scenarios = [scenario("constant", mtbf=mtbf0),
+                     scenario("diurnal", mtbf=mtbf0),
+                     scenario("flash_crowd", mtbf=mtbf0)]
+    transfer = transfer or TransferModel()
+    grid = [(scen, R) for scen in scenarios for R in R_values]
+    S = len(list(seeds))
+    cells = []
+    for scen, R in grid:
+        st = StoreSpec(R=R, t_repair=t_repair, transfer=transfer)
+        pol = PolicyConfig(kind="adaptive", prior_mu=1.0 / mtbf0, prior_v=PAPER_V)
+        for s in seeds:
+            cells.append(CellSpec(
+                scenario=scen, policy=pol, seed=s, k=k, work=work,
+                V=PAPER_V, T_d=st.td_server, n_slots=n_slots,
+                max_wall_time=max_wall_factor * work, store=st))
+    res = run_cells(cells, backend=backend)
+    out = []
+    for i, (scen, R) in enumerate(grid):
+        sl = slice(i * S, (i + 1) * S)
+        out.append(OffloadCell(
+            scenario=scen.name, R=R,
+            mean_wall=float(res.wall_time[sl].mean()),
+            mean_server_bytes=float(res.server_bytes[sl].mean()),
+            mean_server_restores=float(res.n_server_restores[sl].mean()),
+            mean_peer_restores=float(res.n_peer_restores[sl].mean()),
+            completed_frac=float(res.completed[sl].mean())))
+    return out
+
+
+def offload_csv(cells: Sequence[OffloadCell]) -> List[str]:
+    """CSV rows (header first) — one row per (scenario, R) cell."""
+    return [OFFLOAD_CSV_HEADER] + [c.csv_row() for c in cells]
 
 
 def summarize(results: Dict[float, List[Comparison]]) -> str:

@@ -20,9 +20,12 @@ Policies decide the next checkpoint interval:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional, Protocol
+from typing import TYPE_CHECKING, Optional, Protocol
 
 import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover - annotation only, avoids import cost
+    from repro.p2p.store import P2PCheckpointStore
 
 from repro.core.adaptive import AdaptiveCheckpointController
 from repro.core.utilization import optimal_interval_scalar
@@ -118,6 +121,9 @@ class SimResult:
     checkpoint_time: float  # seconds spent checkpointing
     restore_time: float     # seconds spent downloading images
     completed: bool = True  # False => censored at wall_time (job livelocked)
+    server_bytes: float = 0.0     # I/O imposed on the work-pool server
+    n_server_restores: int = 0    # restores served by the server fallback
+    n_peer_restores: int = 0      # restores served from peer replicas
 
     @property
     def overhead(self) -> float:
@@ -138,6 +144,7 @@ def simulate_job(
     T_d: float,
     watch: Optional[int] = None,
     max_wall_time: float = float("inf"),
+    store: Optional["P2PCheckpointStore"] = None,
 ) -> SimResult:
     """Run one job to completion under churn.
 
@@ -145,6 +152,14 @@ def simulate_job(
     observation stream (defaults to min(4k, n_slots) — k job peers plus
     their neighbours).  Deaths of slots >= watch are invisible to the
     policy but slots < k always cause job failure.
+
+    ``store`` (a :class:`repro.p2p.P2PCheckpointStore`) makes the restore
+    time *endogenous*: each restore attempt reads the store's surviving
+    replica count at that instant — individual holder deaths and repairs
+    evolve per event — and pays the resulting transfer time, falling back
+    to the work-pool server when every replica is lost.  ``T_d`` is then
+    ignored.  This is the per-replica parity oracle for the batched
+    engine's closed-form availability law (DESIGN.md Sec 6).
     """
     if k > network.n_slots:
         raise ValueError(f"job needs {k} slots but network has {network.n_slots}")
@@ -173,6 +188,13 @@ def simulate_job(
                 return ev.time
         return None
 
+    def store_stats() -> dict:
+        if store is None:
+            return {}
+        return dict(server_bytes=store.server_bytes,
+                    n_server_restores=store.n_server_restores,
+                    n_peer_restores=store.n_peer_restores)
+
     while done < work_required:
         if t > max_wall_time:
             # Censored: the job is livelocked (the paper's 'keep rolling back
@@ -181,7 +203,7 @@ def simulate_job(
             return SimResult(
                 wall_time=t, work_required=work_required, n_checkpoints=n_ckpt,
                 n_failures=n_fail, wasted_work=wasted, checkpoint_time=ckpt_time,
-                restore_time=restore_time, completed=False,
+                restore_time=restore_time, completed=False, **store_stats(),
             )
         policy.tick(t)
         interval = max(policy.interval(), 1e-3)
@@ -202,23 +224,29 @@ def simulate_job(
                 n_ckpt += 1
                 ckpt_time += V
                 policy.on_checkpoint(V)
+                if store is not None:
+                    store.commit_checkpoint()
         else:
             # Job failure mid-cycle: lose the whole cycle so far (uncommitted
             # compute plus any in-progress checkpoint time), pay restore.
             wasted += max(0.0, fail_at - t)
             n_fail += 1
             t = fail_at
-            # Restore: download image (T_d); churn during restore forces a
-            # retry of the restore.
+            # Restore: download image (T_d exogenous, or read from the P2P
+            # store's surviving replicas); churn during restore forces a
+            # retry, re-reading the replica set at the new start time.
             while True:
-                fail_in_restore = drain_observations(t + T_d)
+                td = T_d if store is None else store.restore_seconds_at(t)
+                fail_in_restore = drain_observations(t + td)
                 if fail_in_restore is None:
-                    t += T_d
-                    restore_time += T_d
+                    t += td
+                    restore_time += td
+                    if store is not None:
+                        store.commit_restore()
                     break
                 restore_time += fail_in_restore - t
                 t = fail_in_restore
-            policy.on_restore(T_d)
+            policy.on_restore(td)
 
     return SimResult(
         wall_time=t,
@@ -228,4 +256,5 @@ def simulate_job(
         wasted_work=wasted,
         checkpoint_time=ckpt_time,
         restore_time=restore_time,
+        **store_stats(),
     )

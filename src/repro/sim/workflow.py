@@ -12,7 +12,12 @@ Semantics (DESIGN.md Sec 5):
   computing it must fetch each dependency's output, paying that edge's
   hand-off cost.  A churn event among the stage's k peers during a fetch
   loses the partial transfer and forces a retry (the same failure model the
-  engine applies to restore downloads).
+  engine applies to restore downloads); retry time is accounted as the
+  stage's hand-off *waste*.  With a :class:`repro.p2p.StoreSpec` the edge
+  outputs live in the P2P checkpoint store: each fetch reads from the
+  dependency's surviving replica set (peer-uplink striping, server
+  fallback when every replica is lost) instead of paying a flat cost, and
+  the stage's own restores become endogenous the same way.
 * The stage then runs as one engine cell, offset to its absolute start time
   so time-varying scenarios (doubling, diurnal, flash crowd) stay aligned
   across the whole workflow.
@@ -33,6 +38,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.p2p.store import StoreSpec
+from repro.p2p.transfer import striped_restore_seconds
 from repro.sim.engine import BatchResult, CellSpec, PolicyConfig, run_cells
 from repro.sim.scenarios import Scenario, hazard_kernel
 
@@ -104,8 +111,10 @@ class StageResult:
     start: np.ndarray      # ready + hand-off transfers (incl. churn retries)
     finish: np.ndarray     # start + simulated stage wall time
     handoff_time: np.ndarray
+    handoff_waste: np.ndarray  # fetch time lost to churn-interrupted retries
     sim: BatchResult
     completed: np.ndarray  # stage AND all its deps completed
+    server_bytes: np.ndarray   # server I/O: stage restores + edge fallbacks
 
     @property
     def mean_wall(self) -> float:
@@ -127,39 +136,70 @@ class WorkflowResult:
     def all_completed(self) -> bool:
         return bool(self.completed.all())
 
+    @property
+    def server_bytes(self) -> np.ndarray:
+        """Per-seed aggregate server I/O across every stage."""
+        return np.sum(np.stack([sr.server_bytes
+                                for sr in self.stages.values()]), axis=0)
 
-def _handoff_times(rng: np.random.Generator, scen: Scenario, k: int,
-                   t_start: np.ndarray, total: float,
-                   max_time: float) -> tuple[np.ndarray, np.ndarray]:
-    """Vectorized churn-exposed transfer: fetch ``total`` seconds of output
-    starting at per-seed times ``t_start``; a churn event among the k
-    consuming peers restarts the transfer (same model as engine restores).
 
-    Returns (elapsed, completed).  A transfer whose retries exceed
-    ``max_time`` is censored — the stage's churn can livelock a hand-off
-    exactly like it livelocks a job, and must be reported, not spun on.
+def _handoff_times(
+    rng: np.random.Generator, scen: Scenario, k: int, t_start: np.ndarray,
+    n_deps: int, handoff: float, max_time: float,
+    store: Optional[StoreSpec] = None,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized churn-exposed edge fetches: pull each of the ``n_deps``
+    dependency outputs in turn, starting at per-seed times ``t_start``.
+
+    Without a store each edge costs ``handoff`` flat seconds; with a
+    :class:`StoreSpec` each edge reads the dependency's replica set — the
+    fetch duration comes from the surviving-replica count sampled under
+    the availability law at the attempt's start (server fallback when all
+    replicas are lost).  A churn event among the k consuming peers loses
+    the partial transfer and forces a retry of that edge (same model as
+    engine restores); retry time is accounted as waste.
+
+    Returns (elapsed, completed, waste, server_fetches).  A fetch whose
+    retries exceed ``max_time`` is censored — the stage's churn can
+    livelock a hand-off exactly like it livelocks a job, and must be
+    reported, not spun on.
     """
     n = t_start.shape[0]
-    if total <= 0.0:
-        return np.zeros_like(t_start), np.ones(n, dtype=bool)
     t = t_start.astype(np.float64).copy()
-    pending = np.ones(n, dtype=bool)
+    waste = np.zeros(n)
+    srv_fetches = np.zeros(n)
     ok_flags = np.ones(n, dtype=bool)
+    if n_deps == 0 or (store is None and handoff <= 0.0):
+        return np.zeros_like(t), ok_flags, waste, srv_fetches
     kind = np.full(n, scen.kind)
     p = np.broadcast_to(np.asarray(scen.params), (n, 4))
     trace_t = np.asarray(scen.trace_t or (0.0, 1.0))[None, :]
     trace_m = np.asarray(scen.trace_mtbf or (1.0, 1.0))[None, :]
-    while pending.any():
-        kmu = k * hazard_kernel(t, kind, p, trace_t, trace_m, np)
-        u = rng.uniform(size=n)
-        t_fail = -np.log1p(-u) / kmu
-        ok = pending & (t_fail >= total)
-        retry = pending & ~ok
-        t = np.where(ok, t + total, np.where(retry, t + t_fail, t))
-        censor = retry & (t - t_start > max_time)
-        ok_flags &= ~censor
-        pending = retry & ~censor
-    return t - t_start, ok_flags
+    for _dep in range(n_deps):
+        pending = ok_flags.copy()
+        while pending.any():
+            mu = hazard_kernel(t, kind, p, trace_t, trace_m, np)
+            kmu = k * mu
+            if store is None:
+                total = np.full(n, handoff)
+                from_server = np.zeros(n, dtype=bool)
+            else:
+                A = np.clip(store.availability_at(mu), 0.0, 1.0)
+                m = rng.binomial(store.R, A)
+                total = striped_restore_seconds(m, store.td_up1, store.td_cap,
+                                                store.td_server, np)
+                from_server = m == 0
+            u = rng.uniform(size=n)
+            t_fail = -np.log1p(-u) / kmu
+            ok = pending & (t_fail >= total)
+            retry = pending & ~ok
+            t = np.where(ok, t + total, np.where(retry, t + t_fail, t))
+            waste = np.where(retry, waste + t_fail, waste)
+            srv_fetches += ok & from_server
+            censor = retry & (t - t_start > max_time)
+            ok_flags &= ~censor
+            pending = retry & ~censor
+    return t - t_start, ok_flags, waste, srv_fetches
 
 
 def simulate_workflow(
@@ -173,8 +213,15 @@ def simulate_workflow(
     n_slots: int = 128,
     max_wall_factor: float = 50.0,
     backend: str = "auto",
+    store: Optional[StoreSpec] = None,
 ) -> WorkflowResult:
-    """Run the whole DAG under churn, batched across seeds per stage."""
+    """Run the whole DAG under churn, batched across seeds per stage.
+
+    ``store`` switches the workflow onto the P2P checkpoint store: every
+    stage's restores become endogenous (replica-availability law instead
+    of the flat ``T_d``) and hand-off edges fetch the dependency's image
+    from its replica set instead of paying ``Stage.handoff`` flat seconds.
+    """
     seeds = list(seeds)
     n = len(seeds)
     order = spec.topo_order()
@@ -189,10 +236,13 @@ def simulate_workflow(
         for d in stage.deps:
             ready = np.maximum(ready, finish[d])
             deps_ok &= completed[d]
-        total_handoff = stage.handoff * len(stage.deps)
-        handoff, handoff_ok = _handoff_times(
-            rng, scen, stage.k, ready, total_handoff,
-            max_time=max_wall_factor * max(total_handoff, stage.work))
+        edge_cost = (stage.handoff if store is None
+                     else store.td_server)  # censor horizon scale per edge
+        total_handoff = edge_cost * len(stage.deps)
+        handoff, handoff_ok, handoff_waste, srv_fetches = _handoff_times(
+            rng, scen, stage.k, ready, len(stage.deps), stage.handoff,
+            max_time=max_wall_factor * max(total_handoff, stage.work),
+            store=store)
         deps_ok &= handoff_ok
         start = ready + handoff
         v = stage.V if stage.V is not None else V
@@ -200,17 +250,22 @@ def simulate_workflow(
         cells = [
             CellSpec(scenario=scen, policy=policy, seed=1000 * idx + s,
                      k=stage.k, work=stage.work, V=v, T_d=td, n_slots=n_slots,
-                     max_wall_time=max_wall_factor * stage.work, t0=float(start[i]))
+                     max_wall_time=max_wall_factor * stage.work, t0=float(start[i]),
+                     store=store)
             for i, s in enumerate(seeds)
         ]
         sim = run_cells(cells, backend=backend)
         fin = start + sim.wall_time
         ok = deps_ok & sim.completed
+        img = store.transfer.img_bytes if store is not None else 0.0
         finish[stage.name] = fin
         completed[stage.name] = ok
         results[stage.name] = StageResult(stage=stage, ready=ready, start=start,
                                           finish=fin, handoff_time=handoff,
-                                          sim=sim, completed=ok)
+                                          handoff_waste=handoff_waste,
+                                          sim=sim, completed=ok,
+                                          server_bytes=(sim.server_bytes
+                                                        + srv_fetches * img))
 
     makespan = np.max(np.stack([finish[s.name] for s in spec.stages]), axis=0)
     all_ok = np.all(np.stack([completed[s.name] for s in spec.stages]), axis=0)

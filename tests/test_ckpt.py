@@ -101,6 +101,52 @@ def test_replication_and_fallback(tmp_path, tree):
     ck.close()
 
 
+def test_restore_falls_back_when_primary_corrupt(tmp_path, tree):
+    """The documented fallback path: a CORRUPT (not just missing) primary
+    must be skipped and the restore served from a replica directory."""
+    primary = str(tmp_path / "primary")
+    replicas = [str(tmp_path / "rep0")]
+    ck = AsyncCheckpointer(primary, replicas=replicas, n_shards=2)
+    ck.save(3, tree)
+    ck.wait()
+    # Corrupt every shard of the primary in place, leaving COMMITTED intact
+    # so listing still sees it — load must fail, then fall through.
+    _, path = latest_checkpoint(primary)
+    for name in os.listdir(path):
+        if name.startswith("shard_"):
+            with open(os.path.join(path, name), "wb") as f:
+                f.write(b"not a checkpoint shard")
+    step, out = ck.restore_latest(tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(out["opt"]["step"]), 7)
+    ck.close()
+
+
+def test_replication_factor_places_on_hrw_chosen_neighbours(tmp_path, tree):
+    """R-way placement: each step's image lands on exactly the R replica
+    dirs the rendezvous hash picks — deterministic, so restore (and any
+    other host) can recompute the holder set."""
+    from repro.p2p import rendezvous_placement
+
+    replicas = [str(tmp_path / f"rep{i}") for i in range(4)]
+    ck = AsyncCheckpointer(str(tmp_path / "primary"), replicas=replicas,
+                           replication_factor=2, n_shards=1)
+    for step in (1, 2):
+        ck.save(step, tree)
+    ck.wait()
+    for step in (1, 2):
+        chosen = rendezvous_placement(f"step_{step}", replicas, 2)
+        for r in replicas:
+            holds = any(s == step for s, _ in list_checkpoints(r))
+            assert holds == (r in chosen), (step, r)
+    # Fallback still works with the primary gone entirely.
+    shutil.rmtree(str(tmp_path / "primary"))
+    os.makedirs(str(tmp_path / "primary"))
+    step, _ = ck.restore_latest(tree)
+    assert step == 2
+    ck.close()
+
+
 def test_gc_keeps_newest(tmp_path, tree):
     ck = AsyncCheckpointer(str(tmp_path / "p"), n_shards=1)
     for s in range(6):

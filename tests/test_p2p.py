@@ -1,0 +1,251 @@
+"""P2P checkpoint-storage overlay (repro.p2p + its sim/ckpt integrations).
+
+Three layers of checking, mirroring the engine's parity discipline:
+
+* closed-form laws (availability, stationary loss rate, transfer times)
+  against the exact event-driven :class:`ReplicaSetProcess`;
+* the batched engine's endogenous-T_d path against the per-replica heap
+  oracle (statistical equivalence of mean completion time, CI-bounded,
+  at ``macro_threshold=0``);
+* the server-offload experiment: P2P replication must reduce aggregate
+  server I/O vs the server-only baseline on constant, diurnal, and
+  flash-crowd churn.
+"""
+import numpy as np
+import pytest
+
+from repro.core.replication import effective_failure_rate
+from repro.p2p import (
+    P2PCheckpointStore,
+    ReplicaSetProcess,
+    StoreSpec,
+    TransferModel,
+    availability,
+    rendezvous_placement,
+    stationary_loss_rate,
+)
+from repro.sim import (
+    CellSpec,
+    ChurnNetwork,
+    FixedIntervalPolicy,
+    PolicyConfig,
+    Stage,
+    WorkflowSpec,
+    offload_csv,
+    run_cells,
+    scenario,
+    server_offload_sweep,
+    simulate_job,
+    simulate_workflow,
+)
+
+TM = TransferModel(img_bytes=200e6, peer_uplink=5e6, peer_downlink=50e6,
+                   server_capacity=100e6, server_load=20.0)
+
+
+# ------------------------------------------------------------ overlay laws
+def test_availability_matches_stationary_holder_process():
+    """Binomial(R, A) is the exact stationary marginal of the holder slots."""
+    mtbf, t_repair = 3600.0, 600.0
+    A = availability(1.0 / mtbf, t_repair)
+    assert A == pytest.approx(1.0 / (1.0 + 600.0 / 3600.0))
+    proc = ReplicaSetProcess(3, lambda t: mtbf, t_repair,
+                             np.random.default_rng(0))
+    # Sample well beyond the relaxation time (~t_repair) between reads.
+    samples = [proc.n_alive(t) for t in np.arange(0.0, 2e6, 3600.0)]
+    assert np.mean(samples) / 3.0 == pytest.approx(A, rel=0.03)
+
+
+def test_loss_rate_three_way_cross_check():
+    """Analytical mu_eff ~ exact stationary law ~ simulated loss rate."""
+    mu, R, t_repair = 1.0 / 3600.0, 2, 300.0
+    exact = stationary_loss_rate(mu, R, t_repair)
+    approx = effective_failure_rate(mu, R, t_repair)
+    assert effective_failure_rate(mu, R, t_repair, exact=True) == exact
+    # Small mu*t_repair: the cascade approximation agrees to leading order.
+    assert approx == pytest.approx(exact, rel=0.2)
+    proc = ReplicaSetProcess(R, lambda t: 1.0 / mu, t_repair,
+                             np.random.default_rng(1))
+    proc.advance(3e7)
+    assert proc.n_losses > 100  # enough transitions for a rate estimate
+    assert proc.loss_rate() == pytest.approx(exact, rel=0.15)
+
+
+def test_rendezvous_placement_is_deterministic_and_minimal():
+    nodes = [f"peer{i}" for i in range(8)]
+    chosen = rendezvous_placement("step_7", nodes, 3)
+    assert len(chosen) == 3 and len(set(chosen)) == 3
+    assert chosen == rendezvous_placement("step_7", nodes, 3)
+    # Removing an unchosen node never disturbs the holder set.
+    survivor_view = [n for n in nodes if n not in chosen[:1]]
+    lost_one = rendezvous_placement("step_7", survivor_view, 3)
+    assert set(chosen[1:]) <= set(lost_one)
+    # R larger than the membership degrades gracefully.
+    assert len(rendezvous_placement("k", nodes[:2], 5)) == 2
+
+
+def test_transfer_model_laws():
+    assert TM.restore_seconds(1) == pytest.approx(200e6 / 5e6)
+    assert TM.restore_seconds(4) == pytest.approx(200e6 / 20e6)
+    # Striping saturates at the restorer's downlink.
+    assert TM.restore_seconds(30) == pytest.approx(200e6 / 50e6)
+    srv = TM.server_seconds()
+    assert srv == pytest.approx(200e6 / (100e6 / 21.0))
+    assert TM.restore_seconds(0) == srv
+    # E[td] interpolates between the all-dead and all-alive extremes.
+    e = TM.expected_restore_seconds(3, 0.9)
+    assert TM.restore_seconds(3) < e < srv
+    with pytest.raises(ValueError):
+        TransferModel(img_bytes=-1.0)
+    with pytest.raises(ValueError):
+        StoreSpec(R=99)
+    with pytest.raises(ValueError):
+        StoreSpec(t_repair=0.0)
+
+
+# ----------------------------------------------- heap oracle (per-replica)
+def test_heap_store_server_only_equals_exogenous_td():
+    """R=0 consumes no replica randomness: identical trajectory to the
+    legacy simulator run with T_d = the server fallback time."""
+    scen = scenario("constant", mtbf=4000.0)
+    spec = StoreSpec(R=0, t_repair=900.0, transfer=TM)
+    kw = dict(k=16, work_required=4 * 3600.0, V=20.0)
+    rng = np.random.default_rng(7)
+    a = simulate_job(network=ChurnNetwork.from_scenario(scen, 128, rng),
+                     policy=FixedIntervalPolicy(900.0), T_d=0.0,
+                     store=P2PCheckpointStore(spec, scen.mtbf,
+                                              np.random.default_rng(1)), **kw)
+    rng = np.random.default_rng(7)
+    b = simulate_job(network=ChurnNetwork.from_scenario(scen, 128, rng),
+                     policy=FixedIntervalPolicy(900.0),
+                     T_d=TM.server_seconds(), **kw)
+    assert a.wall_time == b.wall_time
+    assert a.n_server_restores == a.n_failures > 0
+    # Server pays for every interior checkpoint upload and every restore.
+    assert a.server_bytes == TM.img_bytes * (a.n_checkpoints
+                                             + a.n_server_restores)
+
+
+def _store_cells(scen, spec, pol, n, **kw):
+    base = dict(k=16, work=4 * 3600.0, V=20.0, T_d=spec.td_server, store=spec)
+    base.update(kw)
+    return [CellSpec(scenario=scen, policy=pol, seed=s, **base)
+            for s in range(n)]
+
+
+def test_engine_endogenous_td_matches_per_replica_heap_oracle():
+    """Acceptance criterion: the engine's closed-form availability law and
+    the heap's per-replica events give the same mean completion time
+    within CI bounds at macro_threshold=0."""
+    scen = scenario("constant", mtbf=4000.0)
+    spec = StoreSpec(R=2, t_repair=900.0, transfer=TM)
+    n = 48
+    res = run_cells(_store_cells(scen, spec, PolicyConfig(kind="fixed",
+                                                          fixed_T=900.0), n),
+                    backend="numpy", macro_threshold=0.0)
+    assert res.completed.all()
+    walls = []
+    for s in range(n):
+        rng = np.random.default_rng(s)
+        net = ChurnNetwork.from_scenario(scen, 128, rng)
+        st = P2PCheckpointStore(spec, scen.mtbf,
+                                np.random.default_rng(10_000 + s))
+        r = simulate_job(network=net, policy=FixedIntervalPolicy(900.0), k=16,
+                         work_required=4 * 3600.0, V=20.0, T_d=0.0, store=st)
+        walls.append(r.wall_time)
+    walls = np.asarray(walls)
+    se = np.sqrt(res.wall_time.var() / n + walls.var() / n)
+    diff = abs(res.wall_time.mean() - walls.mean())
+    assert diff <= 3.0 * se, (res.wall_time.mean(), walls.mean(), se)
+    # Restore sourcing statistics agree too (peer vs server split).
+    assert res.n_peer_restores.mean() > 10 * max(res.n_server_restores.mean(),
+                                                 1e-9)
+
+
+def test_engine_store_invariants_and_accounting():
+    scen = scenario("constant", mtbf=7200.0)
+    spec = StoreSpec(R=0, t_repair=600.0, transfer=TM)
+    res = run_cells(_store_cells(scen, spec,
+                                 PolicyConfig(kind="fixed", fixed_T=1200.0), 8),
+                    backend="numpy")
+    assert res.completed.all()
+    total = (res.work_required + res.checkpoint_time + res.restore_time
+             + res.wasted_work)
+    np.testing.assert_allclose(res.wall_time, total, rtol=1e-9)
+    assert (res.n_peer_restores == 0).all()
+    np.testing.assert_allclose(
+        res.server_bytes,
+        TM.img_bytes * (res.n_checkpoints + res.n_server_restores))
+    # Legacy cells never account server traffic.
+    legacy = run_cells([CellSpec(scenario=scen,
+                                 policy=PolicyConfig(kind="fixed", fixed_T=1200.0),
+                                 seed=0, k=16, work=4 * 3600.0)],
+                       backend="numpy")
+    assert (legacy.server_bytes == 0).all()
+
+
+def test_engine_store_adaptive_policy_tracks_endogenous_td():
+    """The adaptive mirror must survive endogenous T_d (td_obs feedback)."""
+    scen = scenario("constant", mtbf=4000.0)
+    spec = StoreSpec(R=3, t_repair=600.0, transfer=TM)
+    pol = PolicyConfig(kind="adaptive", prior_mu=1 / 4000.0, prior_v=20.0)
+    res = run_cells(_store_cells(scen, spec, pol, 16), backend="numpy")
+    assert res.completed.all()
+    assert (res.n_checkpoints > 0).all()
+    # With R=3 at this churn the server fallback should be rare.
+    assert res.n_server_restores.mean() < 0.2 * res.n_peer_restores.mean()
+
+
+def test_jax_backend_endogenous_td_matches_numpy():
+    jax = pytest.importorskip("jax")
+    del jax
+    scen = scenario("constant", mtbf=4000.0)
+    spec = StoreSpec(R=2, t_repair=900.0, transfer=TM)
+    cells = _store_cells(scen, spec, PolicyConfig(kind="fixed", fixed_T=900.0),
+                         32)
+    a = run_cells(cells, backend="numpy")
+    b = run_cells(cells, backend="jax")
+    assert b.completed.all()
+    assert b.wall_time.mean() == pytest.approx(a.wall_time.mean(), rel=0.08)
+    assert (b.n_peer_restores.mean()
+            == pytest.approx(a.n_peer_restores.mean(), rel=0.15))
+
+
+# -------------------------------------------------- server-offload sweep
+def test_server_offload_reduces_server_io_on_three_scenarios():
+    """Acceptance criterion: P2P replication cuts aggregate server I/O vs
+    the server-only baseline on constant, diurnal, and flash-crowd churn,
+    with a CSV row per cell."""
+    scens = [scenario("constant", mtbf=7200.0),
+             scenario("diurnal", mtbf=7200.0),
+             scenario("flash_crowd", mtbf=7200.0)]
+    cells = server_offload_sweep(scens, R_values=(0, 3), transfer=TM,
+                                 seeds=range(4), work=4 * 3600.0,
+                                 backend="numpy")
+    by_mode = {(c.scenario, c.R): c for c in cells}
+    for name in ("constant", "diurnal", "flash_crowd"):
+        base, p2p = by_mode[(name, 0)], by_mode[(name, 3)]
+        assert base.mean_server_bytes > 0
+        assert p2p.mean_server_bytes < 0.5 * base.mean_server_bytes, name
+        assert p2p.completed_frac == 1.0
+    rows = offload_csv(cells)
+    assert len(rows) == 1 + 6
+    assert rows[0].startswith("scenario,R,")
+    assert all(r.count(",") == rows[0].count(",") for r in rows[1:])
+
+
+# -------------------------------------------------------------- workflows
+def test_workflow_p2p_store_offloads_server_and_completes():
+    spec = WorkflowSpec(stages=(
+        Stage("a", work=1800.0, k=8),
+        Stage("b", work=3600.0, k=8, deps=("a",), handoff=60.0),
+    ))
+    scen = scenario("constant", mtbf=7200.0)
+    p2p = simulate_workflow(spec, scen, seeds=range(3), backend="numpy",
+                            store=StoreSpec(R=3, transfer=TM))
+    srv = simulate_workflow(spec, scen, seeds=range(3), backend="numpy",
+                            store=StoreSpec(R=0, transfer=TM))
+    assert p2p.all_completed and srv.all_completed
+    assert p2p.server_bytes.mean() < srv.server_bytes.mean()
+    # Edge fetches happened (hand-off time paid from the replica set).
+    assert (p2p.stages["b"].handoff_time > 0).all()

@@ -279,3 +279,43 @@ def test_workflow_validation():
                              Stage("y", 1.0, deps=("x",))))
     with pytest.raises(ValueError):
         WorkflowSpec(stages=(Stage("x", 1.0), Stage("x", 2.0)))
+
+
+def test_workflow_censored_stage_propagates_to_all_transitive_dependents():
+    """A livelocked stage never produces output: every transitive dependent
+    must be marked unfinished even when its own simulation completed."""
+    spec = WorkflowSpec(stages=(
+        Stage("a", work=4 * 3600.0, k=16),           # will livelock
+        Stage("b", work=60.0, k=2, deps=("a",)),     # trivially completable
+        Stage("c", work=60.0, k=2, deps=("b",)),     # transitive dependent
+    ))
+    # Heavy churn + an absurd fixed interval: stage a keeps rolling back to
+    # the same state (paper Sec 4.2) and censors at max_wall_factor * work.
+    res = simulate_workflow(spec, scenario("constant", mtbf=600.0),
+                            seeds=range(3), V=V, T_d=TD, backend="numpy",
+                            policy=PolicyConfig(kind="fixed", fixed_T=86400.0),
+                            max_wall_factor=10.0)
+    assert not res.stages["a"].sim.completed.any()
+    # b and c themselves can finish (tiny jobs) — but must not count.
+    assert res.stages["b"].sim.completed.any()
+    assert not res.stages["b"].completed.any()
+    assert not res.stages["c"].completed.any()
+    assert not res.all_completed
+
+
+def test_workflow_edge_fetch_retries_counted_as_waste():
+    """Churn-interrupted hand-off transfers are accounted in the stage's
+    hand-off waste, and elapsed = successful transfer + waste."""
+    spec = WorkflowSpec(stages=(
+        Stage("a", work=1800.0, k=4),
+        Stage("b", work=1800.0, k=4, deps=("a",), handoff=300.0),
+    ))
+    # P(300s transfer survives) = exp(-4 * 300/600) = e^-2: retries certain
+    # across seeds.
+    res = simulate_workflow(spec, scenario("constant", mtbf=600.0),
+                            seeds=range(6), V=V, T_d=TD, backend="numpy")
+    b = res.stages["b"]
+    assert (b.handoff_waste > 0).any()
+    np.testing.assert_allclose(b.handoff_time, 300.0 + b.handoff_waste,
+                               rtol=1e-9)
+    assert (res.stages["a"].handoff_waste == 0).all()  # no deps, no fetches
