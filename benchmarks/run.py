@@ -3,7 +3,7 @@
 One section per paper table/figure plus the framework benches.  Prints
 ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig4,fig5,kernels,e2e,roofline,offload]
+    PYTHONPATH=src python -m benchmarks.run [--only fig4,fig5,kernels,e2e,roofline,offload,gossip]
 """
 from __future__ import annotations
 
@@ -15,7 +15,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig4,fig5,kernels,e2e,roofline,offload")
+                    help="comma list: fig4,fig5,kernels,e2e,roofline,offload,"
+                         "gossip")
     ap.add_argument("--fast", action="store_true",
                     help="tiny smoke grids (CI): fewer seeds/intervals, short jobs")
     args = ap.parse_args()
@@ -60,6 +61,14 @@ def main() -> None:
         for row in server_offload.run_all(fast=args.fast)[1:]:
             print(row, flush=True)
         sys.stderr.write(f"[bench] server_offload done in "
+                         f"{time.monotonic() - t:.0f}s\n")
+
+    if want("gossip"):
+        from benchmarks import gossip_fidelity
+        t = time.monotonic()
+        for row in gossip_fidelity.run_all(fast=args.fast)[1:]:
+            print(row, flush=True)
+        sys.stderr.write(f"[bench] gossip_fidelity done in "
                          f"{time.monotonic() - t:.0f}s\n")
 
     if want("roofline"):

@@ -9,6 +9,11 @@ the batched Monte-Carlo engine under a time-varying churn scenario, and
 compares the adaptive checkpoint policy against a naive fixed interval on
 workflow makespan.
 
+``--estimator`` selects the adaptive estimator's information-sharing
+regime (paper Sec 3.1.4): ``pooled`` statistics (the centralized upper
+bound), per-peer ``isolated`` estimators, or per-peer estimators with
+``gossip`` exchange (``--gossip-period``/``--gossip-fanout``).
+
 ``--p2p`` switches the workflow onto the P2P checkpoint-storage overlay:
 stage restores and hand-off fetches read from R-way peer replica sets
 (endogenous restore times) instead of paying flat costs, and the run
@@ -55,6 +60,15 @@ def main():
     ap.add_argument("--mtbf", type=float, default=7200.0)
     ap.add_argument("--seeds", type=int, default=8)
     ap.add_argument("--backend", default="auto", choices=("auto", "jax", "numpy"))
+    ap.add_argument("--estimator", default="pooled",
+                    choices=("pooled", "isolated", "gossip"),
+                    help="adaptive-estimator regime (paper Sec 3.1.4): "
+                         "pooled statistics, per-peer isolated estimators, "
+                         "or per-peer estimators with gossip exchange")
+    ap.add_argument("--gossip-period", type=float, default=600.0,
+                    help="seconds between gossip exchanges (--estimator gossip)")
+    ap.add_argument("--gossip-fanout", type=int, default=3,
+                    help="ring neighbours pulled per gossip round")
     ap.add_argument("--p2p", action="store_true",
                     help="store checkpoints on the P2P overlay and compare "
                          "against the server-only baseline")
@@ -68,9 +82,12 @@ def main():
                "scale" if args.scenario == "weibull" else "mtbf": args.mtbf}
     scen = scenario(args.scenario, **scen_kw)
     spec = build_workflow()
-    print(f"workflow: {len(spec)} stages under scenario {scen.name!r}")
+    print(f"workflow: {len(spec)} stages under scenario {scen.name!r}, "
+          f"estimator regime {args.estimator!r}")
     adaptive_pol = PolicyConfig(kind="adaptive", prior_mu=1.0 / args.mtbf,
-                                prior_v=V)
+                                prior_v=V, regime=args.estimator,
+                                gossip_period=args.gossip_period,
+                                gossip_fanout=args.gossip_fanout)
     kw = dict(seeds=range(args.seeds), V=V, T_d=TD, backend=args.backend)
 
     if args.p2p:

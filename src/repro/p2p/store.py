@@ -89,16 +89,19 @@ class P2PCheckpointStore:
         self.n_server_restores = 0
         self.n_peer_restores = 0
         self._last_from_server = False
+        self._last_td = 0.0
 
     def restore_seconds_at(self, t: float) -> float:
         """Endogenous T_d for a restore attempt starting at wall time ``t``.
 
-        Reads the exact surviving replica count; the attempt's source is
-        remembered so :meth:`commit_restore` can account it on success.
+        Reads the exact surviving replica count; the attempt's source and
+        duration are remembered so :meth:`commit_restore` /
+        :meth:`abort_restore` can account it per attempt.
         """
         m = self.holders.n_alive(t)
         self._last_from_server = m == 0
-        return self.spec.transfer.restore_seconds(m)
+        self._last_td = self.spec.transfer.restore_seconds(m)
+        return self._last_td
 
     def commit_restore(self) -> None:
         """The in-flight restore completed (no churn interrupted it)."""
@@ -107,6 +110,16 @@ class P2PCheckpointStore:
             self.server_bytes += self.spec.transfer.img_bytes
         else:
             self.n_peer_restores += 1
+
+    def abort_restore(self, elapsed: float) -> None:
+        """The in-flight restore was interrupted by churn after ``elapsed``
+        seconds.  A server-fallback attempt still moved elapsed/td of the
+        image through the shared pipe — server I/O is billed per ATTEMPT,
+        not per success, or heavy churn (where retries concentrate) would
+        be exactly where the server load is undercounted."""
+        if self._last_from_server and self._last_td > 0.0:
+            frac = min(max(elapsed, 0.0) / self._last_td, 1.0)
+            self.server_bytes += self.spec.transfer.img_bytes * frac
 
     def commit_checkpoint(self) -> None:
         """A checkpoint was written.  Server-only mode uploads the image to

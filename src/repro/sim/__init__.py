@@ -18,6 +18,7 @@ endogenously from the P2P checkpoint store (DESIGN.md Sec 6).
 from repro.sim.engine import BatchResult, CellSpec, PolicyConfig, run_cells
 from repro.sim.experiments import (
     Comparison,
+    GossipFidelityCell,
     GridEntry,
     OffloadCell,
     compare,
@@ -26,6 +27,8 @@ from repro.sim.experiments import (
     fig4_static,
     fig5_td_sweep,
     fig5_v_sweep,
+    gossip_csv,
+    gossip_fidelity_sweep,
     offload_csv,
     scenario_sweep,
     server_offload_sweep,
@@ -34,6 +37,7 @@ from repro.sim.experiments import (
 from repro.sim.job import (
     AdaptivePolicy,
     FixedIntervalPolicy,
+    GossipAdaptivePolicy,
     OraclePolicy,
     SimResult,
     simulate_job,
@@ -61,6 +65,8 @@ __all__ = [
     "Comparison",
     "DeathEvent",
     "FixedIntervalPolicy",
+    "GossipAdaptivePolicy",
+    "GossipFidelityCell",
     "GridEntry",
     "OffloadCell",
     "OraclePolicy",
@@ -80,6 +86,8 @@ __all__ = [
     "fig4_static",
     "fig5_td_sweep",
     "fig5_v_sweep",
+    "gossip_csv",
+    "gossip_fidelity_sweep",
     "offload_csv",
     "register_scenario",
     "run_cells",

@@ -37,12 +37,44 @@ Two deliberate approximations (both switchable, both mean-preserving):
   and variance (CLT), capped by the scenario's hazard coherence time so
   time-varying rates are still honoured.  This turns livelocked /
   failure-dominated cells from tens of thousands of steps into tens.
-  ``macro_threshold=0`` disables it for exact parity runs.
+  ``macro_threshold=0`` disables it for exact parity runs.  Adaptive
+  cells cap each burst at ~one estimator-window turnover of watch deaths
+  (``window/(watch*mu)`` seconds): the estimator only updates between
+  steps, and an uncapped burst would outrun the adaptation that lets the
+  exact path escape a mis-estimated livelock.
 
 The adaptive policy mirrors :class:`AdaptiveCheckpointController`: a
 windowed-MLE failure-rate estimate (exposure form, Gamma-prior smoothed),
 exact V after the first checkpoint, T_d initialized to V until a restore is
 seen, and the same interval clamps.
+
+**Estimator regimes** (paper Sec 3.1.4, DESIGN.md Sec 3): the fidelity of
+the adaptive estimator's information sharing is an explicit axis of every
+cell, ``PolicyConfig.regime``:
+
+* ``"pooled"`` — today's behaviour and the centralized upper bound: one
+  estimator ingests the whole ``watch`` neighbourhood's observation
+  stream in expectation, i.e. perfect, instantaneous sharing among the k
+  peers.
+* ``"isolated"`` — each of the k peers runs its own estimator fed only by
+  its 1/k share of the watch neighbourhood, Poisson-sampled (estimator
+  noise is exactly what distinguishes fidelity, so the expected-value
+  shortcut does not apply); estimates are never exchanged.  The job's
+  checkpoint decisions come from peer 0, the *decision peer*.
+* ``"gossip(period, fanout, weight)"`` — isolated peers that every
+  ``period`` seconds pull the mu estimates of ``fanout`` ring
+  neighbours (a deterministic cyclic schedule — a circulant, doubly
+  stochastic mixing matrix, so the peer average is preserved while the
+  spread contracts) and blend them with ``ingest_gossip`` semantics:
+  merged = (1-w)*local + w*remote_mean, after which the local window is
+  re-seeded at the merged value (mirroring
+  ``AdaptiveCheckpointController.ingest_gossip``).
+
+Per-peer estimator state (``ema_d``/``ema_T``/``mu0``/``td_obs``) is
+carried on a trailing peer axis sized ``_PEER_CAP`` whenever any cell in
+the batch runs a non-pooled regime (1 otherwise); per-peer observation
+noise comes from a dedicated stream per seed so a cell's realization
+still never depends on batch composition.
 
 **Endogenous restore times** (DESIGN.md Sec 6): a cell carrying a
 :class:`repro.p2p.StoreSpec` derives every restore's duration from the
@@ -92,11 +124,21 @@ except Exception:  # pragma: no cover
 
 _E = math.e
 _POLICY_IDS = {"fixed": 0, "adaptive": 1, "oracle": 2}
+_REGIME_IDS = {"pooled": 0, "isolated": 1, "gossip": 2}
 _CHUNK = 256   # lax.scan steps per jitted call; host checks completion between
 _LW_ITERS = 4  # Halley iterations for the per-step W0 (cubic convergence:
                # 3 reaches 1e-14 over the paper's argument range; one spare)
 _MACRO_CAP = 1e9  # absolute bound on failures folded into one macro step
 _RNG_BLOCK = 256  # numpy backend: uniforms/normals pregenerated per seed
+_PEER_CAP = 32    # peer-axis width for per-peer estimator regimes; fixed (not
+                  # the batch max) so a cell's observation noise is invariant
+                  # to batch composition
+_FANOUT_CAP = 8   # static unroll bound for the gossip pull loop
+_POIS_TERMS = 16  # inverse-CDF unroll terms for per-peer death sampling
+_POIS_SWITCH = 6.0  # switch to the clipped-normal approximation above this
+                    # mean (P[X > 16 | lam = 6] ~ 1e-4, clip bias < 1%)
+_OBS_STREAM = 0x6F627376  # numpy backend: per-seed tag of the secondary
+                          # stream feeding per-peer observation noise
 
 
 @dataclass(frozen=True)
@@ -106,6 +148,15 @@ class PolicyConfig:
     Mirrors the fields of :class:`AdaptiveCheckpointController` /
     :class:`FixedIntervalPolicy` / :class:`OraclePolicy` so a cell spec is a
     complete, hashable description of the policy.
+
+    ``regime`` selects how the adaptive estimator shares information among
+    the k job peers (module docstring): ``"pooled"`` (centralized upper
+    bound, the default), ``"isolated"`` (per-peer estimators, no
+    exchange), or ``"gossip"`` (per-peer estimators that exchange
+    estimates every ``gossip_period`` seconds with ``gossip_fanout`` ring
+    neighbours, blend weight ``gossip_weight`` — paper Sec 3.1.4).  Only
+    meaningful for ``kind="adaptive"``; fixed and oracle policies do not
+    estimate.
     """
 
     kind: str = "adaptive"  # "fixed" | "adaptive" | "oracle"
@@ -116,12 +167,28 @@ class PolicyConfig:
     window: int = 32
     min_interval: float = 1.0
     max_interval: float = 24 * 3600.0
+    regime: str = "pooled"  # "pooled" | "isolated" | "gossip"
+    gossip_period: float = 600.0
+    gossip_fanout: int = 2
+    gossip_weight: float = 0.5
 
     def __post_init__(self) -> None:
         if self.kind not in _POLICY_IDS:
             raise ValueError(f"unknown policy kind {self.kind!r}")
         if self.kind == "fixed" and self.fixed_T <= 0:
             raise ValueError("fixed_T must be positive")
+        if self.regime not in _REGIME_IDS:
+            raise ValueError(f"unknown estimator regime {self.regime!r}")
+        if self.regime != "pooled" and self.kind != "adaptive":
+            raise ValueError(
+                f"regime {self.regime!r} requires kind='adaptive' "
+                f"(fixed/oracle policies do not estimate)")
+        if self.gossip_period <= 0:
+            raise ValueError("gossip_period must be positive")
+        if not 1 <= self.gossip_fanout <= _FANOUT_CAP:
+            raise ValueError(f"gossip_fanout must be in [1, {_FANOUT_CAP}]")
+        if not 0.0 <= self.gossip_weight <= 1.0:
+            raise ValueError("gossip_weight must be in [0, 1]")
 
 
 @dataclass(frozen=True)
@@ -183,10 +250,15 @@ class _Params(NamedTuple):
     """Packed per-cell constants (all shape [B] except the trace tables)."""
 
     pol: np.ndarray          # policy kind id
+    regime: np.ndarray       # estimator regime id (pooled/isolated/gossip)
+    g_period: np.ndarray     # gossip exchange period (s)
+    g_fanout: np.ndarray     # gossip ring partners per round (float for jit)
+    g_weight: np.ndarray     # blend weight of remote estimates
     fixed_T: np.ndarray
     prior_mu: np.ndarray
     prior_v: np.ndarray
     prior_count: np.ndarray
+    window: np.ndarray       # estimator window K (adaptive macro-burst cap)
     log_decay: np.ndarray    # log(1 - 1/window): estimator decay per death
     min_iv: np.ndarray
     max_iv: np.ndarray
@@ -212,7 +284,14 @@ class _Params(NamedTuple):
 
 
 class _State(NamedTuple):
-    """Per-cell mutable simulation state (all shape [B]; floats for jit)."""
+    """Per-cell mutable simulation state (floats for jit).
+
+    All arrays are shape [B] except the per-peer estimator state
+    (``ema_d``/``ema_T``/``mu0``/``td_obs``), which carries a trailing
+    peer axis of width 1 (all-pooled batches) or ``_PEER_CAP``.  Peer
+    slot 0 is the *decision peer*: the job's checkpoint interval is
+    computed from its estimates in every regime.
+    """
 
     t: np.ndarray            # absolute wall clock (starts at t0)
     done: np.ndarray         # committed work
@@ -224,11 +303,14 @@ class _State(NamedTuple):
     wasted: np.ndarray
     ckpt_time: np.ndarray
     restore_time: np.ndarray
-    ema_d: np.ndarray        # decayed observed-death count (estimator)
-    ema_T: np.ndarray        # decayed observed exposure (slot-seconds)
+    ema_d: np.ndarray        # [B, P] decayed observed-death count (estimator)
+    ema_T: np.ndarray        # [B, P] decayed observed exposure (slot-seconds)
+    mu0: np.ndarray          # [B, P] per-peer prior center (gossip re-seeds)
     seen_ckpt: np.ndarray    # bool: V has been measured
     seen_restore: np.ndarray  # bool: T_d has been measured
-    td_obs: np.ndarray       # last observed restore duration (store cells)
+    td_obs: np.ndarray       # [B, P] last observed restore duration
+    next_g: np.ndarray       # wall time of the next gossip round
+    n_round: np.ndarray      # gossip rounds done (drives the cyclic schedule)
     sv_bytes: np.ndarray     # server I/O imposed so far
     n_srv: np.ndarray        # restores served by the server fallback
     n_peer: np.ndarray       # restores served from peer replicas
@@ -244,6 +326,10 @@ def _pack(cells: Sequence[CellSpec]) -> _Params:
     for c in cells:
         if c.k > c.n_slots:
             raise ValueError(f"job needs {c.k} slots but network has {c.n_slots}")
+        if c.policy.regime != "pooled" and c.k > _PEER_CAP:
+            raise ValueError(
+                f"per-peer estimator regimes support k <= {_PEER_CAP}, "
+                f"got k={c.k}")
     L = max(2, max(len(c.scenario.trace_t) for c in cells))
     trace_t = np.zeros((B, L))
     trace_mtbf = np.ones((B, L))
@@ -260,10 +346,16 @@ def _pack(cells: Sequence[CellSpec]) -> _Params:
                 min_gap[i] = float(np.min(np.diff(tt)))
     return _Params(
         pol=np.asarray([_POLICY_IDS[c.policy.kind] for c in cells], dtype=np.int64),
+        regime=np.asarray([_REGIME_IDS[c.policy.regime] for c in cells],
+                          dtype=np.int64),
+        g_period=f([c.policy.gossip_period for c in cells]),
+        g_fanout=f([c.policy.gossip_fanout for c in cells]),
+        g_weight=f([c.policy.gossip_weight for c in cells]),
         fixed_T=f([c.policy.fixed_T for c in cells]),
         prior_mu=f([c.policy.prior_mu for c in cells]),
         prior_v=f([c.policy.prior_v for c in cells]),
         prior_count=f([c.policy.prior_count for c in cells]),
+        window=f([c.policy.window for c in cells]),
         log_decay=f([math.log1p(-1.0 / c.policy.window) for c in cells]),
         min_iv=f([c.policy.min_interval for c in cells]),
         max_iv=f([c.policy.max_interval for c in cells]),
@@ -290,16 +382,20 @@ def _pack(cells: Sequence[CellSpec]) -> _Params:
     )
 
 
-def _init_state(p: _Params, xp) -> _State:
+def _init_state(p: _Params, xp, n_peer: int) -> _State:
     B = p.k.shape[0]
     zeros = xp.zeros(B)
     false = xp.zeros(B, dtype=bool)
+    zeros_p = xp.zeros((B, n_peer))
     return _State(t=xp.asarray(p.t0), done=zeros, in_restore=false,
                   finished=false, censored=false, n_ckpt=zeros, n_fail=zeros,
                   wasted=zeros, ckpt_time=zeros, restore_time=zeros,
-                  ema_d=zeros, ema_T=zeros, seen_ckpt=false, seen_restore=false,
-                  td_obs=xp.asarray(p.T_d), sv_bytes=zeros, n_srv=zeros,
-                  n_peer=zeros)
+                  ema_d=zeros_p, ema_T=zeros_p,
+                  mu0=zeros_p + p.prior_mu[:, None],
+                  seen_ckpt=false, seen_restore=false,
+                  td_obs=zeros_p + p.T_d[:, None],
+                  next_g=p.t0 + p.g_period, n_round=zeros,
+                  sv_bytes=zeros, n_srv=zeros, n_peer=zeros)
 
 
 def _opt_interval(mu, k, V, T_d, xp, lw):
@@ -396,20 +492,26 @@ def _attempt(s: _State, p: _Params, u2, xp, lw, any_store: bool):
 
     # Policy intervals — all three computed, selected branchlessly.  The
     # adaptive and oracle Lambert-W evaluations are stacked into one call:
-    # the W iterations dominate per-step transcendental count.
-    mu_hat = (s.ema_d + p.prior_count) / (s.ema_T + p.prior_count / p.prior_mu)
+    # the W iterations dominate per-step transcendental count.  Decisions
+    # come from peer slot 0 (the decision peer) in every estimator regime;
+    # pooled cells keep all their estimator state in that slot.
+    mu_hat = ((s.ema_d[:, 0] + p.prior_count)
+              / (s.ema_T[:, 0] + p.prior_count / s.mu0[:, 0]))
     V_hat = xp.where(s.seen_ckpt, p.V, p.prior_v)
     # Adaptive cells mirror observe_restore: the last measured restore
     # duration (endogenous for store cells); oracle cells know the law and
     # use E[td] under the true availability.
-    td_known = xp.where(p.store_on, s.td_obs, p.T_d)
+    td_known = xp.where(p.store_on, s.td_obs[:, 0], p.T_d)
     Td_hat = xp.where(s.seen_restore, td_known, V_hat)
     iv2 = _opt_interval(
         xp.stack([mu_hat, mu]), p.k,
         xp.stack([xp.maximum(V_hat, 1e-6), p.V]),
         xp.stack([Td_hat, td_expect]), xp, lw)
     iv_adaptive = xp.clip(iv2[0], p.min_iv, p.max_iv)
-    iv_oracle = iv2[1]
+    # The oracle is clamped exactly like the adaptive policy (and like the
+    # heap's OraclePolicy): an unclipped oracle conflates policy quality
+    # with clipping in every comparison grid.
+    iv_oracle = xp.clip(iv2[1], p.min_iv, p.max_iv)
     interval = xp.where(p.pol == 0, p.fixed_T,
                         xp.where(p.pol == 1, iv_adaptive, iv_oracle))
     interval = xp.maximum(interval, 1e-3)
@@ -423,12 +525,77 @@ def _attempt(s: _State, p: _Params, u2, xp, lw, any_store: bool):
             censor_now, att, td_rest, from_server)
 
 
-def _apply(s: _State, p: _Params, pre, u, z, macro_threshold, xp) -> _State:
+def _sample_counts(lam, u3, z3, xp):
+    """Per-peer observed-death counts ~ Poisson(lam), branchless.
+
+    Small means (the common case: one checkpoint cycle's worth of deaths in
+    a watch/k slice) use an inverse-CDF unroll over ``_POIS_TERMS`` terms
+    driven by the uniform ``u3``; means above ``_POIS_SWITCH`` switch to the
+    clipped-normal approximation driven by ``z3`` (clip bias < 1% there).
+    Both transforms are per-element, so same-seed cells share the underlying
+    draws (common random numbers) while each applies its own rate.
+    """
+    lam_s = xp.minimum(lam, _POIS_SWITCH)
+    pmf = xp.exp(-lam_s)
+    cdf = pmf
+    d = xp.zeros_like(lam)
+    for j in range(_POIS_TERMS):
+        d = d + (u3 > cdf)
+        pmf = pmf * lam_s / (j + 1.0)
+        cdf = cdf + pmf
+    d_norm = xp.maximum(lam + xp.sqrt(xp.maximum(lam, 0.0)) * z3, 0.0)
+    return xp.where(lam > _POIS_SWITCH, d_norm, d)
+
+
+def _gossip_mix(s_t, ema_d, ema_T, mu0, n_round, next_g, finished,
+                peer_act, p: _Params, xp):
+    """One epidemic exchange round for cells whose gossip clock is due.
+
+    Mirrors ``AdaptiveCheckpointController.ingest_gossip`` per peer: each
+    peer pulls the current mu point estimates of ``g_fanout`` ring
+    neighbours (deterministic cyclic schedule — offset 1 + (round*fanout +
+    f) mod (k-1), a circulant doubly stochastic mixing matrix, identical
+    to the heap oracle's ``GossipAdaptivePolicy``), blends merged =
+    (1-w)*local + w*remote_mean, and re-seeds its window at the merged
+    value (ema_d = ema_T = 0, prior center mu0 = merged) so subsequent
+    local observations keep moving it.  Only mu is exchanged: V and T_d
+    are job-level stalls every peer observes identically (the heap
+    oracle's ``ingest_gossip`` blends of equal values are no-ops), so
+    there is nothing to mix.
+    """
+    due = (p.regime == _REGIME_IDS["gossip"]) & ~finished & (s_t >= next_g)
+    P = ema_d.shape[1]
+    mu_hat = (ema_d + p.prior_count[:, None]) / (
+        ema_T + p.prior_count[:, None] / mu0)
+    idx = xp.arange(P)[None, :]
+    kk = xp.maximum(p.k, 1.0)[:, None]
+    km1 = xp.maximum(p.k - 1.0, 1.0)
+    rem_mu = xp.zeros_like(mu_hat)
+    for f in range(_FANOUT_CAP):
+        off = 1.0 + ((n_round * p.g_fanout + f) % km1)
+        j = ((idx + off[:, None]) % kk).astype(p.regime.dtype)
+        in_f = (f < p.g_fanout)[:, None]
+        rem_mu = rem_mu + xp.where(in_f,
+                                   xp.take_along_axis(mu_hat, j, axis=1), 0.0)
+    w = p.g_weight[:, None]
+    merged_mu = (1.0 - w) * mu_hat + w * rem_mu / p.g_fanout[:, None]
+    upd = due[:, None] & peer_act
+    return (xp.where(upd, 0.0, ema_d),
+            xp.where(upd, 0.0, ema_T),
+            xp.where(upd, merged_mu, mu0),
+            n_round + due,
+            xp.where(due, s_t + p.g_period, next_g))
+
+
+def _apply(s: _State, p: _Params, pre, u, z, u3, z3, macro_threshold,
+           peer_axis: int, xp) -> _State:
     """Pure post-sampling half: advance each cell by one (macro-)attempt.
 
     ``u`` is a uniform draw (failure time for regular cells, geometric
     failure count for macro cells); ``z`` a standard normal (macro burst
-    duration).
+    duration).  ``u3``/``z3`` (shape [B, peer_axis], or None when
+    ``peer_axis`` is 1) drive the per-peer observation sampling of
+    non-pooled estimator regimes.
     """
     (mu, kmu, attempt_len, work_target, is_final, cycle_len, censor_now, att,
      td_rest, from_server) = pre
@@ -452,6 +619,14 @@ def _apply(s: _State, p: _Params, pre, u, z, macro_threshold, xp) -> _State:
                       / xp.minimum(xp.log1p(-p_surv), -1e-300))
     horizon = xp.minimum(_coherence(s.t, p, xp),
                          0.5 * (p.t0 + p.max_wall - s.t) + pair_m)
+    # Adaptive cells must not macro-step past their own learning: the
+    # estimator only updates BETWEEN steps, so a burst is capped at about
+    # one window turnover of watch-neighbourhood deaths (window/(watch*mu)
+    # seconds) — the same timescale on which the exact path escapes a
+    # mis-estimated livelock.  Fixed and oracle cells have nothing to
+    # learn and keep the full burst.
+    horizon = xp.minimum(horizon, xp.where(
+        p.pol == 1, p.window / xp.maximum(p.watch * mu, 1e-300), xp.inf))
     M_cap = xp.floor(horizon / xp.maximum(pair_m, 1e-300))
     M = xp.clip(xp.minimum(M_want, M_cap), 0.0, _MACRO_CAP)
     # Store cells never macro-step: the burst closed form above assumes a
@@ -492,29 +667,59 @@ def _apply(s: _State, p: _Params, pre, u, z, macro_threshold, xp) -> _State:
     censored = s.censored | censor_now
     seen_ckpt = s.seen_ckpt | interior
     seen_restore = s.seen_restore | rs | m_ok | capped
-    td_obs = xp.where(rs, td_rest, s.td_obs)  # mirror of observe_restore
-    # Server I/O accounting: server-only cells (R=0) upload every interior
-    # checkpoint; any store cell whose restore found no surviving replica
-    # downloads the image from the server fallback.
+    # All k peers experience a completed restore (the job stalls together),
+    # so every peer slot observes its duration — mirror of observe_restore.
+    td_obs = xp.where(rs[:, None], td_rest[:, None], s.td_obs)
+    # Server I/O accounting, billed per ATTEMPT: server-only cells (R=0)
+    # upload every interior checkpoint; any store-cell restore attempt that
+    # found no surviving replica pulls from the server fallback — including
+    # churn-interrupted attempts, which still moved dt/td of the image
+    # through the shared pipe before dying (the undercount would otherwise
+    # be worst exactly under heavy churn).
     srv_ckpt = interior & p.store_on & (p.R < 1.0)
     srv_rest = rs & from_server  # exclusive with srv_ckpt (work vs restore)
-    sv_bytes = s.sv_bytes + xp.where(srv_ckpt | srv_rest, p.img_bytes, 0.0)
+    srv_part = rf & from_server  # interrupted server download (partial)
+    frac = xp.where(srv_part, dt / xp.maximum(td_rest, 1e-300), 0.0)
+    sv_bytes = (s.sv_bytes + xp.where(srv_ckpt | srv_rest, p.img_bytes, 0.0)
+                + frac * p.img_bytes)
     n_srv = s.n_srv + srv_rest
     n_peer = s.n_peer + (rs & p.store_on & ~from_server)
 
-    # Estimator: expected deaths in the whole watch neighbourhood over the
-    # elapsed time, decayed through the window-K MLE (Eq. 1, exposure form).
+    # Estimator: deaths among the watch neighbourhood over the elapsed
+    # time, decayed through the window-K MLE (Eq. 1, exposure form).
+    # Pooled cells feed the whole neighbourhood's stream in expectation to
+    # peer slot 0; isolated/gossip cells Poisson-sample each peer's 1/k
+    # share (sampling noise IS the fidelity axis being modelled).
     elapsed = t - s.t
-    d = p.watch * mu * elapsed
-    beta = xp.exp(d * p.log_decay)
-    ema_d = s.ema_d * beta + d
-    ema_T = s.ema_T * beta + p.watch * elapsed
+    if peer_axis == 1:
+        d = (p.watch * mu * elapsed)[:, None]
+        expo = (p.watch * elapsed)[:, None]
+        beta = xp.exp(d * p.log_decay[:, None])
+        ema_d = s.ema_d * beta + d
+        ema_T = s.ema_T * beta + expo
+        mu0, n_round, next_g = s.mu0, s.n_round, s.next_g
+    else:
+        pooled = p.regime == _REGIME_IDS["pooled"]
+        peer_act = (xp.arange(peer_axis)[None, :]
+                    < xp.where(pooled, 1.0, p.k)[:, None])
+        rate_slot = xp.where(pooled, p.watch, p.watch / p.k)  # slots per peer
+        lam = rate_slot[:, None] * (mu * elapsed)[:, None] * peer_act
+        d = xp.where(pooled[:, None], lam, _sample_counts(lam, u3, z3, xp))
+        beta = xp.exp(d * p.log_decay[:, None])
+        ema_d = xp.where(peer_act, s.ema_d * beta + d, s.ema_d)
+        ema_T = xp.where(peer_act,
+                         s.ema_T * beta + rate_slot[:, None]
+                         * elapsed[:, None], s.ema_T)
+        ema_d, ema_T, mu0, n_round, next_g = _gossip_mix(
+            t, ema_d, ema_T, s.mu0, s.n_round, s.next_g, finished,
+            peer_act, p, xp)
 
     return _State(t=t, done=done, in_restore=in_restore, finished=finished,
                   censored=censored, n_ckpt=n_ckpt, n_fail=n_fail,
                   wasted=wasted, ckpt_time=ckpt_time, restore_time=restore_time,
-                  ema_d=ema_d, ema_T=ema_T, seen_ckpt=seen_ckpt,
-                  seen_restore=seen_restore, td_obs=td_obs, sv_bytes=sv_bytes,
+                  ema_d=ema_d, ema_T=ema_T, mu0=mu0, seen_ckpt=seen_ckpt,
+                  seen_restore=seen_restore, td_obs=td_obs, next_g=next_g,
+                  n_round=n_round, sv_bytes=sv_bytes,
                   n_srv=n_srv, n_peer=n_peer)
 
 
@@ -527,18 +732,26 @@ def _lw_numpy(z):
 
 
 def _run_numpy(p: _Params, seeds: Sequence[int], max_steps: int,
-               macro_threshold: float, any_store: bool) -> tuple:
+               macro_threshold: float, any_store: bool,
+               peer_axis: int) -> tuple:
     # One stream per UNIQUE seed, consumed positionally (draw i belongs to
     # step i): a cell's realization depends only on its own seed, never on
     # batch composition, and cells sharing a seed share churn randomness —
     # common random numbers across the policies of a comparison, like the
-    # reference engine's seed reuse.
+    # reference engine's seed reuse.  Per-peer observation noise (non-pooled
+    # estimator regimes) comes from a SECOND stream per seed, tagged
+    # _OBS_STREAM, so pooled-only batches draw exactly what they always did
+    # and a regime cell's noise is likewise composition-invariant (the peer
+    # axis is the fixed _PEER_CAP, never the batch max).
     uniq, inv = np.unique(np.asarray(list(seeds), dtype=np.int64),
                           return_inverse=True)
     gens = [np.random.default_rng(int(sd)) for sd in uniq]
-    s = _init_state(p, np)
+    obs_gens = ([np.random.default_rng(np.random.SeedSequence(
+        [int(sd), _OBS_STREAM])) for sd in uniq] if peer_axis > 1 else None)
+    s = _init_state(p, np, peer_axis)
     steps = 0
-    block_u = block_z = block_u2 = None
+    block_u = block_z = block_u2 = block_u3 = block_z3 = None
+    u3 = z3 = None
     j = _RNG_BLOCK
     # Unused branches of the branchless step routinely overflow (exp of a
     # huge rate, inf * 0) before being masked out — silence numpy there.
@@ -548,14 +761,22 @@ def _run_numpy(p: _Params, seeds: Sequence[int], max_steps: int,
                 block_u = np.stack([g.random(_RNG_BLOCK) for g in gens])
                 block_z = np.stack([g.standard_normal(_RNG_BLOCK) for g in gens])
                 block_u2 = np.stack([g.random(_RNG_BLOCK) for g in gens])
+                if obs_gens is not None:
+                    block_u3 = np.stack([g.random((peer_axis, _RNG_BLOCK))
+                                         for g in obs_gens])
+                    block_z3 = np.stack([g.standard_normal(
+                        (peer_axis, _RNG_BLOCK)) for g in obs_gens])
                 j = 0
             steps += 1
             u = block_u[inv, j]
             z = block_z[inv, j]
             u2 = block_u2[inv, j]
+            if obs_gens is not None:
+                u3 = block_u3[inv, :, j]
+                z3 = block_z3[inv, :, j]
             j += 1
             pre = _attempt(s, p, u2, np, _lw_numpy, any_store)
-            s = _apply(s, p, pre, u, z, macro_threshold, np)
+            s = _apply(s, p, pre, u, z, u3, z3, macro_threshold, peer_axis, np)
     return s, steps
 
 
@@ -571,20 +792,32 @@ if _HAVE_JAX:
         return lambertw0(z, iters=_LW_ITERS)
 
     def _jax_chunk(state_and_keys, p: _Params, macro_threshold: float,
-                   any_store: bool):
+                   any_store: bool, peer_axis: int):
         def body(carry, _):
             s, keys = carry
             # Per-CELL keys (seeded from CellSpec.seed): realizations are
             # independent of batch composition, and same-seed cells share
             # churn randomness (common random numbers across policies).
-            splits = jax.vmap(lambda k: jax.random.split(k, 4))(keys)
-            keys, k1, k2, k3 = (splits[:, 0], splits[:, 1], splits[:, 2],
-                                splits[:, 3])
+            # Always split 6-way — keys are stateless, so the unused
+            # observation-noise keys of pooled batches cost nothing and the
+            # split count never depends on batch composition.
+            splits = jax.vmap(lambda k: jax.random.split(k, 6))(keys)
+            keys, k1, k2, k3, k4, k5 = (splits[:, 0], splits[:, 1],
+                                        splits[:, 2], splits[:, 3],
+                                        splits[:, 4], splits[:, 5])
             u = jax.vmap(lambda k: jax.random.uniform(k, dtype=jnp.float64))(k1)
             z = jax.vmap(lambda k: jax.random.normal(k, dtype=jnp.float64))(k2)
             u2 = jax.vmap(lambda k: jax.random.uniform(k, dtype=jnp.float64))(k3)
+            if peer_axis > 1:
+                u3 = jax.vmap(lambda k: jax.random.uniform(
+                    k, (peer_axis,), dtype=jnp.float64))(k4)
+                z3 = jax.vmap(lambda k: jax.random.normal(
+                    k, (peer_axis,), dtype=jnp.float64))(k5)
+            else:
+                u3 = z3 = None
             pre = _attempt(s, p, u2, jnp, lambertw0_jnp, any_store)
-            return (_apply(s, p, pre, u, z, macro_threshold, jnp), keys), None
+            return (_apply(s, p, pre, u, z, u3, z3, macro_threshold,
+                           peer_axis, jnp), keys), None
 
         (s, keys), _ = jax.lax.scan(body, state_and_keys, None, length=_CHUNK)
         return s, keys
@@ -593,18 +826,20 @@ if _HAVE_JAX:
 
 
 def _run_jax(p: _Params, seeds: Sequence[int], max_steps: int,
-             macro_threshold: float, any_store: bool) -> tuple:
+             macro_threshold: float, any_store: bool,
+             peer_axis: int) -> tuple:
     global _jax_chunk_jit
     with jax.experimental.enable_x64(True):
         if _jax_chunk_jit is None:
-            _jax_chunk_jit = jax.jit(_jax_chunk, static_argnums=(2, 3))
+            _jax_chunk_jit = jax.jit(_jax_chunk, static_argnums=(2, 3, 4))
         pj = _Params(*(jnp.asarray(a) for a in p))
         keys = jax.vmap(jax.random.PRNGKey)(
             jnp.asarray(list(seeds), dtype=jnp.uint32))
-        s = _init_state(pj, jnp)
+        s = _init_state(pj, jnp, peer_axis)
         steps = 0
         while steps < max_steps:
-            s, keys = _jax_chunk_jit((s, keys), pj, macro_threshold, any_store)
+            s, keys = _jax_chunk_jit((s, keys), pj, macro_threshold, any_store,
+                                     peer_axis)
             steps += _CHUNK
             if bool(s.finished.all()):
                 break
@@ -639,8 +874,12 @@ def run_cells(cells: Sequence[CellSpec], *, backend: str = "auto",
     p = _pack(cells)
     seeds = [c.seed for c in cells]
     any_store = any(c.store is not None for c in cells)
+    # Per-peer estimator state is only materialized when some cell needs it.
+    peer_axis = (_PEER_CAP if any(c.policy.regime != "pooled" for c in cells)
+                 else 1)
     run = _run_jax if backend == "jax" else _run_numpy
-    s, steps = run(p, seeds, max_steps, float(macro_threshold), any_store)
+    s, steps = run(p, seeds, max_steps, float(macro_threshold), any_store,
+                   peer_axis)
 
     ran_out = ~np.asarray(s.finished)
     completed = ~(np.asarray(s.censored) | ran_out)

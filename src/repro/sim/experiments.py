@@ -411,6 +411,103 @@ def offload_csv(cells: Sequence[OffloadCell]) -> List[str]:
     return [OFFLOAD_CSV_HEADER] + [c.csv_row() for c in cells]
 
 
+# --------------------------------------------------------------------------- #
+# Gossip-fidelity experiment (the paper's decentralization claim, Sec 3.1.4).  #
+# --------------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class GossipFidelityCell:
+    """One (scenario x estimator regime) cell of the gossip-fidelity sweep."""
+
+    scenario: str
+    regime: str                 # "pooled" | "isolated" | "gossip"
+    period: float               # gossip period (0 for pooled/isolated)
+    fanout: int                 # gossip fanout (0 for pooled/isolated)
+    weight: float
+    mean_wall: float            # mean completion wall time (s)
+    inflation_pct: float        # 100 * (mean_wall / pooled_mean_wall - 1)
+    completed_frac: float
+
+    def csv_row(self) -> str:
+        return (f"{self.scenario},{self.regime},{self.period:.0f},"
+                f"{self.fanout},{self.weight:.2f},{self.mean_wall:.1f},"
+                f"{self.inflation_pct:.2f},{self.completed_frac:.3f}")
+
+
+GOSSIP_CSV_HEADER = ("scenario,regime,period_s,fanout,weight,mean_wall_s,"
+                     "inflation_pct,completed_frac")
+
+
+def gossip_fidelity_sweep(
+    scenarios: Optional[Sequence[Scenario]] = None,
+    periods: Sequence[float] = (300.0, 3600.0),
+    fanouts: Sequence[int] = (1, 3),
+    weight: float = 0.5,
+    *,
+    k: int = DEFAULT_K,
+    work: float = 12 * 3600.0,
+    seeds: Sequence[int] = tuple(range(16)),
+    n_slots: int = DEFAULT_SLOTS,
+    mtbf0: float = 4000.0,
+    prior_mtbf_factor: float = 8.0,
+    backend: str = "auto",
+    max_wall_factor: float = 50.0,
+) -> List[GossipFidelityCell]:
+    """The estimator-fidelity axis of the paper's decentralization claim
+    (Sec 3.1.4), one engine batch: the same jobs under the same churn with
+    the adaptive estimator pooled (centralized upper bound), isolated (each
+    peer learns alone), and gossiping at every (period x fanout) point.
+    Reports each regime's mean runtime and its inflation over pooled — how
+    much of the centralized benefit the epidemic exchange recovers.
+
+    ``prior_mtbf_factor`` starts the prior at ``prior_mtbf_factor * mtbf0``
+    (deliberately too optimistic): estimator fidelity only matters when
+    there is something to learn, and an isolated peer sees 1/k of the
+    observation stream, so it pays for the bad prior k times longer.  All
+    regimes share seeds — common random numbers pair the comparison.
+    """
+    if scenarios is None:
+        scenarios = [scenario("constant", mtbf=mtbf0),
+                     scenario("diurnal", mtbf=mtbf0),
+                     scenario("flash_crowd", mtbf=mtbf0)]
+    prior_mu = 1.0 / (prior_mtbf_factor * mtbf0)
+    base = dict(kind="adaptive", prior_mu=prior_mu, prior_v=PAPER_V)
+    regimes: List[tuple] = [
+        ("pooled", 0.0, 0, PolicyConfig(regime="pooled", **base)),
+        ("isolated", 0.0, 0, PolicyConfig(regime="isolated", **base)),
+    ]
+    for per in periods:
+        for fan in fanouts:
+            regimes.append(("gossip", float(per), int(fan), PolicyConfig(
+                regime="gossip", gossip_period=float(per),
+                gossip_fanout=int(fan), gossip_weight=weight, **base)))
+    seeds = list(seeds)
+    S = len(seeds)
+    grid = [(scen, reg) for scen in scenarios for reg in regimes]
+    cells = [CellSpec(scenario=scen, policy=pol, seed=s, k=k, work=work,
+                      V=PAPER_V, T_d=PAPER_TD, n_slots=n_slots,
+                      max_wall_time=max_wall_factor * work)
+             for scen, (_, _, _, pol) in grid for s in seeds]
+    res = run_cells(cells, backend=backend)
+    out: List[GossipFidelityCell] = []
+    pooled_wall: Dict[str, float] = {}
+    for i, (scen, (name, per, fan, _)) in enumerate(grid):
+        wall = float(res.wall_time[i * S:(i + 1) * S].mean())
+        if name == "pooled":
+            pooled_wall[scen.name] = wall
+        out.append(GossipFidelityCell(
+            scenario=scen.name, regime=name, period=per, fanout=fan,
+            weight=weight if name == "gossip" else 0.0, mean_wall=wall,
+            inflation_pct=100.0 * (wall / pooled_wall[scen.name] - 1.0),
+            completed_frac=float(res.completed[i * S:(i + 1) * S].mean())))
+    return out
+
+
+def gossip_csv(cells: Sequence[GossipFidelityCell]) -> List[str]:
+    """CSV rows (header first) — one row per (scenario, regime) cell."""
+    return [GOSSIP_CSV_HEADER] + [c.csv_row() for c in cells]
+
+
 def summarize(results: Dict[float, List[Comparison]]) -> str:
     lines = ["param      fixed_T    rel_runtime%  adaptive_h  fixed_h  oracle_gap"]
     for key, comps in sorted(results.items()):

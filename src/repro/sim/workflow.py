@@ -20,7 +20,10 @@ Semantics (DESIGN.md Sec 5):
   the stage's own restores become endogenous the same way.
 * The stage then runs as one engine cell, offset to its absolute start time
   so time-varying scenarios (doubling, diurnal, flash crowd) stay aligned
-  across the whole workflow.
+  across the whole workflow.  The policy's estimator regime
+  (``PolicyConfig.regime`` — pooled / isolated / gossip, paper Sec 3.1.4)
+  rides along: every stage of the workflow runs its adaptive estimators at
+  that fidelity.
 * Failure propagation is containment by checkpointing: a stage's committed
   output survives peer churn (it lives in the P2P checkpoint store), so an
   upstream death never un-finishes a finished stage — it only delays
@@ -33,6 +36,7 @@ batched across seeds, so a whole workflow costs one engine call per stage.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -41,7 +45,11 @@ import numpy as np
 from repro.p2p.store import StoreSpec
 from repro.p2p.transfer import striped_restore_seconds
 from repro.sim.engine import BatchResult, CellSpec, PolicyConfig, run_cells
-from repro.sim.scenarios import Scenario, hazard_kernel
+from repro.sim.scenarios import Scenario
+
+# Tag of the per-seed child stream feeding hand-off fetch randomness;
+# distinct from the engine's observation stream so the two never alias.
+_HANDOFF_STREAM = 0x686F6666
 
 
 @dataclass(frozen=True)
@@ -144,12 +152,19 @@ class WorkflowResult:
 
 
 def _handoff_times(
-    rng: np.random.Generator, scen: Scenario, k: int, t_start: np.ndarray,
-    n_deps: int, handoff: float, max_time: float,
+    rngs: Sequence[np.random.Generator], scen: Scenario, k: int,
+    t_start: np.ndarray, n_deps: int, handoff: float, max_time: float,
     store: Optional[StoreSpec] = None,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-    """Vectorized churn-exposed edge fetches: pull each of the ``n_deps``
-    dependency outputs in turn, starting at per-seed times ``t_start``.
+    """Churn-exposed edge fetches: pull each of the ``n_deps`` dependency
+    outputs in turn, starting at per-seed times ``t_start``.
+
+    ``rngs`` carries ONE generator per seed and each seed's fetches draw
+    only from its own stream — a seed's hand-off realization never depends
+    on which other seeds share the batch (the same common-random-number
+    invariant the engine documents), which a single pooled generator
+    violated (retry counts of one seed used to shift every later seed's
+    draws).
 
     Without a store each edge costs ``handoff`` flat seconds; with a
     :class:`StoreSpec` each edge reads the dependency's replica set — the
@@ -159,47 +174,50 @@ def _handoff_times(
     the partial transfer and forces a retry of that edge (same model as
     engine restores); retry time is accounted as waste.
 
-    Returns (elapsed, completed, waste, server_fetches).  A fetch whose
+    Returns (elapsed, completed, waste, server_bytes).  Server fallbacks
+    are billed per ATTEMPT: a churn-interrupted server fetch still moved
+    elapsed/total of the image through the shared pipe.  A fetch whose
     retries exceed ``max_time`` is censored — the stage's churn can
     livelock a hand-off exactly like it livelocks a job, and must be
     reported, not spun on.
     """
-    n = t_start.shape[0]
-    t = t_start.astype(np.float64).copy()
+    n = len(rngs)
+    elapsed = np.zeros(n)
     waste = np.zeros(n)
-    srv_fetches = np.zeros(n)
+    srv_bytes = np.zeros(n)
     ok_flags = np.ones(n, dtype=bool)
     if n_deps == 0 or (store is None and handoff <= 0.0):
-        return np.zeros_like(t), ok_flags, waste, srv_fetches
-    kind = np.full(n, scen.kind)
-    p = np.broadcast_to(np.asarray(scen.params), (n, 4))
-    trace_t = np.asarray(scen.trace_t or (0.0, 1.0))[None, :]
-    trace_m = np.asarray(scen.trace_mtbf or (1.0, 1.0))[None, :]
-    for _dep in range(n_deps):
-        pending = ok_flags.copy()
-        while pending.any():
-            mu = hazard_kernel(t, kind, p, trace_t, trace_m, np)
-            kmu = k * mu
-            if store is None:
-                total = np.full(n, handoff)
-                from_server = np.zeros(n, dtype=bool)
-            else:
-                A = np.clip(store.availability_at(mu), 0.0, 1.0)
-                m = rng.binomial(store.R, A)
-                total = striped_restore_seconds(m, store.td_up1, store.td_cap,
-                                                store.td_server, np)
-                from_server = m == 0
-            u = rng.uniform(size=n)
-            t_fail = -np.log1p(-u) / kmu
-            ok = pending & (t_fail >= total)
-            retry = pending & ~ok
-            t = np.where(ok, t + total, np.where(retry, t + t_fail, t))
-            waste = np.where(retry, waste + t_fail, waste)
-            srv_fetches += ok & from_server
-            censor = retry & (t - t_start > max_time)
-            ok_flags &= ~censor
-            pending = retry & ~censor
-    return t - t_start, ok_flags, waste, srv_fetches
+        return elapsed, ok_flags, waste, srv_bytes
+    img = store.transfer.img_bytes if store is not None else 0.0
+    for i, rng in enumerate(rngs):
+        t = t0 = float(t_start[i])
+        for _dep in range(n_deps):
+            while ok_flags[i]:
+                mu = 1.0 / scen.mtbf(t)
+                if store is None:
+                    total = handoff
+                    from_server = False
+                else:
+                    A = min(max(float(store.availability_at(mu)), 0.0), 1.0)
+                    m = int(rng.binomial(store.R, A)) if store.R > 0 else 0
+                    total = float(striped_restore_seconds(
+                        float(m), store.td_up1, store.td_cap,
+                        store.td_server, np))
+                    from_server = m == 0
+                t_fail = -math.log1p(-rng.uniform()) / (k * mu)
+                if t_fail >= total:
+                    t += total
+                    if from_server:
+                        srv_bytes[i] += img
+                    break
+                t += t_fail
+                waste[i] += t_fail
+                if from_server and total > 0.0:
+                    srv_bytes[i] += img * min(t_fail / total, 1.0)
+                if t - t0 > max_time:
+                    ok_flags[i] = False  # censored: stop fetching this seed
+        elapsed[i] = t - t0
+    return elapsed, ok_flags, waste, srv_bytes
 
 
 def simulate_workflow(
@@ -221,11 +239,19 @@ def simulate_workflow(
     stage's restores become endogenous (replica-availability law instead
     of the flat ``T_d``) and hand-off edges fetch the dependency's image
     from its replica set instead of paying ``Stage.handoff`` flat seconds.
+
+    Seed isolation: every seed gets its own hand-off random stream (a
+    child of that seed alone), and engine cells already derive per-cell
+    streams from their own seeds — so a seed's whole workflow realization
+    is invariant to batch composition (``seeds=(0,)`` reproduces exactly
+    inside ``seeds=(0, 1)``), preserving common-random-number comparisons
+    across policies and stores.
     """
     seeds = list(seeds)
     n = len(seeds)
     order = spec.topo_order()
-    rng = np.random.default_rng(np.random.SeedSequence(list(seeds)))
+    rngs = [np.random.default_rng(np.random.SeedSequence(
+        [int(s), _HANDOFF_STREAM])) for s in seeds]
     finish: Dict[str, np.ndarray] = {}
     completed: Dict[str, np.ndarray] = {}
     results: Dict[str, StageResult] = {}
@@ -239,8 +265,8 @@ def simulate_workflow(
         edge_cost = (stage.handoff if store is None
                      else store.td_server)  # censor horizon scale per edge
         total_handoff = edge_cost * len(stage.deps)
-        handoff, handoff_ok, handoff_waste, srv_fetches = _handoff_times(
-            rng, scen, stage.k, ready, len(stage.deps), stage.handoff,
+        handoff, handoff_ok, handoff_waste, edge_srv_bytes = _handoff_times(
+            rngs, scen, stage.k, ready, len(stage.deps), stage.handoff,
             max_time=max_wall_factor * max(total_handoff, stage.work),
             store=store)
         deps_ok &= handoff_ok
@@ -257,7 +283,6 @@ def simulate_workflow(
         sim = run_cells(cells, backend=backend)
         fin = start + sim.wall_time
         ok = deps_ok & sim.completed
-        img = store.transfer.img_bytes if store is not None else 0.0
         finish[stage.name] = fin
         completed[stage.name] = ok
         results[stage.name] = StageResult(stage=stage, ready=ready, start=start,
@@ -265,7 +290,7 @@ def simulate_workflow(
                                           handoff_waste=handoff_waste,
                                           sim=sim, completed=ok,
                                           server_bytes=(sim.server_bytes
-                                                        + srv_fetches * img))
+                                                        + edge_srv_bytes))
 
     makespan = np.max(np.stack([finish[s.name] for s in spec.stages]), axis=0)
     all_ok = np.all(np.stack([completed[s.name] for s in spec.stages]), axis=0)

@@ -1,0 +1,263 @@
+"""Estimator regimes (paper Sec 3.1.4): pooled vs isolated vs gossip.
+
+The paper's headline decentralization claim is that checkpoint decisions
+made from gossip-exchanged statistics recover most of the benefit of
+centralized estimation.  These tests pin that ordering on the batched
+engine (with common-random-number pairing across regimes), check the
+gossip regime's limits (frequent exchange -> pooled), and hold the engine
+to the per-event heap oracle (``GossipAdaptivePolicy``) with CI bounds.
+"""
+import numpy as np
+import pytest
+
+from repro.core.adaptive import AdaptiveCheckpointController
+from repro.sim import (
+    CellSpec,
+    ChurnNetwork,
+    GossipAdaptivePolicy,
+    PolicyConfig,
+    gossip_csv,
+    gossip_fidelity_sweep,
+    run_cells,
+    scenario,
+    simulate_job,
+)
+
+V, TD = 20.0, 50.0
+MTBF = 4000.0
+# A deliberately optimistic prior (8x the true MTBF): estimator fidelity
+# only matters when there is something to learn, and an isolated peer sees
+# 1/k of the observation stream, so it pays for the bad prior k times
+# longer than the pooled estimator does.
+PRIOR_MU = 1.0 / (8.0 * MTBF)
+
+
+def _regime_walls(scen, regimes, n, *, work=8 * 3600.0, k=16):
+    """Mean walls per regime, CRN-paired: same seeds, same churn draws."""
+    cells = [CellSpec(scenario=scen, policy=pol, seed=s, k=k, work=work,
+                      V=V, T_d=TD, max_wall_time=50 * work)
+             for pol in regimes.values() for s in range(n)]
+    res = run_cells(cells, backend="numpy")
+    assert res.completed.all()
+    w = res.wall_time.reshape(len(regimes), n)
+    return {nm: w[i] for i, nm in enumerate(regimes)}
+
+
+def _pol(regime, **kw):
+    return PolicyConfig(kind="adaptive", prior_mu=PRIOR_MU, prior_v=V,
+                        regime=regime, **kw)
+
+
+# ----------------------------------------------------------- validation
+def test_regime_validation():
+    with pytest.raises(ValueError):
+        PolicyConfig(regime="nope")
+    with pytest.raises(ValueError):
+        PolicyConfig(kind="fixed", regime="gossip")  # fixed doesn't estimate
+    with pytest.raises(ValueError):
+        PolicyConfig(regime="gossip", gossip_weight=1.5)
+    with pytest.raises(ValueError):
+        PolicyConfig(regime="gossip", gossip_fanout=0)
+    with pytest.raises(ValueError):  # per-peer state axis is capped
+        run_cells([CellSpec(scenario=scenario("constant", mtbf=MTBF),
+                            policy=_pol("isolated"), k=64, n_slots=128,
+                            work=3600.0)], backend="numpy")
+    with pytest.raises(ValueError):
+        GossipAdaptivePolicy.make(4, regime="nope")
+
+
+# ------------------------------------------------- the paper's ordering
+def test_isolated_runtime_at_least_pooled():
+    """Fig-4-style grid: losing the pooled observation stream costs real
+    runtime (paired comparison, so the churn noise cancels)."""
+    n = 32
+    walls = _regime_walls(scenario("constant", mtbf=MTBF),
+                          {"pooled": _pol("pooled"),
+                           "isolated": _pol("isolated")}, n)
+    diff = walls["isolated"] - walls["pooled"]
+    # Paired mean difference must be positive and statistically resolved.
+    assert diff.mean() > 0.0, (walls["pooled"].mean(), walls["isolated"].mean())
+    assert diff.mean() > diff.std() / np.sqrt(n)
+
+
+def test_gossip_between_isolated_and_pooled():
+    """pooled <= gossip <= isolated (small tolerances for residual noise),
+    and a reasonable gossip period lands within 10% of pooled."""
+    n = 32
+    walls = _regime_walls(
+        scenario("constant", mtbf=MTBF),
+        {"pooled": _pol("pooled"),
+         "gossip": _pol("gossip", gossip_period=300.0, gossip_fanout=3),
+         "isolated": _pol("isolated")}, n)
+    p = walls["pooled"].mean()
+    g = walls["gossip"].mean()
+    i = walls["isolated"].mean()
+    eps = 0.005 * p
+    assert p <= g + eps <= i + 2 * eps, (p, g, i)
+    assert abs(g - p) < 0.10 * p  # the decentralization claim, quantified
+
+
+def test_gossip_converges_to_pooled_as_period_shrinks_and_weight_grows():
+    """period -> 0 (every step) with heavy mixing: the gossip estimator
+    must track pooled much more closely than isolated does."""
+    n = 24
+    walls = _regime_walls(
+        scenario("constant", mtbf=MTBF),
+        {"pooled": _pol("pooled"),
+         "fast": _pol("gossip", gossip_period=60.0, gossip_fanout=8,
+                      gossip_weight=1.0),
+         "slow": _pol("gossip", gossip_period=7200.0, gossip_fanout=1,
+                      gossip_weight=0.5),
+         "isolated": _pol("isolated")}, n)
+    p = walls["pooled"].mean()
+    gap_fast = abs(walls["fast"].mean() - p)
+    gap_iso = abs(walls["isolated"].mean() - p)
+    gap_slow = walls["slow"].mean() - p
+    assert gap_fast < 0.02 * p, (gap_fast / p,)
+    assert gap_fast < 0.5 * gap_iso
+    # An infrequent, narrow exchange is worse than a fast one (it reseeds
+    # the window without moving far from the stale local view).
+    assert gap_slow > -0.005 * p
+
+
+# ------------------------------------------------- heap-oracle parity
+def test_engine_gossip_cell_matches_heap_oracle():
+    """CI-bounded mean equivalence: the engine's vectorized per-peer
+    estimators + circulant gossip vs per-peer controllers with
+    ingest_gossip on the per-event heap."""
+    scen = scenario("constant", mtbf=MTBF)
+    n, k, work = 32, 8, 4 * 3600.0
+    # prior_v deliberately != V: the exchange is mu-only, so a gossip
+    # round must not drag either side's V/T_d toward the prior.
+    prior_v = 10.0
+    pol = PolicyConfig(kind="adaptive", prior_mu=PRIOR_MU, prior_v=prior_v,
+                       regime="gossip", gossip_period=600.0, gossip_fanout=2)
+    res = run_cells([CellSpec(scenario=scen, policy=pol, seed=s, k=k,
+                              work=work, V=V, T_d=TD) for s in range(n)],
+                    backend="numpy", macro_threshold=0.0)
+    assert res.completed.all()
+    walls = []
+    for s in range(n):
+        rng = np.random.default_rng(s)
+        net = ChurnNetwork.from_scenario(scen, 128, rng)
+        heap_pol = GossipAdaptivePolicy.make(
+            k, regime="gossip", period=600.0, fanout=2, weight=0.5,
+            prior_mu=PRIOR_MU, prior_v=prior_v, mu_window=32)
+        r = simulate_job(network=net, policy=heap_pol, k=k,
+                         work_required=work, V=V, T_d=TD)
+        walls.append(r.wall_time)
+    walls = np.asarray(walls)
+    se = np.sqrt(res.wall_time.var() / n + walls.var() / n)
+    diff = abs(res.wall_time.mean() - walls.mean())
+    assert diff <= 3.0 * se, (res.wall_time.mean(), walls.mean(), se)
+
+
+def test_macro_stepping_preserves_means_for_regime_cells():
+    """The macro-step fast path (cycle survival < threshold) must stay
+    mean-preserving for per-peer estimator regimes too — the shipped
+    sweep/benchmark runs at the default macro_threshold.  Force macro
+    bursts with a wildly optimistic prior under heavy churn (the adaptive
+    interval clips long, p_surv ~ 0 until the estimator catches up)."""
+    scen = scenario("constant", mtbf=600.0)
+    n = 32
+    bad_prior = 1.0 / (64.0 * 600.0)
+    cells = [CellSpec(scenario=scen,
+                      policy=PolicyConfig(kind="adaptive", prior_mu=bad_prior,
+                                          prior_v=V, regime=reg),
+                      seed=s, k=16, work=1800.0, V=V, T_d=TD,
+                      max_wall_time=400 * 3600.0)
+             for reg in ("isolated", "gossip") for s in range(n)]
+    exact = run_cells(cells, backend="numpy", macro_threshold=0.0)
+    fast = run_cells(cells, backend="numpy", macro_threshold=0.05)
+    assert fast.n_steps < exact.n_steps  # the fast path actually engaged
+    assert fast.wall_time.mean() == pytest.approx(exact.wall_time.mean(),
+                                                  rel=0.10)
+
+
+def test_heap_gossip_policy_mixing_moves_estimates():
+    """One exchange round pulls divergent per-peer estimates together;
+    isolated never mixes."""
+    k = 4
+    pol = GossipAdaptivePolicy.make(k, regime="gossip", period=100.0,
+                                    fanout=k - 1, weight=0.5,
+                                    prior_mu=1.0 / 7200.0, prior_v=V)
+    # Skew peer 0 with a burst of short observed lifetimes.
+    for _ in range(8):
+        pol.on_observation_slot(0, 60.0)
+    mus = [c.mu for c in pol.controllers]
+    spread0 = max(mus) - min(mus)
+    assert spread0 > 0
+    pol.tick(100.0)  # due: one gossip round
+    mus1 = [c.mu for c in pol.controllers]
+    assert max(mus1) - min(mus1) < spread0  # contraction toward consensus
+    assert min(mus1) > min(mus)             # laggards moved up
+
+    iso = GossipAdaptivePolicy.make(k, regime="isolated",
+                                    prior_mu=1.0 / 7200.0, prior_v=V)
+    for _ in range(8):
+        iso.on_observation_slot(0, 60.0)
+    before = [c.mu for c in iso.controllers]
+    iso.tick(1e9)
+    assert [c.mu for c in iso.controllers] == before
+
+
+def test_observation_slots_partition_across_peers():
+    """slot % k routing: each peer sees only its share of the watch
+    neighbourhood."""
+    k = 4
+    pol = GossipAdaptivePolicy.make(k, regime="isolated",
+                                    prior_mu=1.0 / 7200.0, prior_v=V)
+    for slot in range(16):  # watch = 16 slots -> 4 observations per peer
+        pol.on_observation_slot(slot, 1000.0 * (1 + slot % k))
+    counts = [c.mu_est.n_observations for c in pol.controllers]
+    assert counts == [4, 4, 4, 4]
+
+
+# ------------------------------------------------- mixed batches & sweep
+def test_mixed_regime_batch_runs_and_preserves_pooled_cells():
+    """Pooled/fixed cells must be unaffected by sharing a batch with
+    per-peer regime cells (composition-invariance of realizations)."""
+    scen = scenario("constant", mtbf=7200.0)
+    pooled = [CellSpec(scenario=scen, policy=_pol("pooled"), seed=s, k=16,
+                       work=4 * 3600.0, V=V, T_d=TD) for s in range(4)]
+    fixed = [CellSpec(scenario=scen,
+                      policy=PolicyConfig(kind="fixed", fixed_T=900.0),
+                      seed=s, k=16, work=4 * 3600.0, V=V, T_d=TD)
+             for s in range(4)]
+    iso = [CellSpec(scenario=scen, policy=_pol("isolated"), seed=s, k=16,
+                    work=4 * 3600.0, V=V, T_d=TD) for s in range(4)]
+    alone = run_cells(pooled + fixed, backend="numpy")
+    mixed = run_cells(pooled + fixed + iso, backend="numpy")
+    np.testing.assert_array_equal(alone.wall_time, mixed.wall_time[:8])
+    np.testing.assert_array_equal(alone.n_failures, mixed.n_failures[:8])
+
+
+def test_gossip_fidelity_sweep_smoke_and_csv():
+    cells = gossip_fidelity_sweep(
+        scenarios=[scenario("constant", mtbf=MTBF)], periods=(600.0,),
+        fanouts=(2,), seeds=range(3), work=4 * 3600.0, mtbf0=MTBF,
+        backend="numpy")
+    regimes = [c.regime for c in cells]
+    assert regimes == ["pooled", "isolated", "gossip"]
+    assert cells[0].inflation_pct == 0.0  # pooled is its own baseline
+    assert all(np.isfinite(c.mean_wall) and c.mean_wall > 0 for c in cells)
+    rows = gossip_csv(cells)
+    assert rows[0].startswith("scenario,regime,")
+    assert len(rows) == 1 + 3
+    assert all(r.count(",") == rows[0].count(",") for r in rows)
+
+
+def test_jax_backend_matches_numpy_for_gossip_cells():
+    jax = pytest.importorskip("jax")
+    del jax
+    scen = scenario("constant", mtbf=MTBF)
+    n = 24
+    cells = [CellSpec(scenario=scen, policy=_pol("gossip",
+                                                 gossip_period=600.0,
+                                                 gossip_fanout=2),
+                      seed=s, k=16, work=4 * 3600.0, V=V, T_d=TD)
+             for s in range(n)]
+    a = run_cells(cells, backend="numpy")
+    b = run_cells(cells, backend="jax")
+    assert b.completed.all()
+    assert b.wall_time.mean() == pytest.approx(a.wall_time.mean(), rel=0.08)

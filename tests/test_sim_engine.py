@@ -303,6 +303,58 @@ def test_workflow_censored_stage_propagates_to_all_transitive_dependents():
     assert not res.all_completed
 
 
+def test_workflow_seed_realization_invariant_to_batch_composition():
+    """Regression: simulate_workflow used to seed ONE generator from the
+    whole seed list, so a seed's hand-off realization changed with batch
+    composition (and one seed's retries shifted every later seed's draws),
+    breaking common-random-number comparisons.  Each seed now carries its
+    own child stream: seeds=(0,) must reproduce exactly inside
+    seeds=(0, 1, 2)."""
+    spec = WorkflowSpec(stages=(
+        Stage("a", work=1800.0, k=4),
+        Stage("b", work=1800.0, k=4, deps=("a",), handoff=300.0),
+    ))
+    # Heavy churn: hand-off retries are near-certain, so the draws matter.
+    scen = scenario("constant", mtbf=600.0)
+    solo = simulate_workflow(spec, scen, seeds=(0,), V=V, T_d=TD,
+                             backend="numpy")
+    batch = simulate_workflow(spec, scen, seeds=(0, 1, 2), V=V, T_d=TD,
+                              backend="numpy")
+    for name in ("a", "b"):
+        for attr in ("ready", "start", "finish", "handoff_time",
+                     "handoff_waste"):
+            a = getattr(solo.stages[name], attr)[0]
+            b = getattr(batch.stages[name], attr)[0]
+            assert a == b, (name, attr, a, b)
+    assert solo.makespan[0] == batch.makespan[0]
+
+
+def test_oracle_interval_clipped_like_adaptive_on_both_engines():
+    """Regression: the adaptive interval was clipped to [min_iv, max_iv]
+    but the oracle's was not, conflating policy quality with clipping in
+    every comparison grid.  With churn effectively off the optimal
+    interval is infinite — a clamped oracle must still checkpoint on the
+    max_interval schedule, on the engine AND the heap."""
+    scen = scenario("constant", mtbf=1e15)
+    pol = PolicyConfig(kind="oracle", max_interval=600.0)
+    res = run_cells([CellSpec(scenario=scen, policy=pol, seed=s, k=8,
+                              work=3600.0, V=V, T_d=TD) for s in range(3)],
+                    backend="numpy")
+    assert (res.n_checkpoints == 5).all()   # 3600s at the 600s clamp
+    np.testing.assert_allclose(res.wall_time, 3600.0 + 5 * V, rtol=1e-12)
+
+    from repro.sim import OraclePolicy
+    rng = np.random.default_rng(0)
+    net = ChurnNetwork.from_scenario(scen, 64, rng)
+    heap = simulate_job(
+        network=net,
+        policy=OraclePolicy(k=8, V=V, T_d=TD, mtbf_fn=scen.mtbf_fn,
+                            max_interval=600.0),
+        k=8, work_required=3600.0, V=V, T_d=TD)
+    assert heap.n_checkpoints == 5
+    assert heap.wall_time == pytest.approx(3600.0 + 5 * V)
+
+
 def test_workflow_edge_fetch_retries_counted_as_waste():
     """Churn-interrupted hand-off transfers are accounted in the stage's
     hand-off waste, and elapsed = successful transfer + waste."""
