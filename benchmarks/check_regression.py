@@ -1,0 +1,166 @@
+"""Benchmark-regression gate: compare smoke-run CSVs against baselines.
+
+CI runs the benchmark smoke grids (``python -m benchmarks.run --fast``) and
+tees the ``name,us_per_call,derived`` rows to a CSV; this tool compares
+those rows against a committed baseline file and exits non-zero when any
+gated metric drifts more than its tolerance — so a PR that quietly slows
+completion time or re-inflates server I/O fails the lane instead of
+landing.
+
+Baseline schema (``benchmarks/baselines/*.json``)::
+
+    [
+      {"scenario": "offload_constant_R0", "metric": "us_per_call",
+       "value": 66033926017.0, "tolerance": 0.10},
+      ...
+    ]
+
+``scenario`` is the benchmark row name, ``metric`` either ``us_per_call``
+(the row's primary column — completion wall time for the sim benchmarks)
+or any ``key=value`` entry of the derived column (``server_bytes``,
+``rel_runtime`` ...; trailing units/``%`` are stripped).  ``tolerance`` is
+relative (|new - base| / |base|); a zero baseline value falls back to an
+absolute comparison (|new| <= tolerance).  A baseline row whose scenario or
+metric is missing from the CSV is itself a violation — a deleted benchmark
+must not silently pass the gate.
+
+Usage::
+
+    python -m benchmarks.check_regression \
+        --csv bench-smoke.csv --baseline benchmarks/baselines/smoke-jax.json \
+        --out BENCH_PR4.json
+
+``--out`` additionally writes a trajectory file recording every compared
+metric (baseline, observed, drift, verdict) for the artifact trail.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Sequence
+
+DEFAULT_TOLERANCE = 0.10
+
+
+def parse_bench_csv(lines: Sequence[str]) -> Dict[str, Dict[str, float]]:
+    """``name,us_per_call,derived`` rows -> {name: {metric: value}}.
+
+    The derived column is ``;``-separated ``key=value`` pairs; values keep
+    their leading float (units / ``%`` suffixes stripped).  Non-numeric
+    rows (headers, stray stderr) are skipped.
+    """
+    out: Dict[str, Dict[str, float]] = {}
+    for line in lines:
+        line = line.strip()
+        if not line or "," not in line:
+            continue
+        name, _, rest = line.partition(",")
+        us, _, derived = rest.partition(",")
+        try:
+            metrics = {"us_per_call": float(us)}
+        except ValueError:
+            continue  # header or malformed row
+        for pair in derived.split(";"):
+            key, sep, val = pair.partition("=")
+            if not sep:
+                continue
+            val = val.strip().rstrip("%xs")
+            try:
+                metrics[key.strip()] = float(val)
+            except ValueError:
+                continue  # non-numeric derived entry (e.g. a label)
+        out[name] = metrics
+    return out
+
+
+def check(metrics: Dict[str, Dict[str, float]],
+          baselines: Sequence[dict]) -> List[dict]:
+    """Compare parsed CSV metrics against baseline entries.
+
+    Returns one record per baseline entry: ``{scenario, metric, baseline,
+    value, drift, ok, reason}``.  ``ok`` is False for drift beyond
+    tolerance AND for baseline rows the CSV no longer contains.
+    """
+    records = []
+    for b in baselines:
+        scen, metric = b["scenario"], b["metric"]
+        base = float(b["value"])
+        tol = float(b.get("tolerance", DEFAULT_TOLERANCE))
+        rec = {"scenario": scen, "metric": metric, "baseline": base,
+               "value": None, "drift": None, "ok": False, "reason": ""}
+        row = metrics.get(scen)
+        if row is None:
+            rec["reason"] = "benchmark row missing from CSV"
+        elif metric not in row:
+            rec["reason"] = f"metric {metric!r} missing from row"
+        else:
+            val = row[metric]
+            rec["value"] = val
+            if base == 0.0:
+                rec["drift"] = abs(val)
+                rec["ok"] = abs(val) <= tol
+                if not rec["ok"]:
+                    rec["reason"] = (f"|{val:g}| exceeds absolute "
+                                     f"tolerance {tol:g} (zero baseline)")
+            else:
+                drift = abs(val - base) / abs(base)
+                rec["drift"] = drift
+                rec["ok"] = drift <= tol
+                if not rec["ok"]:
+                    rec["reason"] = (f"drift {100 * drift:.1f}% exceeds "
+                                     f"{100 * tol:.0f}% tolerance")
+        records.append(rec)
+    return records
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--csv", action="append", required=True,
+                    help="benchmark CSV to check (repeatable; rows merge)")
+    ap.add_argument("--baseline", required=True,
+                    help="baseline JSON (list of scenario/metric/value/"
+                         "tolerance entries)")
+    ap.add_argument("--out", default=None,
+                    help="write a BENCH_PR*.json trajectory file here")
+    ap.add_argument("--label", default="",
+                    help="lane label recorded in the trajectory file")
+    ap.add_argument("--pr", type=int, default=4,
+                    help="PR number recorded in the trajectory file")
+    args = ap.parse_args(argv)
+
+    metrics: Dict[str, Dict[str, float]] = {}
+    for path in args.csv:
+        with open(path) as fh:
+            metrics.update(parse_bench_csv(fh.readlines()))
+    with open(args.baseline) as fh:
+        baselines = json.load(fh)
+
+    records = check(metrics, baselines)
+    n_bad = sum(not r["ok"] for r in records)
+    for r in records:
+        status = "ok  " if r["ok"] else "FAIL"
+        drift = f"{100 * r['drift']:+7.2f}%" if r["drift"] is not None else "   n/a  "
+        print(f"[{status}] {r['scenario']}:{r['metric']}  "
+              f"base={r['baseline']:g} new="
+              f"{r['value'] if r['value'] is not None else 'missing'} "
+              f"drift={drift}  {r['reason']}")
+
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump({"pr": args.pr, "label": args.label,
+                       "baseline": args.baseline, "csv": args.csv,
+                       "n_checked": len(records), "n_failed": n_bad,
+                       "ok": n_bad == 0, "entries": records}, fh, indent=2)
+        print(f"wrote trajectory to {args.out}")
+
+    if n_bad:
+        print(f"REGRESSION: {n_bad}/{len(records)} gated metrics drifted "
+              f"beyond tolerance", file=sys.stderr)
+        return 1
+    print(f"all {len(records)} gated metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,11 +19,25 @@ stage restores and hand-off fetches read from R-way peer replica sets
 (endogenous restore times) instead of paying flat costs, and the run
 reports the aggregate work-pool-server I/O of a server-only (R=0)
 baseline vs the P2P-offloaded store — the paper's architectural claim.
+
+``--mix`` makes the fleet heterogeneous (DESIGN.md Sec 7): a registered
+:class:`PeerClassMix` name (``homogeneous``, ``boinc``,
+``campus_cluster``, ``fast_core_volunteer_tail``, ``two_class``) applied
+workflow-wide — per-stage hazard, compute speed, and (with ``--p2p``)
+replica uplinks all become class-aware.
 """
 import argparse
 
 from repro.p2p import StoreSpec, TransferModel
-from repro.sim import PolicyConfig, Stage, WorkflowSpec, scenario, simulate_workflow
+from repro.sim import (
+    PolicyConfig,
+    Stage,
+    WorkflowSpec,
+    available_mixes,
+    peer_class_mix,
+    scenario,
+    simulate_workflow,
+)
 
 V, TD = 20.0, 50.0
 
@@ -76,19 +90,25 @@ def main():
                     help="replication factor R for --p2p")
     ap.add_argument("--img-mb", type=float, default=200.0,
                     help="checkpoint image size for --p2p (MB)")
+    ap.add_argument("--mix", default=None, metavar="NAME",
+                    help="peer-class mix applied workflow-wide "
+                         f"(one of: {', '.join(available_mixes())})")
     args = ap.parse_args()
 
     scen_kw = {"mtbf0" if args.scenario == "doubling" else
                "scale" if args.scenario == "weibull" else "mtbf": args.mtbf}
     scen = scenario(args.scenario, **scen_kw)
+    mix = peer_class_mix(args.mix) if args.mix else None
     spec = build_workflow()
     print(f"workflow: {len(spec)} stages under scenario {scen.name!r}, "
-          f"estimator regime {args.estimator!r}")
+          f"estimator regime {args.estimator!r}"
+          + (f", peer-class mix {mix.name!r}" if mix else ""))
     adaptive_pol = PolicyConfig(kind="adaptive", prior_mu=1.0 / args.mtbf,
                                 prior_v=V, regime=args.estimator,
                                 gossip_period=args.gossip_period,
                                 gossip_fanout=args.gossip_fanout)
-    kw = dict(seeds=range(args.seeds), V=V, T_d=TD, backend=args.backend)
+    kw = dict(seeds=range(args.seeds), V=V, T_d=TD, backend=args.backend,
+              mix=mix)
 
     if args.p2p:
         transfer = TransferModel(img_bytes=args.img_mb * 1e6)

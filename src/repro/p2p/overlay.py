@@ -32,7 +32,8 @@ This module models that membership process and the placement rule:
 from __future__ import annotations
 
 import hashlib
-from typing import Callable, List, Sequence
+import math
+from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
@@ -78,26 +79,46 @@ class ReplicaSetProcess:
     """
 
     def __init__(self, R: int, mtbf_fn: MtbfFn, t_repair: float,
-                 rng: np.random.Generator, t0: float = 0.0):
+                 rng: np.random.Generator, t0: float = 0.0,
+                 slot_mults: Optional[Sequence[float]] = None):
+        """``slot_mults`` gives holder slot ``i`` a hazard multiplier
+        (heterogeneous fleets, DESIGN.md Sec 7): its lifetimes are
+        Exp(mtbf/mult) and its stationary availability
+        1/(1 + mult*mu*t_repair).  ``None`` keeps the homogeneous process,
+        with an unchanged RNG call sequence."""
         if R < 0:
             raise ValueError("replication factor must be >= 0")
         if t_repair <= 0:
             raise ValueError("t_repair must be positive")
+        if slot_mults is not None:
+            slot_mults = tuple(float(m) for m in slot_mults)
+            if len(slot_mults) != R:
+                raise ValueError(
+                    f"need one hazard multiplier per holder: "
+                    f"{len(slot_mults)} != {R}")
+            if slot_mults and min(slot_mults) <= 0:
+                raise ValueError("holder hazard multipliers must be positive")
         self.R = R
         self.mtbf_fn = mtbf_fn
         self.t_repair = float(t_repair)
         self.rng = rng
+        self.slot_mults = slot_mults
         self.t0 = float(t0)
         self.t = float(t0)
         self.n_losses = 0  # transitions into the all-dead state
         mtbf0 = mtbf_fn(t0)
-        A = availability(1.0 / mtbf0, t_repair)
         self._up = np.zeros(R, dtype=bool)
         self._next = np.full(R, np.inf)
         for i in range(R):
+            mult = slot_mults[i] if slot_mults is not None else 1.0
+            A = availability(mult / mtbf0, t_repair)
             self._up[i] = rng.random() < A
-            hold = mtbf0 if self._up[i] else t_repair
+            hold = mtbf0 / mult if self._up[i] else t_repair
             self._next[i] = t0 + rng.exponential(hold)
+
+    def _slot_mtbf(self, i: int, t: float) -> float:
+        m = self.mtbf_fn(t)
+        return m / self.slot_mults[i] if self.slot_mults is not None else m
 
     def advance(self, t: float) -> None:
         """Process holder deaths/repairs up to wall time ``t``, in order."""
@@ -113,7 +134,7 @@ class ReplicaSetProcess:
                     self.n_losses += 1
             else:
                 self._up[i] = True
-                self._next[i] = te + self.rng.exponential(self.mtbf_fn(te))
+                self._next[i] = te + self.rng.exponential(self._slot_mtbf(i, te))
         self.t = max(self.t, float(t))
 
     def n_alive(self, t: float) -> int:
@@ -121,13 +142,20 @@ class ReplicaSetProcess:
         self.advance(t)
         return int(self._up.sum())
 
+    def alive_slots(self, t: float) -> List[int]:
+        """Indices of the holders alive at ``t`` (advances the process) —
+        class-aware restores stripe over exactly these slots' uplinks."""
+        self.advance(t)
+        return [i for i in range(self.R) if self._up[i]]
+
     def loss_rate(self) -> float:
         """Observed all-dead transition rate over the advanced horizon."""
         elapsed = self.t - self.t0
         return self.n_losses / elapsed if elapsed > 0 else 0.0
 
 
-def rendezvous_placement(key: str, nodes: Sequence[str], R: int) -> List[str]:
+def rendezvous_placement(key: str, nodes: Sequence[str], R: int,
+                         weights: Optional[Sequence[float]] = None) -> List[str]:
     """Pick R of ``nodes`` to hold ``key`` by highest-random-weight hashing.
 
     Every participant evaluates the same deterministic score
@@ -135,12 +163,33 @@ def rendezvous_placement(key: str, nodes: Sequence[str], R: int) -> List[str]:
     a node only remaps the keys it held (minimal disruption — the property
     that keeps re-replication traffic proportional to churn, not to the
     population).
+
+    ``weights`` enables *weighted* rendezvous hashing (heterogeneous
+    fleets): node ``i`` wins proportionally to ``weights[i]`` via the
+    standard -w/ln(u) transform of its unit-interval hash — e.g. weight by
+    class availability so stable, fat-uplink peers hold more replicas.
+    ``None`` keeps the classic unweighted ordering, unchanged.
     """
     if R < 0:
         raise ValueError("replication factor must be >= 0")
-    scored = sorted(
-        nodes,
-        key=lambda nd: hashlib.sha1(f"{key}|{nd}".encode()).hexdigest(),
-        reverse=True,
-    )
-    return list(scored[:min(R, len(scored))])
+    if weights is None:
+        scored = sorted(
+            nodes,
+            key=lambda nd: hashlib.sha1(f"{key}|{nd}".encode()).hexdigest(),
+            reverse=True,
+        )
+        return list(scored[:min(R, len(scored))])
+    if len(weights) != len(nodes):
+        raise ValueError("need one weight per node")
+    if any(w <= 0 for w in weights):
+        raise ValueError("placement weights must be positive")
+
+    def score(nd: str, w: float) -> float:
+        h = hashlib.sha1(f"{key}|{nd}".encode()).digest()
+        # 53 bits of the digest -> u in (0, 1); -w/ln(u) is the classic
+        # weighted-rendezvous score (monotone in w, continuous in u).
+        u = (int.from_bytes(h[:8], "big") >> 11 | 1) / float(1 << 53)
+        return -w / math.log(u)
+
+    scored = sorted(zip(nodes, weights), key=lambda p: score(*p), reverse=True)
+    return [nd for nd, _ in scored[:min(R, len(nodes))]]

@@ -18,12 +18,16 @@ against the heap for the churn process itself.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import TYPE_CHECKING, Callable, Optional
 
 import numpy as np
 
 from repro.p2p.overlay import ReplicaSetProcess, availability
 from repro.p2p.transfer import TransferModel
+
+if TYPE_CHECKING:  # pragma: no cover - annotation only (avoids an import
+    # cycle: repro.sim.engine imports this module at package-init time)
+    from repro.sim.scenarios import PeerClassMix
 
 # The batched engine unrolls the Binomial(R, A) inverse-CDF over a fixed
 # number of terms; R beyond this adds no meaningful availability anyway
@@ -81,10 +85,22 @@ class P2PCheckpointStore:
     """
 
     def __init__(self, spec: StoreSpec, mtbf_fn: Callable[[float], float],
-                 rng: np.random.Generator, t0: float = 0.0):
+                 rng: np.random.Generator, t0: float = 0.0,
+                 mix: Optional["PeerClassMix"] = None):
+        """``mix`` (a :class:`repro.sim.scenarios.PeerClassMix`) makes the
+        holder fleet heterogeneous: holder slot classes come from the mix's
+        deterministic assignment over the R slots, each class scales the
+        holder hazard, and restores stripe over the *surviving* holders'
+        class uplinks (DESIGN.md Sec 7).  This is the exact Poisson-binomial
+        per-event oracle for the batched engine's mean-field law."""
         self.spec = spec
+        holder_mults = holder_ups = None
+        if mix is not None and not mix.is_trivial and spec.R > 0:
+            holder_mults = mix.hazard_mults(spec.R)
+            holder_ups = mix.uplink_mults(spec.R)
+        self._holder_ups = holder_ups
         self.holders = ReplicaSetProcess(spec.R, mtbf_fn, spec.t_repair,
-                                         rng, t0=t0)
+                                         rng, t0=t0, slot_mults=holder_mults)
         self.server_bytes = 0.0
         self.n_server_restores = 0
         self.n_peer_restores = 0
@@ -94,13 +110,21 @@ class P2PCheckpointStore:
     def restore_seconds_at(self, t: float) -> float:
         """Endogenous T_d for a restore attempt starting at wall time ``t``.
 
-        Reads the exact surviving replica count; the attempt's source and
-        duration are remembered so :meth:`commit_restore` /
-        :meth:`abort_restore` can account it per attempt.
+        Reads the exact surviving replica count (and, for a class-aware
+        store, exactly *which* holders survive — their class uplinks set
+        the stripe bandwidth); the attempt's source and duration are
+        remembered so :meth:`commit_restore` / :meth:`abort_restore` can
+        account it per attempt.
         """
-        m = self.holders.n_alive(t)
-        self._last_from_server = m == 0
-        self._last_td = self.spec.transfer.restore_seconds(m)
+        if self._holder_ups is not None:
+            alive = self.holders.alive_slots(t)
+            self._last_from_server = not alive
+            self._last_td = self.spec.transfer.restore_seconds_from(
+                [self._holder_ups[i] for i in alive])
+        else:
+            m = self.holders.n_alive(t)
+            self._last_from_server = m == 0
+            self._last_td = self.spec.transfer.restore_seconds(m)
         return self._last_td
 
     def commit_restore(self) -> None:

@@ -60,6 +60,21 @@ class TransferModel:
         """Endogenous T_d for a restore finding m surviving replicas."""
         return self.peer_seconds(m) if m >= 1 else self.server_seconds()
 
+    def restore_seconds_from(self, uplink_mults) -> float:
+        """Endogenous T_d striped over a *heterogeneous* surviving set.
+
+        ``uplink_mults`` are the surviving holders' class uplink multipliers
+        (DESIGN.md Sec 7): holder i serves at ``uplink_mults[i] *
+        peer_uplink``, the stripe is capped by the restoring peer's
+        downlink, and an empty set falls back to the server.  With all
+        multipliers 1.0 this is exactly :meth:`restore_seconds` of the
+        count.
+        """
+        total = math.fsum(uplink_mults) * self.peer_uplink
+        if total <= 0.0:
+            return self.server_seconds()
+        return self.img_bytes / min(total, self.peer_downlink)
+
     def expected_restore_seconds(self, R: int, avail: float) -> float:
         """E[T_d] under m ~ Binomial(R, avail) — the oracle policy's view."""
         if not 0.0 <= avail <= 1.0:

@@ -13,13 +13,16 @@ Layered (DESIGN.md Sec 1):
   plus the server-offload sweep over :mod:`repro.p2p` storage modes.
 
 Cells carrying a :class:`repro.p2p.StoreSpec` derive restore times
-endogenously from the P2P checkpoint store (DESIGN.md Sec 6).
+endogenously from the P2P checkpoint store (DESIGN.md Sec 6); cells
+carrying a :class:`PeerClassMix` run on a heterogeneous fleet — per-peer
+hazard, compute-speed, and replica-uplink classes (DESIGN.md Sec 7).
 """
 from repro.sim.engine import BatchResult, CellSpec, PolicyConfig, run_cells
 from repro.sim.experiments import (
     Comparison,
     GossipFidelityCell,
     GridEntry,
+    HeterogeneityCell,
     OffloadCell,
     compare,
     compare_grid,
@@ -29,6 +32,8 @@ from repro.sim.experiments import (
     fig5_v_sweep,
     gossip_csv,
     gossip_fidelity_sweep,
+    hetero_csv,
+    heterogeneity_sweep,
     offload_csv,
     scenario_sweep,
     server_offload_sweep,
@@ -44,8 +49,13 @@ from repro.sim.job import (
 )
 from repro.sim.network import ChurnNetwork, DeathEvent, constant_mtbf, doubling_mtbf
 from repro.sim.scenarios import (
+    PeerClass,
+    PeerClassMix,
     Scenario,
+    available_mixes,
     available_scenarios,
+    peer_class_mix,
+    register_mix,
     register_scenario,
     scenario,
 )
@@ -68,8 +78,11 @@ __all__ = [
     "GossipAdaptivePolicy",
     "GossipFidelityCell",
     "GridEntry",
+    "HeterogeneityCell",
     "OffloadCell",
     "OraclePolicy",
+    "PeerClass",
+    "PeerClassMix",
     "PolicyConfig",
     "Scenario",
     "SimResult",
@@ -77,6 +90,7 @@ __all__ = [
     "StageResult",
     "WorkflowResult",
     "WorkflowSpec",
+    "available_mixes",
     "available_scenarios",
     "compare",
     "compare_grid",
@@ -88,7 +102,11 @@ __all__ = [
     "fig5_v_sweep",
     "gossip_csv",
     "gossip_fidelity_sweep",
+    "hetero_csv",
+    "heterogeneity_sweep",
     "offload_csv",
+    "peer_class_mix",
+    "register_mix",
     "register_scenario",
     "run_cells",
     "scenario",

@@ -76,6 +76,39 @@ the batch runs a non-pooled regime (1 otherwise); per-peer observation
 noise comes from a dedicated stream per seed so a cell's realization
 still never depends on batch composition.
 
+**Heterogeneous peer fleets** (DESIGN.md Sec 7): a cell carrying a
+:class:`repro.sim.scenarios.PeerClassMix` stops treating its peers as
+interchangeable.  Classes are assigned to slots by the mix's deterministic
+prefix-proportional rule, and the engine packs three aggregates that ride
+the existing cell batch branchlessly:
+
+* ``hsum_job`` — the sum of hazard multipliers over the k job slots.  The
+  job-level failure process stays Poisson (a sum of independent
+  exponentials with different rates), but with rate ``hsum_job * mu(t)``
+  instead of ``k * mu(t)``.
+* ``hsum_watch`` / ``hmean_peer`` — the same aggregate over the watch
+  neighbourhood (pooled estimator stream) and the per-peer mean multiplier
+  over each peer's ``slot % k`` share (isolated/gossip streams).  The
+  estimator itself stays class-blind — it counts deaths against
+  slot-seconds of exposure, exactly like the heap's MLE, so both paths
+  converge to the *watch-pool mean hazard* and inherit the same bias when
+  the job's class mix differs from the watch pool's.
+* ``speed`` — the job's aggregate compute speed (mean class speed over the
+  k slots: bag-of-tasks load balancing).  A policy interval is wall time;
+  the work it commits is ``interval * speed``.
+
+Store cells additionally carry per-class holder columns: replica slot
+classes come from the same assignment rule over the R holders, each class
+has its own stationary availability ``A_c = 1/(1 + mu h_c t_repair)``, and
+the surviving count is drawn mean-field — ``m ~ Binomial(R, mean A_c)``
+with restores striped over the survival-weighted mean class uplink.  (The
+per-event oracle runs the exact Poisson-binomial holder process; the
+mean-field law matches its mean survivor count exactly and its restore
+times to first order — see tests/test_heterogeneity.py.)  All columns
+reduce bit-exactly to the homogeneous path when every multiplier is 1.0:
+``hsum_job == float(k)``, ``speed == 1.0``, and multiplying by 1.0 is
+exact in IEEE arithmetic.
+
 **Endogenous restore times** (DESIGN.md Sec 6): a cell carrying a
 :class:`repro.p2p.StoreSpec` derives every restore's duration from the
 P2P checkpoint store instead of the exogenous ``T_d`` constant.  Each of
@@ -110,6 +143,7 @@ from repro.sim.scenarios import (
     DOUBLING,
     FLASH_CROWD,
     TRACE,
+    PeerClassMix,
     Scenario,
     hazard_kernel,
 )
@@ -139,6 +173,8 @@ _POIS_SWITCH = 6.0  # switch to the clipped-normal approximation above this
                     # mean (P[X > 16 | lam = 6] ~ 1e-4, clip bias < 1%)
 _OBS_STREAM = 0x6F627376  # numpy backend: per-seed tag of the secondary
                           # stream feeding per-peer observation noise
+_CLS_CAP = 4      # max peer classes whose replica holders a store cell can
+                  # carry (per-class availability columns in the step)
 
 
 @dataclass(frozen=True)
@@ -207,6 +243,7 @@ class CellSpec:
     max_wall_time: float = float("inf")
     t0: float = 0.0  # wall-clock offset (workflow stages start mid-scenario)
     store: Optional[StoreSpec] = None  # endogenous T_d from the P2P store
+    mix: Optional[PeerClassMix] = None  # heterogeneous fleet composition
 
 
 @dataclass(frozen=True)
@@ -281,6 +318,14 @@ class _Params(NamedTuple):
     td_cap: np.ndarray       # img / peer_downlink (striping floor)
     td_srv: np.ndarray       # img / server_share (all-replicas-lost)
     img_bytes: np.ndarray    # checkpoint image size (server accounting)
+    hsum_job: np.ndarray     # sum of hazard multipliers over the k job slots
+    hsum_watch: np.ndarray   # same over the watch neighbourhood
+    hmean_peer: np.ndarray   # [B, _PEER_CAP] mean multiplier per peer's share
+    speed: np.ndarray        # job compute speed (work units per wall second)
+    store_mix: np.ndarray    # bool: replica holders carry per-class columns
+    cls_n: np.ndarray        # [B, _CLS_CAP] holder count per class
+    cls_h: np.ndarray        # [B, _CLS_CAP] hazard multiplier per class
+    cls_td1: np.ndarray      # [B, _CLS_CAP] one-source restore per class (s)
 
 
 class _State(NamedTuple):
@@ -330,6 +375,41 @@ def _pack(cells: Sequence[CellSpec]) -> _Params:
             raise ValueError(
                 f"per-peer estimator regimes support k <= {_PEER_CAP}, "
                 f"got k={c.k}")
+        if (c.mix is not None and c.store is not None
+                and not c.mix.is_trivial and len(c.mix) > _CLS_CAP):
+            raise ValueError(
+                f"store cells support mixes of <= {_CLS_CAP} classes, "
+                f"got {len(c.mix)}")
+    # Heterogeneous-fleet aggregates.  Trivial mixes (every multiplier 1.0)
+    # take the exact homogeneous values — hsum_job == float(k) etc. — so a
+    # single-baseline-class mix is bit-identical to no mix at all.
+    hsum_job = np.empty(B)
+    hsum_watch = np.empty(B)
+    hmean_peer = np.ones((B, _PEER_CAP))
+    speed = np.ones(B)
+    store_mix = np.zeros(B, dtype=bool)
+    cls_n = np.zeros((B, _CLS_CAP))
+    cls_h = np.ones((B, _CLS_CAP))
+    cls_td1 = np.ones((B, _CLS_CAP))
+    for i, c in enumerate(cells):
+        mix = c.mix
+        if mix is None or mix.is_trivial:
+            hsum_job[i] = float(c.k)
+            hsum_watch[i] = float(watch[i])
+            continue
+        hm = np.asarray(mix.hazard_mults(watch[i]))
+        hsum_job[i] = math.fsum(hm[:c.k])
+        hsum_watch[i] = math.fsum(hm)
+        speed[i] = mix.mean_speed(c.k)
+        for j in range(min(c.k, _PEER_CAP)):
+            hmean_peer[i, j] = float(np.mean(hm[j::c.k]))
+        if c.store is not None and c.store.R > 0:
+            store_mix[i] = True
+            for cls_idx in mix.assign(c.store.R):
+                cls_n[i, cls_idx] += 1.0
+            for ci, pc in enumerate(mix.classes):
+                cls_h[i, ci] = pc.hazard_mult
+                cls_td1[i, ci] = c.store.td_up1 / pc.uplink_mult
     L = max(2, max(len(c.scenario.trace_t) for c in cells))
     trace_t = np.zeros((B, L))
     trace_mtbf = np.ones((B, L))
@@ -379,6 +459,14 @@ def _pack(cells: Sequence[CellSpec]) -> _Params:
         td_srv=f([c.store.td_server if c.store else c.T_d for c in cells]),
         img_bytes=f([c.store.transfer.img_bytes if c.store else 0.0
                      for c in cells]),
+        hsum_job=hsum_job,
+        hsum_watch=hsum_watch,
+        hmean_peer=hmean_peer,
+        speed=speed,
+        store_mix=store_mix,
+        cls_n=cls_n,
+        cls_h=cls_h,
+        cls_td1=cls_td1,
     )
 
 
@@ -434,7 +522,7 @@ def _trunc_exp_moments(kmu, L, q, xp):
     return m, v
 
 
-def _replica_draw(mu, u2, p: _Params, xp):
+def _replica_draw(mu, u2, p: _Params, xp, any_het: bool):
     """Endogenous restore law: sample the surviving replica count and turn
     it into this attempt's restore duration (DESIGN.md Sec 6).
 
@@ -443,12 +531,31 @@ def _replica_draw(mu, u2, p: _Params, xp):
     holder process is memoryless and started stationary), so m ~
     Binomial(R, A).  The inverse CDF is unrolled over R_MAX terms with the
     pmf recurrence pmf_{j+1} = pmf_j * (R-j)/(j+1) * A/(1-A) — branchless,
-    so store and legacy cells share one jitted step.  Returns
-    (td_rest, from_server, td_expect): the sampled attempt duration (legacy
-    cells keep p.T_d), whether it hits the server fallback, and E[td] for
-    the oracle policy.
+    so store and legacy cells share one jitted step.
+
+    ``any_het`` (static) enables the heterogeneous-holder columns: a store
+    cell with a :class:`PeerClassMix` gives holder class c the availability
+    A_c = 1/(1 + mu h_c t_repair), and the draw goes mean-field —
+    Binomial(R, mean A_c) with restores striped over the survival-weighted
+    mean class uplink (the per-event oracle's Poisson-binomial has the same
+    mean survivor count; the spread difference is second-order, see
+    DESIGN.md Sec 7).  Non-mix cells keep the exact legacy formula bit-for-
+    bit (both paths are computed and selected with ``where``).
+
+    Returns (td_rest, from_server, td_expect): the sampled attempt duration
+    (legacy cells keep p.T_d), whether it hits the server fallback, and
+    E[td] for the oracle policy.
     """
     A = xp.clip(1.0 / (1.0 + mu * p.repair), 1e-12, 1.0 - 1e-12)
+    td_up1 = p.td_up1
+    if any_het:
+        A_c = 1.0 / (1.0 + (mu * p.repair)[..., None] * p.cls_h)
+        nA = p.cls_n * A_c                    # expected survivors per class
+        sumA = xp.sum(nA, axis=-1)
+        A_mix = xp.clip(sumA / xp.maximum(p.R, 1.0), 1e-12, 1.0 - 1e-12)
+        td_mix = sumA / xp.maximum(xp.sum(nA / p.cls_td1, axis=-1), 1e-300)
+        A = xp.where(p.store_mix, A_mix, A)
+        td_up1 = xp.where(p.store_mix, td_mix, td_up1)
     ratio = A / (1.0 - A)
     pmf = (1.0 - A) ** p.R                    # P(m = 0)
     cdf = pmf
@@ -458,27 +565,32 @@ def _replica_draw(mu, u2, p: _Params, xp):
         m = m + (u2 > cdf)
         pmf = xp.maximum(pmf * (p.R - j) / (j + 1.0) * ratio, 0.0)
         cdf = cdf + pmf
-        etd = etd + pmf * striped_restore_seconds(j + 1.0, p.td_up1,
+        etd = etd + pmf * striped_restore_seconds(j + 1.0, td_up1,
                                                   p.td_cap, p.td_srv, xp)
     m = xp.minimum(m, p.R)                    # guard pmf underflow at A ~ 1
-    td_endo = striped_restore_seconds(m, p.td_up1, p.td_cap, p.td_srv, xp)
+    td_endo = striped_restore_seconds(m, td_up1, p.td_cap, p.td_srv, xp)
     td_rest = xp.where(p.store_on, td_endo, p.T_d)
     from_server = p.store_on & (m < 1.0)
     td_expect = xp.where(p.store_on, etd, p.T_d)
     return td_rest, from_server, td_expect
 
 
-def _attempt(s: _State, p: _Params, u2, xp, lw, any_store: bool):
+def _attempt(s: _State, p: _Params, u2, xp, lw, any_store: bool,
+             any_het: bool):
     """Pure pre-sampling half of a step: what is each cell about to do?
 
     ``u2`` is this step's replica-survival uniform (store cells sample the
     surviving holder count from it; legacy cells ignore it).  ``any_store``
-    is static per batch: all-legacy batches skip the R_MAX-term replica
-    unroll entirely (the u2 stream is still consumed so a cell's
-    realization never depends on batch composition).
+    / ``any_het`` are static per batch: all-legacy batches skip the
+    R_MAX-term replica unroll entirely, all-homogeneous-store batches skip
+    the per-class availability columns (the u2 stream is still consumed so
+    a cell's realization never depends on batch composition).
     """
     mu = hazard_kernel(s.t, p.scen_kind, p.scen_p, p.trace_t, p.trace_mtbf, xp)
-    kmu = p.k * mu
+    # The job-level failure process under a class mix: each slot fails at
+    # mu * h_slot, and a sum of independent exponentials is Poisson with
+    # the summed rate — hsum_job == float(k) for homogeneous cells.
+    kmu = p.hsum_job * mu
     active = ~s.finished
     # Censoring is checked at the top of the work loop (not inside restore
     # retries), matching simulate_job.
@@ -486,7 +598,8 @@ def _attempt(s: _State, p: _Params, u2, xp, lw, any_store: bool):
     att = active & ~censor_now
 
     if any_store:
-        td_rest, from_server, td_expect = _replica_draw(mu, u2, p, xp)
+        td_rest, from_server, td_expect = _replica_draw(mu, u2, p, xp,
+                                                        any_het)
     else:
         td_rest, from_server, td_expect = p.T_d, p.store_on, p.T_d
 
@@ -503,8 +616,13 @@ def _attempt(s: _State, p: _Params, u2, xp, lw, any_store: bool):
     # use E[td] under the true availability.
     td_known = xp.where(p.store_on, s.td_obs[:, 0], p.T_d)
     Td_hat = xp.where(s.seen_restore, td_known, V_hat)
+    # The oracle knows the fleet composition: its per-peer rate is the
+    # class-mean hazard hsum_job/k * mu (== mu for homogeneous cells, and
+    # hsum/k is exactly 1.0 there, so the product is bit-identical).  The
+    # adaptive estimate mu_hat already converges to the watch-pool mean.
+    mu_true = mu * (p.hsum_job / p.k)
     iv2 = _opt_interval(
-        xp.stack([mu_hat, mu]), p.k,
+        xp.stack([mu_hat, mu_true]), p.k,
         xp.stack([xp.maximum(V_hat, 1e-6), p.V]),
         xp.stack([Td_hat, td_expect]), xp, lw)
     iv_adaptive = xp.clip(iv2[0], p.min_iv, p.max_iv)
@@ -517,9 +635,11 @@ def _attempt(s: _State, p: _Params, u2, xp, lw, any_store: bool):
     interval = xp.maximum(interval, 1e-3)
 
     remaining = xp.maximum(p.work - s.done, 0.0)
-    work_target = xp.minimum(interval, remaining)
+    # A policy interval is wall-clock compute time; the work it commits is
+    # interval * speed (speed == 1.0, exactly, for homogeneous cells).
+    work_target = xp.minimum(interval * p.speed, remaining)
     is_final = work_target >= remaining
-    cycle_len = work_target + xp.where(is_final, 0.0, p.V)
+    cycle_len = work_target / p.speed + xp.where(is_final, 0.0, p.V)
     attempt_len = xp.where(s.in_restore, td_rest, cycle_len)
     return (mu, kmu, attempt_len, work_target, is_final, cycle_len,
             censor_now, att, td_rest, from_server)
@@ -626,7 +746,7 @@ def _apply(s: _State, p: _Params, pre, u, z, u3, z3, macro_threshold,
     # mis-estimated livelock.  Fixed and oracle cells have nothing to
     # learn and keep the full burst.
     horizon = xp.minimum(horizon, xp.where(
-        p.pol == 1, p.window / xp.maximum(p.watch * mu, 1e-300), xp.inf))
+        p.pol == 1, p.window / xp.maximum(p.hsum_watch * mu, 1e-300), xp.inf))
     M_cap = xp.floor(horizon / xp.maximum(pair_m, 1e-300))
     M = xp.clip(xp.minimum(M_want, M_cap), 0.0, _MACRO_CAP)
     # Store cells never macro-step: the burst closed form above assumes a
@@ -692,7 +812,10 @@ def _apply(s: _State, p: _Params, pre, u, z, u3, z3, macro_threshold,
     # share (sampling noise IS the fidelity axis being modelled).
     elapsed = t - s.t
     if peer_axis == 1:
-        d = (p.watch * mu * elapsed)[:, None]
+        # Deaths arrive at the class-weighted watch rate (hsum_watch ==
+        # float(watch) for homogeneous cells); exposure stays in raw
+        # slot-seconds — the estimator is class-blind, like the heap MLE.
+        d = (p.hsum_watch * mu * elapsed)[:, None]
         expo = (p.watch * elapsed)[:, None]
         beta = xp.exp(d * p.log_decay[:, None])
         ema_d = s.ema_d * beta + d
@@ -703,7 +826,12 @@ def _apply(s: _State, p: _Params, pre, u, z, u3, z3, macro_threshold,
         peer_act = (xp.arange(peer_axis)[None, :]
                     < xp.where(pooled, 1.0, p.k)[:, None])
         rate_slot = xp.where(pooled, p.watch, p.watch / p.k)  # slots per peer
-        lam = rate_slot[:, None] * (mu * elapsed)[:, None] * peer_act
+        # Death intensity per peer: its watch/k slot share scaled by the
+        # mean class multiplier of that share (all 1.0 when homogeneous).
+        rate_death = xp.where(pooled[:, None], p.hsum_watch[:, None],
+                              (p.watch / p.k)[:, None]
+                              * p.hmean_peer[:, :peer_axis])
+        lam = rate_death * (mu * elapsed)[:, None] * peer_act
         d = xp.where(pooled[:, None], lam, _sample_counts(lam, u3, z3, xp))
         beta = xp.exp(d * p.log_decay[:, None])
         ema_d = xp.where(peer_act, s.ema_d * beta + d, s.ema_d)
@@ -732,7 +860,7 @@ def _lw_numpy(z):
 
 
 def _run_numpy(p: _Params, seeds: Sequence[int], max_steps: int,
-               macro_threshold: float, any_store: bool,
+               macro_threshold: float, any_store: bool, any_het: bool,
                peer_axis: int) -> tuple:
     # One stream per UNIQUE seed, consumed positionally (draw i belongs to
     # step i): a cell's realization depends only on its own seed, never on
@@ -775,7 +903,7 @@ def _run_numpy(p: _Params, seeds: Sequence[int], max_steps: int,
                 u3 = block_u3[inv, :, j]
                 z3 = block_z3[inv, :, j]
             j += 1
-            pre = _attempt(s, p, u2, np, _lw_numpy, any_store)
+            pre = _attempt(s, p, u2, np, _lw_numpy, any_store, any_het)
             s = _apply(s, p, pre, u, z, u3, z3, macro_threshold, peer_axis, np)
     return s, steps
 
@@ -792,7 +920,7 @@ if _HAVE_JAX:
         return lambertw0(z, iters=_LW_ITERS)
 
     def _jax_chunk(state_and_keys, p: _Params, macro_threshold: float,
-                   any_store: bool, peer_axis: int):
+                   any_store: bool, any_het: bool, peer_axis: int):
         def body(carry, _):
             s, keys = carry
             # Per-CELL keys (seeded from CellSpec.seed): realizations are
@@ -815,7 +943,7 @@ if _HAVE_JAX:
                     k, (peer_axis,), dtype=jnp.float64))(k5)
             else:
                 u3 = z3 = None
-            pre = _attempt(s, p, u2, jnp, lambertw0_jnp, any_store)
+            pre = _attempt(s, p, u2, jnp, lambertw0_jnp, any_store, any_het)
             return (_apply(s, p, pre, u, z, u3, z3, macro_threshold,
                            peer_axis, jnp), keys), None
 
@@ -826,12 +954,12 @@ if _HAVE_JAX:
 
 
 def _run_jax(p: _Params, seeds: Sequence[int], max_steps: int,
-             macro_threshold: float, any_store: bool,
+             macro_threshold: float, any_store: bool, any_het: bool,
              peer_axis: int) -> tuple:
     global _jax_chunk_jit
     with jax.experimental.enable_x64(True):
         if _jax_chunk_jit is None:
-            _jax_chunk_jit = jax.jit(_jax_chunk, static_argnums=(2, 3, 4))
+            _jax_chunk_jit = jax.jit(_jax_chunk, static_argnums=(2, 3, 4, 5))
         pj = _Params(*(jnp.asarray(a) for a in p))
         keys = jax.vmap(jax.random.PRNGKey)(
             jnp.asarray(list(seeds), dtype=jnp.uint32))
@@ -839,7 +967,7 @@ def _run_jax(p: _Params, seeds: Sequence[int], max_steps: int,
         steps = 0
         while steps < max_steps:
             s, keys = _jax_chunk_jit((s, keys), pj, macro_threshold, any_store,
-                                     peer_axis)
+                                     any_het, peer_axis)
             steps += _CHUNK
             if bool(s.finished.all()):
                 break
@@ -874,18 +1002,19 @@ def run_cells(cells: Sequence[CellSpec], *, backend: str = "auto",
     p = _pack(cells)
     seeds = [c.seed for c in cells]
     any_store = any(c.store is not None for c in cells)
+    any_het = bool(p.store_mix.any())
     # Per-peer estimator state is only materialized when some cell needs it.
     peer_axis = (_PEER_CAP if any(c.policy.regime != "pooled" for c in cells)
                  else 1)
     run = _run_jax if backend == "jax" else _run_numpy
     s, steps = run(p, seeds, max_steps, float(macro_threshold), any_store,
-                   peer_axis)
+                   any_het, peer_axis)
 
     ran_out = ~np.asarray(s.finished)
     completed = ~(np.asarray(s.censored) | ran_out)
     return BatchResult(
         wall_time=np.asarray(s.t) - p.t0,
-        work_required=p.work,
+        work_required=p.work / p.speed,
         n_checkpoints=np.asarray(s.n_ckpt).astype(np.int64),
         n_failures=np.asarray(s.n_fail).astype(np.int64),
         wasted_work=np.asarray(s.wasted),

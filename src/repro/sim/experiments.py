@@ -37,7 +37,7 @@ from repro.sim.job import (
     simulate_job,
 )
 from repro.sim.network import ChurnNetwork, MtbfFn, constant_mtbf, doubling_mtbf
-from repro.sim.scenarios import Scenario, scenario
+from repro.sim.scenarios import PeerClassMix, Scenario, peer_class_mix, scenario
 
 # Paper Sec 4.2 defaults.
 PAPER_V = 20.0
@@ -506,6 +506,113 @@ def gossip_fidelity_sweep(
 def gossip_csv(cells: Sequence[GossipFidelityCell]) -> List[str]:
     """CSV rows (header first) — one row per (scenario, regime) cell."""
     return [GOSSIP_CSV_HEADER] + [c.csv_row() for c in cells]
+
+
+# --------------------------------------------------------------------------- #
+# Heterogeneity experiment (skewed fleets, DESIGN.md Sec 7).                   #
+# --------------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class HeterogeneityCell:
+    """One (scenario x peer-class mix) cell of the heterogeneity sweep."""
+
+    scenario: str
+    mix: str                    # mix name ("homogeneous", "boinc", ...)
+    mean_speed: float           # job compute speed of the mix
+    adaptive_wall: float        # mean completion wall time (s)
+    fixed_wall: float
+    oracle_wall: float
+    relative_runtime: float     # Eq. 11: 100 * fixed / adaptive (%)
+    oracle_gap: float           # adaptive / oracle (>= ~1)
+    completed_frac: float       # adaptive cells that completed
+
+    def csv_row(self) -> str:
+        return (f"{self.scenario},{self.mix},{self.mean_speed:.3f},"
+                f"{self.adaptive_wall:.1f},{self.fixed_wall:.1f},"
+                f"{self.oracle_wall:.1f},{self.relative_runtime:.2f},"
+                f"{self.oracle_gap:.4f},{self.completed_frac:.3f}")
+
+
+HETERO_CSV_HEADER = ("scenario,mix,mean_speed,adaptive_wall_s,fixed_wall_s,"
+                     "oracle_wall_s,rel_runtime_pct,oracle_gap,completed_frac")
+
+
+def default_mixes() -> List[PeerClassMix]:
+    """The sweep's canonical skew axis: homogeneous baseline, the BOINC
+    fleet, a fast-core deployment, and a heavily volatile two-class skew."""
+    return [peer_class_mix("homogeneous"),
+            peer_class_mix("boinc"),
+            peer_class_mix("fast_core_volunteer_tail"),
+            peer_class_mix("two_class", frac_volatile=0.5, hazard_ratio=6.0,
+                           speed_ratio=1.5)]
+
+
+def heterogeneity_sweep(
+    scenarios: Optional[Sequence[Scenario]] = None,
+    mixes: Optional[Sequence[PeerClassMix]] = None,
+    fixed_T: float = 300.0,
+    *,
+    k: int = DEFAULT_K,
+    work: float = DEFAULT_WORK,
+    seeds: Sequence[int] = tuple(range(8)),
+    n_slots: int = DEFAULT_SLOTS,
+    mtbf0: float = 7200.0,
+    backend: str = "auto",
+    max_wall_factor: float = 50.0,
+) -> List[HeterogeneityCell]:
+    """Adaptive vs fixed vs oracle across fleet compositions, one batch.
+
+    The experiment the peer-class system exists for: the same scenarios
+    under increasingly skewed mixes, asking where adaptation pays most.
+    The adaptive prior is the *per-peer base rate* ``1/mtbf0`` — correct
+    for the homogeneous fleet, increasingly wrong as the mix skews the
+    watch-pool mean hazard away from 1.0 — while the oracle knows the
+    class-weighted truth, so the oracle gap isolates what estimation (and
+    the class-blind estimator's job-vs-watch-pool bias) costs on real
+    fleets.  All policies share seeds (common random numbers).
+    """
+    if scenarios is None:
+        scenarios = [scenario("constant", mtbf=mtbf0),
+                     scenario("diurnal", mtbf=mtbf0),
+                     scenario("flash_crowd", mtbf=mtbf0)]
+    if mixes is None:
+        mixes = default_mixes()
+    names = [m.name or f"mix#{i}" for i, m in enumerate(mixes)]
+    seeds = list(seeds)
+    S = len(seeds)
+    grid = [(scen, m) for scen in scenarios for m in mixes]
+    cells = []
+    for scen, m in grid:
+        policies = (
+            PolicyConfig(kind="adaptive", prior_mu=1.0 / mtbf0, prior_v=PAPER_V),
+            PolicyConfig(kind="fixed", fixed_T=fixed_T),
+            PolicyConfig(kind="oracle"),
+        )
+        for pol in policies:
+            for s in seeds:
+                cells.append(CellSpec(
+                    scenario=scen, policy=pol, seed=s, k=k, work=work,
+                    V=PAPER_V, T_d=PAPER_TD, n_slots=n_slots,
+                    max_wall_time=max_wall_factor * work / m.mean_speed(k),
+                    mix=m))
+    res = run_cells(cells, backend=backend)
+    walls = res.wall_time.reshape(len(grid), 3, S)
+    compl = res.completed.reshape(len(grid), 3, S)
+    out = []
+    for i, (scen, m) in enumerate(grid):
+        a, fx, o = (float(w) for w in walls[i].mean(axis=1))
+        out.append(HeterogeneityCell(
+            scenario=scen.name, mix=names[i % len(mixes)],
+            mean_speed=m.mean_speed(k),
+            adaptive_wall=a, fixed_wall=fx, oracle_wall=o,
+            relative_runtime=100.0 * fx / a, oracle_gap=a / o,
+            completed_frac=float(compl[i, 0].mean())))
+    return out
+
+
+def hetero_csv(cells: Sequence[HeterogeneityCell]) -> List[str]:
+    """CSV rows (header first) — one row per (scenario, mix) cell."""
+    return [HETERO_CSV_HEADER] + [c.csv_row() for c in cells]
 
 
 def summarize(results: Dict[float, List[Comparison]]) -> str:

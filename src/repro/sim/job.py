@@ -249,6 +249,7 @@ def simulate_job(
     watch: Optional[int] = None,
     max_wall_time: float = float("inf"),
     store: Optional["P2PCheckpointStore"] = None,
+    speed: float = 1.0,
 ) -> SimResult:
     """Run one job to completion under churn.
 
@@ -256,6 +257,13 @@ def simulate_job(
     observation stream (defaults to min(4k, n_slots) — k job peers plus
     their neighbours).  Deaths of slots >= watch are invisible to the
     policy but slots < k always cause job failure.
+
+    ``speed`` is the job's aggregate compute speed (work units per wall
+    second — e.g. :meth:`repro.sim.scenarios.PeerClassMix.mean_speed` over
+    the k job slots).  A policy interval is wall time; the work it commits
+    is ``interval * speed``, mirroring the batched engine's speed column.
+    The reported ``work_required`` is the fault-free wall runtime
+    ``work_required / speed``.
 
     ``store`` (a :class:`repro.p2p.P2PCheckpointStore`) makes the restore
     time *endogenous*: each restore attempt reads the store's surviving
@@ -267,6 +275,8 @@ def simulate_job(
     """
     if k > network.n_slots:
         raise ValueError(f"job needs {k} slots but network has {network.n_slots}")
+    if speed <= 0:
+        raise ValueError("speed must be positive")
     watch = min(4 * k, network.n_slots) if watch is None else min(watch, network.n_slots)
 
     t = 0.0                # wall clock
@@ -313,18 +323,22 @@ def simulate_job(
             # to the same saved status again and again', Sec 4.2).  Report
             # the censored wall time — a LOWER BOUND on the true runtime.
             return SimResult(
-                wall_time=t, work_required=work_required, n_checkpoints=n_ckpt,
+                wall_time=t, work_required=work_required / speed,
+                n_checkpoints=n_ckpt,
                 n_failures=n_fail, wasted_work=wasted, checkpoint_time=ckpt_time,
                 restore_time=restore_time, completed=False, **store_stats(),
             )
         policy.tick(t)
         interval = max(policy.interval(), 1e-3)
-        work_target = min(interval, work_required - done)
-        # The cycle: work_target seconds of compute, then (if not finished)
-        # V seconds of checkpoint.  A failure anywhere in the cycle rolls
-        # back to `done`.
+        # The policy interval is wall time; at `speed` work units per wall
+        # second it commits interval * speed work (both exactly the
+        # homogeneous values when speed == 1).
+        work_target = min(interval * speed, work_required - done)
+        # The cycle: work_target/speed seconds of compute, then (if not
+        # finished) V seconds of checkpoint.  A failure anywhere in the
+        # cycle rolls back to `done`.
         is_final = (done + work_target) >= work_required
-        cycle_len = work_target + (0.0 if is_final else V)
+        cycle_len = work_target / speed + (0.0 if is_final else V)
         fail_at = drain_observations(t + cycle_len)
         if fail_at is None:
             # Cycle completed.
@@ -366,7 +380,7 @@ def simulate_job(
 
     return SimResult(
         wall_time=t,
-        work_required=work_required,
+        work_required=work_required / speed,
         n_checkpoints=n_ckpt,
         n_failures=n_fail,
         wasted_work=wasted,

@@ -12,11 +12,11 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass
-from typing import Callable, Iterator, Optional
+from typing import Callable, Iterator, Optional, Sequence
 
 import numpy as np
 
-from repro.sim.scenarios import Scenario, scenario
+from repro.sim.scenarios import PeerClassMix, Scenario, scenario
 
 MtbfFn = Callable[[float], float]  # wall time (s) -> current MTBF (s)
 
@@ -57,27 +57,50 @@ class ChurnNetwork:
     """
 
     def __init__(self, n_slots: int, mtbf_fn: MtbfFn, rng: np.random.Generator,
-                 lifetime_sampler: Optional[Callable[[np.random.Generator, float], float]] = None):
+                 lifetime_sampler: Optional[Callable[[np.random.Generator, float], float]] = None,
+                 slot_mults: Optional[Sequence[float]] = None):
         """``lifetime_sampler(rng, birth)`` overrides the default
         Exp(mtbf_fn(birth)) session lengths — e.g. heavy-tailed Weibull
-        lifetimes from the scenario registry."""
+        lifetimes from the scenario registry.
+
+        ``slot_mults`` gives each slot a hazard multiplier (heterogeneous
+        fleets, DESIGN.md Sec 7): slot ``i``'s sampled lifetimes are divided
+        by ``slot_mults[i]``, which for exponential (and Weibull) lifetimes
+        is exactly a hazard scaling.  ``None`` keeps the homogeneous fleet,
+        bit-for-bit (the RNG call sequence is unchanged).
+        """
         if n_slots <= 0:
             raise ValueError("need at least one peer slot")
+        if slot_mults is not None:
+            slot_mults = tuple(float(m) for m in slot_mults)
+            if len(slot_mults) != n_slots:
+                raise ValueError(
+                    f"need one hazard multiplier per slot: {len(slot_mults)} "
+                    f"!= {n_slots}")
+            if min(slot_mults) <= 0:
+                raise ValueError("slot hazard multipliers must be positive")
         self.n_slots = n_slots
         self.mtbf_fn = mtbf_fn
         self.rng = rng
         self.lifetime_sampler = lifetime_sampler
+        self.slot_mults = slot_mults
         self._heap: list[tuple[float, int, float]] = []  # (death_time, slot, birth_time)
         for slot in range(n_slots):
             self._spawn(slot, birth=0.0)
 
     @classmethod
     def from_scenario(cls, scen: Scenario, n_slots: int,
-                      rng: np.random.Generator) -> "ChurnNetwork":
+                      rng: np.random.Generator,
+                      mix: Optional[PeerClassMix] = None) -> "ChurnNetwork":
         """Build a network whose churn follows a registry scenario, including
         its lifetime distribution (Weibull scenarios sample true heavy
-        tails here; the batched engine approximates them by renewal rate)."""
-        return cls(n_slots, scen.mtbf_fn, rng, lifetime_sampler=scen.sample_lifetime)
+        tails here; the batched engine approximates them by renewal rate).
+        ``mix`` assigns per-slot hazard multipliers from a
+        :class:`PeerClassMix` (its deterministic prefix-proportional slot
+        assignment, the same one the batched engine packs)."""
+        mults = mix.hazard_mults(n_slots) if mix is not None else None
+        return cls(n_slots, scen.mtbf_fn, rng,
+                   lifetime_sampler=scen.sample_lifetime, slot_mults=mults)
 
     def _spawn(self, slot: int, birth: float) -> None:
         if self.lifetime_sampler is not None:
@@ -89,6 +112,10 @@ class ChurnNetwork:
             if mtbf <= 0:
                 raise ValueError(f"MTBF must be positive, got {mtbf} at t={birth}")
             lifetime = self.rng.exponential(mtbf)
+        if self.slot_mults is not None:
+            # Hazard scaling: dividing an Exp (or Weibull) lifetime by h
+            # multiplies its hazard by h; /1.0 is exact for baseline slots.
+            lifetime = lifetime / self.slot_mults[slot]
         heapq.heappush(self._heap, (birth + lifetime, slot, birth))
 
     def next_death(self) -> DeathEvent:

@@ -22,6 +22,19 @@ CLI can enumerate them:
 The paper evaluates constant and doubling departure rates (Fig. 4); the
 diurnal, flash-crowd, Weibull, and trace scenarios extend the evaluation to
 the richer churn observed in BOINC/Gnutella-style deployments (Sec 2).
+
+**Heterogeneous fleets** (DESIGN.md Sec 7): a :class:`PeerClassMix` layers
+named peer *classes* on top of a scenario — each class scales the
+scenario's hazard (``hazard_mult``), the peer's compute throughput
+(``speed``), and its replica-serving uplink (``uplink_mult``).  Anderson &
+Fedak measure order-of-magnitude spreads across exactly these three axes
+in real BOINC fleets, which is why volunteer populations are not a
+homogeneous cluster.  Mixes are registered like scenarios
+(:func:`peer_class_mix` / :func:`available_mixes`), and classes are
+assigned to peer slots by the deterministic prefix-proportional rule
+:meth:`PeerClassMix.assign`, so the batched engine and the per-event heap
+oracle agree on which slot belongs to which class without exchanging any
+state.
 """
 from __future__ import annotations
 
@@ -260,3 +273,235 @@ def trace(times: Sequence[float], mtbfs: Sequence[float]) -> Scenario:
         times, mtbfs = times + (times[0] + 1.0,), mtbfs * 2
     return Scenario("trace", TRACE, (1.0, 1.0, 1.0, 1.0),
                     trace_t=times, trace_mtbf=mtbfs)
+
+
+# --------------------------------------------------------------------------- #
+# Heterogeneous peer fleets: classes, mixes, and the mix registry.             #
+# --------------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class PeerClass:
+    """One named population of peers inside a :class:`PeerClassMix`.
+
+    ``hazard_mult`` multiplies the scenario's hazard rate for peers of this
+    class (2.0 = churns twice as fast); ``speed`` is the compute-speed
+    factor (work units per wall second, 1.0 = the homogeneous baseline);
+    ``uplink_mult`` multiplies :class:`repro.p2p.TransferModel.peer_uplink`
+    when a peer of this class serves a checkpoint replica.
+    """
+
+    name: str
+    hazard_mult: float = 1.0
+    speed: float = 1.0
+    uplink_mult: float = 1.0
+
+    def __post_init__(self) -> None:
+        if not self.name:
+            raise ValueError("peer class needs a name")
+        if min(self.hazard_mult, self.speed, self.uplink_mult) <= 0:
+            raise ValueError(
+                f"class {self.name!r}: hazard_mult, speed, uplink_mult "
+                f"must be positive")
+
+    @property
+    def is_baseline(self) -> bool:
+        return (self.hazard_mult == 1.0 and self.speed == 1.0
+                and self.uplink_mult == 1.0)
+
+
+@dataclass(frozen=True)
+class PeerClassMix:
+    """A weighted fleet composition: which classes, in what proportions.
+
+    Canonicalized on construction — classes are sorted by name and weights
+    normalized to sum to 1 — so two mixes describing the same population in
+    a different order produce *bit-identical* slot assignments and therefore
+    bit-identical simulation results (the ordering-invariance contract
+    tested in tests/test_heterogeneity.py).
+    """
+
+    classes: Tuple[PeerClass, ...]
+    weights: Tuple[float, ...]
+    name: str = ""
+
+    def __post_init__(self) -> None:
+        if not self.classes or len(self.classes) != len(self.weights):
+            raise ValueError("need equal-length, non-empty classes and weights")
+        if min(self.weights) <= 0:
+            raise ValueError("mix weights must be positive")
+        names = [c.name for c in self.classes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate class names in mix: {sorted(names)}")
+        order = sorted(range(len(names)), key=lambda i: names[i])
+        total = math.fsum(self.weights)
+        object.__setattr__(self, "classes",
+                           tuple(self.classes[i] for i in order))
+        object.__setattr__(self, "weights",
+                           tuple(float(self.weights[i]) / total for i in order))
+
+    def __len__(self) -> int:
+        return len(self.classes)
+
+    @property
+    def is_trivial(self) -> bool:
+        """True when every class is the homogeneous baseline (all 1.0) —
+        simulators may then take the exact homogeneous fast path."""
+        return all(c.is_baseline for c in self.classes)
+
+    # ------------------------------------------------------------------ #
+    # Deterministic slot assignment.                                      #
+    # ------------------------------------------------------------------ #
+    def assign(self, n: int) -> Tuple[int, ...]:
+        """Class index per slot for ``n`` slots, prefix-proportional.
+
+        Greedy largest-deficit quota: slot ``i`` goes to the class furthest
+        behind its quota ``weight * (i+1)`` (ties to the lower index, i.e.
+        name order).  Every *prefix* of the assignment is then as close to
+        the mix proportions as integer counts allow — important because the
+        k job peers are slots [0, k) of the watch neighbourhood [0, watch)
+        of the population [0, n_slots), and each prefix must look like the
+        declared mix.  Deterministic, so the batched engine and the
+        per-event heap oracle agree on every slot's class with no shared
+        state (the same no-coordination property as HRW placement).
+        """
+        if n < 0:
+            raise ValueError("n must be non-negative")
+        counts = [0] * len(self.classes)
+        out = []
+        for i in range(n):
+            deficits = [self.weights[c] * (i + 1) - counts[c]
+                        for c in range(len(self.classes))]
+            j = max(range(len(self.classes)), key=lambda c: (deficits[c], -c))
+            counts[j] += 1
+            out.append(j)
+        return tuple(out)
+
+    def hazard_mults(self, n: int) -> Tuple[float, ...]:
+        a = self.assign(n)
+        return tuple(self.classes[j].hazard_mult for j in a)
+
+    def speeds(self, n: int) -> Tuple[float, ...]:
+        a = self.assign(n)
+        return tuple(self.classes[j].speed for j in a)
+
+    def uplink_mults(self, n: int) -> Tuple[float, ...]:
+        a = self.assign(n)
+        return tuple(self.classes[j].uplink_mult for j in a)
+
+    def hazard_sum(self, n: int) -> float:
+        """Sum of hazard multipliers over slots [0, n) — the job- or
+        watch-level aggregate failure rate is ``hazard_sum * mu(t)``.
+        Exactly ``float(n)`` for a trivial mix (sum of ones), which is what
+        keeps the engine's heterogeneous path bit-identical to the
+        homogeneous one."""
+        return math.fsum(self.hazard_mults(n))
+
+    def mean_speed(self, n: int) -> float:
+        """Aggregate compute speed of a job on slots [0, n): the mean class
+        speed (perfect load balancing across members — the bag-of-tasks
+        semantics of volunteer work units, not lockstep BSP)."""
+        if n <= 0:
+            raise ValueError("n must be positive")
+        return math.fsum(self.speeds(n)) / n
+
+
+# --------------------------------------------------------------------------- #
+# Mix registry (BOINC-flavoured presets).                                      #
+# --------------------------------------------------------------------------- #
+
+_MIX_REGISTRY: Dict[str, Callable[..., PeerClassMix]] = {}
+
+
+def register_mix(name: str):
+    """Decorator: register a peer-class-mix factory under ``name``."""
+
+    def deco(factory: Callable[..., PeerClassMix]):
+        if name in _MIX_REGISTRY:
+            raise ValueError(f"mix {name!r} already registered")
+        _MIX_REGISTRY[name] = factory
+        return factory
+
+    return deco
+
+
+def peer_class_mix(name: str, **kwargs) -> PeerClassMix:
+    """Instantiate a registered peer-class mix by name."""
+    try:
+        factory = _MIX_REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown mix {name!r}; available: {sorted(_MIX_REGISTRY)}") from None
+    return factory(**kwargs)
+
+
+def available_mixes() -> Tuple[str, ...]:
+    return tuple(sorted(_MIX_REGISTRY))
+
+
+# The three canonical classes, parameterized from the spreads Anderson &
+# Fedak report for BOINC hosts: home machines behind DSL churn hardest and
+# serve replicas slowest; campus machines are the nominal baseline; lab /
+# server-class machines rarely leave, compute fast, and have fat uplinks.
+HOME_DSL = PeerClass("home_dsl", hazard_mult=1.6, speed=0.7, uplink_mult=0.2)
+CAMPUS = PeerClass("campus", hazard_mult=1.0, speed=1.0, uplink_mult=1.0)
+SERVER_CLASS = PeerClass("server_class", hazard_mult=0.15, speed=2.0,
+                         uplink_mult=4.0)
+
+
+@register_mix("homogeneous")
+def homogeneous_mix() -> PeerClassMix:
+    """The all-baseline single-class mix (bit-identical to no mix at all)."""
+    return PeerClassMix((PeerClass("baseline"),), (1.0,), name="homogeneous")
+
+
+@register_mix("boinc")
+def boinc_mix(home: float = 0.7, campus: float = 0.25,
+              server: float = 0.05) -> PeerClassMix:
+    """A typical public-project fleet: mostly home DSL hosts, a campus
+    contingent, a sliver of lab machines."""
+    return PeerClassMix((HOME_DSL, CAMPUS, SERVER_CLASS),
+                        (home, campus, server), name="boinc")
+
+
+@register_mix("campus_cluster")
+def campus_cluster_mix(campus: float = 0.8,
+                       server: float = 0.2) -> PeerClassMix:
+    """An institutional deployment: campus desktops plus lab servers."""
+    return PeerClassMix((CAMPUS, SERVER_CLASS), (campus, server),
+                        name="campus_cluster")
+
+
+@register_mix("fast_core_volunteer_tail")
+def fast_core_volunteer_tail_mix(core: float = 0.25,
+                                 tail: float = 0.75) -> PeerClassMix:
+    """Rahman et al.'s deployment shape: a small stable fast core carrying
+    a large volatile volunteer tail."""
+    return PeerClassMix((SERVER_CLASS, HOME_DSL), (core, tail),
+                        name="fast_core_volunteer_tail")
+
+
+@register_mix("two_class")
+def two_class_mix(frac_volatile: float = 0.5, hazard_ratio: float = 4.0,
+                  speed_ratio: float = 1.0,
+                  uplink_ratio: float = 1.0) -> PeerClassMix:
+    """Parametric two-class skew for sweeps: a ``frac_volatile`` share of
+    peers churning ``hazard_ratio`` times faster (and ``speed_ratio`` /
+    ``uplink_ratio`` times slower/thinner) than the stable remainder."""
+    if not 0.0 < frac_volatile < 1.0:
+        raise ValueError("frac_volatile must be in (0, 1)")
+    if min(hazard_ratio, speed_ratio, uplink_ratio) <= 0:
+        raise ValueError("ratios must be positive")
+    stable = PeerClass("stable")
+    volatile = PeerClass("volatile", hazard_mult=float(hazard_ratio),
+                         speed=1.0 / float(speed_ratio),
+                         uplink_mult=1.0 / float(uplink_ratio))
+    # Every parameter that changes the fleet shows up in the name — sweep
+    # CSV rows and regression-gate baseline keys are derived from it, so
+    # two distinct configurations must never share a key.
+    name = f"two_class_v{frac_volatile:g}_h{hazard_ratio:g}"
+    if speed_ratio != 1.0:
+        name += f"_s{speed_ratio:g}"
+    if uplink_ratio != 1.0:
+        name += f"_u{uplink_ratio:g}"
+    return PeerClassMix((stable, volatile),
+                        (1.0 - frac_volatile, frac_volatile), name=name)

@@ -45,7 +45,7 @@ import numpy as np
 from repro.p2p.store import StoreSpec
 from repro.p2p.transfer import striped_restore_seconds
 from repro.sim.engine import BatchResult, CellSpec, PolicyConfig, run_cells
-from repro.sim.scenarios import Scenario
+from repro.sim.scenarios import PeerClassMix, Scenario
 
 # Tag of the per-seed child stream feeding hand-off fetch randomness;
 # distinct from the engine's observation stream so the two never alias.
@@ -54,7 +54,13 @@ _HANDOFF_STREAM = 0x686F6666
 
 @dataclass(frozen=True)
 class Stage:
-    """One checkpointed job inside the workflow DAG."""
+    """One checkpointed job inside the workflow DAG.
+
+    ``mix`` declares the stage's peer-class composition (heterogeneous
+    fleets, DESIGN.md Sec 7) — e.g. an evaluate stage pinned to
+    ``server_class`` machines while the train stage rides the volunteer
+    tail.  ``None`` inherits the workflow-level mix.
+    """
 
     name: str
     work: float                      # fault-free compute seconds
@@ -62,7 +68,8 @@ class Stage:
     deps: Tuple[str, ...] = ()       # names of stages whose output we consume
     handoff: float = 0.0             # seconds to fetch EACH dependency's output
     V: Optional[float] = None        # per-stage checkpoint overhead override
-    T_d: Optional[float] = None      # per-stage restore overhead override
+    T_d: Optional[float] = None     # per-stage restore overhead override
+    mix: Optional[PeerClassMix] = None  # per-stage fleet composition override
 
 
 @dataclass(frozen=True)
@@ -155,6 +162,7 @@ def _handoff_times(
     rngs: Sequence[np.random.Generator], scen: Scenario, k: int,
     t_start: np.ndarray, n_deps: int, handoff: float, max_time: float,
     store: Optional[StoreSpec] = None,
+    mix: Optional[PeerClassMix] = None,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Churn-exposed edge fetches: pull each of the ``n_deps`` dependency
     outputs in turn, starting at per-seed times ``t_start``.
@@ -174,6 +182,12 @@ def _handoff_times(
     the partial transfer and forces a retry of that edge (same model as
     engine restores); retry time is accounted as waste.
 
+    With a ``mix`` (heterogeneous fleet, DESIGN.md Sec 7) the k consuming
+    peers fail at the class-weighted rate ``hazard_sum(k) * mu``, and a
+    store fetch samples the surviving holders *per class* — exact
+    Poisson-binomial, striped over the survivors' class uplinks (the
+    engine's mean-field law has the same mean).
+
     Returns (elapsed, completed, waste, server_bytes).  Server fallbacks
     are billed per ATTEMPT: a churn-interrupted server fetch still moved
     elapsed/total of the image through the shared pipe.  A fetch whose
@@ -189,6 +203,18 @@ def _handoff_times(
     if n_deps == 0 or (store is None and handoff <= 0.0):
         return elapsed, ok_flags, waste, srv_bytes
     img = store.transfer.img_bytes if store is not None else 0.0
+    if mix is not None and mix.is_trivial:
+        mix = None  # exact homogeneous path (identical RNG call sequence)
+    khaz = mix.hazard_sum(k) if mix is not None else float(k)
+    holders = None
+    if mix is not None and store is not None and store.R > 0:
+        # Per-class holder counts under the mix's deterministic assignment.
+        counts: dict = {}
+        for ci in mix.assign(store.R):
+            counts[ci] = counts.get(ci, 0) + 1
+        holders = [(cnt, mix.classes[ci].hazard_mult,
+                    mix.classes[ci].uplink_mult)
+                   for ci, cnt in sorted(counts.items())]
     for i, rng in enumerate(rngs):
         t = t0 = float(t_start[i])
         for _dep in range(n_deps):
@@ -197,6 +223,13 @@ def _handoff_times(
                 if store is None:
                     total = handoff
                     from_server = False
+                elif holders is not None:
+                    ups: list = []
+                    for cnt, h_c, u_c in holders:
+                        A_c = 1.0 / (1.0 + mu * h_c * store.t_repair)
+                        ups += [u_c] * int(rng.binomial(cnt, A_c))
+                    total = store.transfer.restore_seconds_from(ups)
+                    from_server = not ups
                 else:
                     A = min(max(float(store.availability_at(mu)), 0.0), 1.0)
                     m = int(rng.binomial(store.R, A)) if store.R > 0 else 0
@@ -204,7 +237,7 @@ def _handoff_times(
                         float(m), store.td_up1, store.td_cap,
                         store.td_server, np))
                     from_server = m == 0
-                t_fail = -math.log1p(-rng.uniform()) / (k * mu)
+                t_fail = -math.log1p(-rng.uniform()) / (khaz * mu)
                 if t_fail >= total:
                     t += total
                     if from_server:
@@ -232,6 +265,7 @@ def simulate_workflow(
     max_wall_factor: float = 50.0,
     backend: str = "auto",
     store: Optional[StoreSpec] = None,
+    mix: Optional[PeerClassMix] = None,
 ) -> WorkflowResult:
     """Run the whole DAG under churn, batched across seeds per stage.
 
@@ -239,6 +273,13 @@ def simulate_workflow(
     stage's restores become endogenous (replica-availability law instead
     of the flat ``T_d``) and hand-off edges fetch the dependency's image
     from its replica set instead of paying ``Stage.handoff`` flat seconds.
+
+    ``mix`` sets the workflow-wide peer-class composition; a stage's own
+    :attr:`Stage.mix` overrides it, so a DAG can model a "fast core +
+    volunteer tail" deployment — e.g. preprocess/evaluate on
+    ``server_class`` machines, train on the volunteer mix.  Stage failure
+    rates, compute speeds, estimator streams, endogenous restores, and
+    hand-off fetches all become class-aware (DESIGN.md Sec 7).
 
     Seed isolation: every seed gets its own hand-off random stream (a
     child of that seed alone), and engine cells already derive per-cell
@@ -262,13 +303,19 @@ def simulate_workflow(
         for d in stage.deps:
             ready = np.maximum(ready, finish[d])
             deps_ok &= completed[d]
+        stage_mix = stage.mix if stage.mix is not None else mix
+        # Fault-free stage runtime in wall seconds (speed == 1.0 exactly
+        # for homogeneous stages) — scales both censor horizons.
+        speed = (stage_mix.mean_speed(stage.k)
+                 if stage_mix is not None else 1.0)
+        stage_wall = stage.work / speed
         edge_cost = (stage.handoff if store is None
                      else store.td_server)  # censor horizon scale per edge
         total_handoff = edge_cost * len(stage.deps)
         handoff, handoff_ok, handoff_waste, edge_srv_bytes = _handoff_times(
             rngs, scen, stage.k, ready, len(stage.deps), stage.handoff,
-            max_time=max_wall_factor * max(total_handoff, stage.work),
-            store=store)
+            max_time=max_wall_factor * max(total_handoff, stage_wall),
+            store=store, mix=stage_mix)
         deps_ok &= handoff_ok
         start = ready + handoff
         v = stage.V if stage.V is not None else V
@@ -276,8 +323,8 @@ def simulate_workflow(
         cells = [
             CellSpec(scenario=scen, policy=policy, seed=1000 * idx + s,
                      k=stage.k, work=stage.work, V=v, T_d=td, n_slots=n_slots,
-                     max_wall_time=max_wall_factor * stage.work, t0=float(start[i]),
-                     store=store)
+                     max_wall_time=max_wall_factor * stage_wall,
+                     t0=float(start[i]), store=store, mix=stage_mix)
             for i, s in enumerate(seeds)
         ]
         sim = run_cells(cells, backend=backend)

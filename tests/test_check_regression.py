@@ -1,0 +1,82 @@
+"""The CI benchmark-regression gate (benchmarks/check_regression.py).
+
+The gate must exit non-zero on a synthetic >10% drift (the satellite
+acceptance criterion), pass within tolerance, and treat a vanished
+benchmark row as a failure rather than a silent pass.
+"""
+import json
+
+import pytest
+
+from benchmarks.check_regression import check, main, parse_bench_csv
+
+CSV = """name,us_per_call,derived
+offload_constant_R0,66000000000,server_GB=8.400;wall_h=18.33;server_io_saved=0.0%
+offload_constant_R3,60000000000,server_GB=0.000;wall_h=16.67;server_io_saved=100.0%
+hetero_constant_boinc,27000000000,adaptive_h=7.50;rel_runtime=122.6%;oracle_gap=0.988
+""".splitlines()
+
+
+def _baseline(value, metric="us_per_call", scenario="offload_constant_R0",
+              tolerance=0.10):
+    return {"scenario": scenario, "metric": metric, "value": value,
+            "tolerance": tolerance}
+
+
+def test_parse_bench_csv_rows_and_derived():
+    rows = parse_bench_csv(CSV)
+    assert rows["offload_constant_R0"]["us_per_call"] == 66000000000.0
+    assert rows["offload_constant_R0"]["server_GB"] == 8.4
+    assert rows["hetero_constant_boinc"]["rel_runtime"] == 122.6  # % stripped
+    assert "name" not in rows  # header skipped
+
+
+def test_within_tolerance_passes():
+    recs = check(parse_bench_csv(CSV), [
+        _baseline(63_000_000_000.0),            # +4.8% drift
+        _baseline(8.0, metric="server_GB"),      # +5% drift
+    ])
+    assert all(r["ok"] for r in recs)
+
+
+def test_drift_beyond_10_percent_fails():
+    recs = check(parse_bench_csv(CSV), [_baseline(59_000_000_000.0)])  # +11.9%
+    assert not recs[0]["ok"]
+    assert "exceeds" in recs[0]["reason"]
+
+
+def test_zero_baseline_uses_absolute_tolerance():
+    ok = check(parse_bench_csv(CSV),
+               [_baseline(0.0, metric="server_GB",
+                          scenario="offload_constant_R3", tolerance=0.5)])
+    assert ok[0]["ok"]
+    bad = check({"offload_constant_R3": {"server_GB": 1.0}},
+                [_baseline(0.0, metric="server_GB",
+                           scenario="offload_constant_R3", tolerance=0.5)])
+    assert not bad[0]["ok"]
+
+
+def test_missing_row_or_metric_is_a_violation():
+    recs = check(parse_bench_csv(CSV), [
+        _baseline(1.0, scenario="deleted_benchmark"),
+        _baseline(1.0, metric="no_such_metric"),
+    ])
+    assert [r["ok"] for r in recs] == [False, False]
+    assert "missing" in recs[0]["reason"] and "missing" in recs[1]["reason"]
+
+
+def test_main_exit_codes_and_trajectory_file(tmp_path):
+    csv = tmp_path / "bench.csv"
+    csv.write_text("\n".join(CSV) + "\n")
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps([_baseline(66_000_000_000.0)]))
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps([_baseline(10_000_000_000.0)]))
+    out = tmp_path / "BENCH_PR4.json"
+
+    assert main(["--csv", str(csv), "--baseline", str(good)]) == 0
+    assert main(["--csv", str(csv), "--baseline", str(bad),
+                 "--out", str(out), "--label", "unit"]) == 1
+    traj = json.loads(out.read_text())
+    assert traj["pr"] == 4 and not traj["ok"] and traj["n_failed"] == 1
+    assert traj["entries"][0]["scenario"] == "offload_constant_R0"

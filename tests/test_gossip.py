@@ -121,6 +121,7 @@ def test_gossip_converges_to_pooled_as_period_shrinks_and_weight_grows():
 
 
 # ------------------------------------------------- heap-oracle parity
+@pytest.mark.parity
 def test_engine_gossip_cell_matches_heap_oracle():
     """CI-bounded mean equivalence: the engine's vectorized per-peer
     estimators + circulant gossip vs per-peer controllers with

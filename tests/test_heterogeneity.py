@@ -1,0 +1,377 @@
+"""Heterogeneous peer fleets (DESIGN.md Sec 7): classes, mixes, parity.
+
+Three layers of checking:
+
+* the :class:`PeerClassMix` contract — canonical ordering, deterministic
+  prefix-proportional slot assignment, and the bit-exactness guarantees:
+  a single all-baseline class reproduces the homogeneous path bit-for-bit
+  on BOTH engine backends, and results are invariant to the order classes
+  are written in;
+* engine-vs-heap parity for skewed mixes — class-tagged lifetimes in the
+  :class:`ChurnNetwork`, slot-routed per-peer observations, class-aware
+  replica holders — at the usual 3-sigma CI mean-equivalence bound
+  (``pytest -m parity`` lane);
+* the heterogeneity sweep + workflow plumbing (per-stage mixes, class-
+  weighted hand-off hazard).
+"""
+import numpy as np
+import pytest
+
+from repro.p2p import P2PCheckpointStore, StoreSpec, TransferModel, rendezvous_placement
+from repro.sim import (
+    AdaptivePolicy,
+    CellSpec,
+    ChurnNetwork,
+    GossipAdaptivePolicy,
+    PeerClass,
+    PeerClassMix,
+    PolicyConfig,
+    Stage,
+    WorkflowSpec,
+    available_mixes,
+    hetero_csv,
+    heterogeneity_sweep,
+    peer_class_mix,
+    run_cells,
+    scenario,
+    simulate_job,
+    simulate_workflow,
+)
+from repro.core.adaptive import AdaptiveCheckpointController
+
+V, TD = 20.0, 50.0
+MTBF = 4000.0
+PRIOR_MU = 1.0 / (8.0 * MTBF)
+
+SKEWED = peer_class_mix("two_class", frac_volatile=0.25, hazard_ratio=6.0,
+                        speed_ratio=2.0)
+
+
+# ------------------------------------------------------------ mix contract
+def test_mix_validation_and_registry():
+    with pytest.raises(ValueError):
+        PeerClass("bad", hazard_mult=0.0)
+    with pytest.raises(ValueError):
+        PeerClassMix((PeerClass("a"),), (0.0,))
+    with pytest.raises(ValueError):
+        PeerClassMix((PeerClass("a"), PeerClass("a")), (0.5, 0.5))
+    with pytest.raises(ValueError):
+        PeerClassMix((PeerClass("a"),), (0.5, 0.5))
+    with pytest.raises(KeyError):
+        peer_class_mix("nope")
+    with pytest.raises(ValueError):
+        peer_class_mix("two_class", frac_volatile=1.5)
+    for name in ("homogeneous", "boinc", "campus_cluster",
+                 "fast_core_volunteer_tail", "two_class"):
+        assert name in available_mixes()
+        m = peer_class_mix(name)
+        assert abs(sum(m.weights) - 1.0) < 1e-12
+
+
+def test_mix_canonicalization_sorts_and_normalizes():
+    a, b = PeerClass("zeta", hazard_mult=2.0), PeerClass("alpha")
+    m = PeerClassMix((a, b), (3.0, 1.0))
+    assert [c.name for c in m.classes] == ["alpha", "zeta"]
+    assert m.weights == (0.25, 0.75)
+    assert not m.is_trivial
+    assert peer_class_mix("homogeneous").is_trivial
+
+
+def test_assignment_is_prefix_proportional_and_order_invariant():
+    """Every prefix of the slot assignment tracks the quotas within 1 slot,
+    and writing the classes in a different order yields the IDENTICAL
+    assignment (canonical sort) — the basis of the ordering-invariance
+    bit-exactness below."""
+    m1 = PeerClassMix((PeerClass("a"), PeerClass("b", hazard_mult=2.0),
+                       PeerClass("c", hazard_mult=3.0)), (0.6, 0.3, 0.1))
+    m2 = PeerClassMix((PeerClass("c", hazard_mult=3.0), PeerClass("a"),
+                       PeerClass("b", hazard_mult=2.0)), (0.1, 0.6, 0.3))
+    for n in (1, 7, 16, 128):
+        a1 = m1.assign(n)
+        assert a1 == m2.assign(n)
+        for prefix in range(1, n + 1):
+            for ci, w in enumerate(m1.weights):
+                cnt = sum(1 for j in a1[:prefix] if j == ci)
+                assert abs(cnt - w * prefix) <= 1.0, (n, prefix, ci)
+    # Trivial-mix aggregates are exactly the homogeneous integers.
+    triv = peer_class_mix("homogeneous")
+    assert triv.hazard_sum(13) == 13.0
+    assert triv.mean_speed(13) == 1.0
+
+
+def _grid_cells(mix, store=None, n=3, backend_policies=None):
+    scen = scenario("diurnal", mtbf=MTBF)
+    pols = backend_policies or [
+        PolicyConfig(kind="adaptive", prior_mu=PRIOR_MU, prior_v=V),
+        PolicyConfig(kind="fixed", fixed_T=900.0),
+        PolicyConfig(kind="oracle"),
+        PolicyConfig(kind="adaptive", prior_mu=PRIOR_MU, prior_v=V,
+                     regime="isolated"),
+    ]
+    return [CellSpec(scenario=scen, policy=pol, seed=s, k=8, work=3 * 3600.0,
+                     V=V, T_d=TD, store=store, mix=mix)
+            for pol in pols for s in range(n)]
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_single_baseline_class_is_bit_exact_vs_homogeneous(backend):
+    """The satellite acceptance property: a PeerClassMix holding one class
+    with all multipliers 1.0 reproduces the homogeneous scenario
+    BIT-EXACTLY in both backends — across policies, estimator regimes, and
+    store cells (hsum_job == float(k), speed == 1.0, x*1.0 == x)."""
+    if backend == "jax":
+        pytest.importorskip("jax")
+    triv = peer_class_mix("homogeneous")
+    store = StoreSpec(R=3, transfer=TransferModel())
+    a = run_cells(_grid_cells(None) + _grid_cells(None, store=store),
+                  backend=backend)
+    b = run_cells(_grid_cells(triv) + _grid_cells(triv, store=store),
+                  backend=backend)
+    for field in ("wall_time", "work_required", "n_checkpoints", "n_failures",
+                  "wasted_work", "checkpoint_time", "restore_time",
+                  "completed", "server_bytes", "n_server_restores",
+                  "n_peer_restores"):
+        np.testing.assert_array_equal(getattr(a, field), getattr(b, field),
+                                      err_msg=field)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_results_invariant_to_class_ordering(backend):
+    """Same population, classes written in the opposite order: bit-equal
+    results (mixes canonicalize to name order before assigning slots)."""
+    if backend == "jax":
+        pytest.importorskip("jax")
+    c1 = PeerClass("stable")
+    c2 = PeerClass("volatile", hazard_mult=4.0, speed=0.5, uplink_mult=0.25)
+    m_fwd = PeerClassMix((c1, c2), (0.75, 0.25))
+    m_rev = PeerClassMix((c2, c1), (0.25, 0.75))
+    store = StoreSpec(R=3, transfer=TransferModel())
+    a = run_cells(_grid_cells(m_fwd, store=store), backend=backend)
+    b = run_cells(_grid_cells(m_rev, store=store), backend=backend)
+    for field in ("wall_time", "n_failures", "server_bytes", "restore_time"):
+        np.testing.assert_array_equal(getattr(a, field), getattr(b, field),
+                                      err_msg=field)
+
+
+def test_mix_cells_do_not_perturb_homogeneous_batchmates():
+    """Composition invariance: adding skewed-mix cells to a batch must not
+    change the realizations of the homogeneous cells sharing it."""
+    scen = scenario("constant", mtbf=MTBF)
+    pol = PolicyConfig(kind="adaptive", prior_mu=PRIOR_MU, prior_v=V)
+    homog = [CellSpec(scenario=scen, policy=pol, seed=s, k=8,
+                      work=3 * 3600.0, V=V, T_d=TD) for s in range(4)]
+    skew = [CellSpec(scenario=scen, policy=pol, seed=s, k=8, work=3 * 3600.0,
+                     V=V, T_d=TD, mix=SKEWED,
+                     store=StoreSpec(R=3, transfer=TransferModel()))
+            for s in range(4)]
+    alone = run_cells(homog, backend="numpy")
+    mixed = run_cells(homog + skew, backend="numpy")
+    np.testing.assert_array_equal(alone.wall_time, mixed.wall_time[:4])
+    np.testing.assert_array_equal(alone.n_failures, mixed.n_failures[:4])
+
+
+# --------------------------------------------------------- speed semantics
+def test_speed_scales_fault_free_schedule_exactly_on_both_paths():
+    """No churn, a single 2x-speed class: 3600 work units at fixed T=600
+    complete in 1800 wall seconds of compute — 2 interior checkpoints —
+    identically on the engine and the heap."""
+    fast = PeerClassMix((PeerClass("fast", speed=2.0),), (1.0,))
+    scen = scenario("constant", mtbf=1e15)
+    res = run_cells([CellSpec(scenario=scen,
+                              policy=PolicyConfig(kind="fixed", fixed_T=600.0),
+                              seed=s, k=8, work=3600.0, V=V, T_d=TD, mix=fast)
+                     for s in range(3)], backend="numpy")
+    assert (res.n_failures == 0).all()
+    assert (res.n_checkpoints == 2).all()
+    np.testing.assert_allclose(res.wall_time, 1800.0 + 2 * V, rtol=1e-12)
+    np.testing.assert_allclose(res.work_required, 1800.0, rtol=1e-12)
+
+    rng = np.random.default_rng(0)
+    net = ChurnNetwork.from_scenario(scen, 64, rng)
+    from repro.sim import FixedIntervalPolicy
+    heap = simulate_job(network=net, policy=FixedIntervalPolicy(600.0), k=8,
+                        work_required=3600.0, V=V, T_d=TD,
+                        speed=fast.mean_speed(8))
+    assert heap.n_checkpoints == 2
+    assert heap.wall_time == pytest.approx(1800.0 + 2 * V)
+    assert heap.work_required == pytest.approx(1800.0)
+
+
+# ------------------------------------------------- heap-oracle parity (CI)
+@pytest.mark.parity
+def test_engine_matches_class_tagged_heap_oracle_pooled():
+    """3-sigma CI mean equivalence for a skewed two-class mix, pooled
+    estimator: engine hsum columns vs a ChurnNetwork with class-tagged
+    per-slot lifetimes."""
+    scen = scenario("constant", mtbf=MTBF)
+    n, k, work = 48, 8, 4 * 3600.0
+    speed = SKEWED.mean_speed(k)
+    pol = PolicyConfig(kind="adaptive", prior_mu=PRIOR_MU, prior_v=V)
+    res = run_cells([CellSpec(scenario=scen, policy=pol, seed=s, k=k,
+                              work=work, V=V, T_d=TD, mix=SKEWED)
+                     for s in range(n)],
+                    backend="numpy", macro_threshold=0.0)
+    assert res.completed.all()
+    walls = []
+    for s in range(n):
+        rng = np.random.default_rng(s)
+        net = ChurnNetwork.from_scenario(scen, 128, rng, mix=SKEWED)
+        hp = AdaptivePolicy(AdaptiveCheckpointController(
+            k=k, prior_mu=PRIOR_MU, prior_v=V, mu_window=32))
+        r = simulate_job(network=net, policy=hp, k=k, work_required=work,
+                         V=V, T_d=TD, speed=speed)
+        walls.append(r.wall_time)
+    walls = np.asarray(walls)
+    se = np.sqrt(res.wall_time.var() / n + walls.var() / n)
+    diff = abs(res.wall_time.mean() - walls.mean())
+    assert diff <= 3.0 * se, (res.wall_time.mean(), walls.mean(), se)
+
+
+@pytest.mark.parity
+def test_engine_matches_class_tagged_heap_oracle_slot_routed():
+    """The acceptance parity bar: class-tagged lifetimes + slot-routed
+    per-peer observations (gossip regime) on a skewed two-class mix, 3
+    sigma.  (The isolated regime inherits the documented exponential-vs-
+    hard-window transient mismatch, which hazard skew amplifies — gossip
+    mixing contracts that transient, DESIGN.md Sec 7.)"""
+    scen = scenario("constant", mtbf=MTBF)
+    n, k, work = 48, 8, 4 * 3600.0
+    speed = SKEWED.mean_speed(k)
+    pol = PolicyConfig(kind="adaptive", prior_mu=PRIOR_MU, prior_v=V,
+                       regime="gossip", gossip_period=600.0, gossip_fanout=2)
+    res = run_cells([CellSpec(scenario=scen, policy=pol, seed=s, k=k,
+                              work=work, V=V, T_d=TD, mix=SKEWED)
+                     for s in range(n)],
+                    backend="numpy", macro_threshold=0.0)
+    assert res.completed.all()
+    walls = []
+    for s in range(n):
+        rng = np.random.default_rng(s)
+        net = ChurnNetwork.from_scenario(scen, 128, rng, mix=SKEWED)
+        hp = GossipAdaptivePolicy.make(k, regime="gossip", period=600.0,
+                                       fanout=2, weight=0.5,
+                                       prior_mu=PRIOR_MU, prior_v=V,
+                                       mu_window=32)
+        r = simulate_job(network=net, policy=hp, k=k, work_required=work,
+                         V=V, T_d=TD, speed=speed)
+        walls.append(r.wall_time)
+    walls = np.asarray(walls)
+    se = np.sqrt(res.wall_time.var() / n + walls.var() / n)
+    diff = abs(res.wall_time.mean() - walls.mean())
+    assert diff <= 3.0 * se, (res.wall_time.mean(), walls.mean(), se)
+
+
+@pytest.mark.parity
+def test_engine_store_mix_tracks_poisson_binomial_heap_store():
+    """Class-aware replica holders: the engine's mean-field law (Binomial
+    with the mean class availability, survival-weighted mean uplink) vs
+    the heap's exact per-holder Poisson-binomial process.  The mean
+    survivor count matches exactly; restore-time nonlinearity is second-
+    order, so the bound here is a (documented) 10% band on mean wall."""
+    scen = scenario("constant", mtbf=MTBF)
+    mix = peer_class_mix("fast_core_volunteer_tail")
+    tm = TransferModel()
+    spec = StoreSpec(R=4, t_repair=900.0, transfer=tm)
+    n, k, work = 48, 8, 4 * 3600.0
+    speed = mix.mean_speed(k)
+    pol = PolicyConfig(kind="fixed", fixed_T=900.0)
+    res = run_cells([CellSpec(scenario=scen, policy=pol, seed=s, k=k,
+                              work=work, V=V, T_d=spec.td_server, store=spec,
+                              mix=mix) for s in range(n)],
+                    backend="numpy", macro_threshold=0.0)
+    assert res.completed.all()
+    walls = []
+    for s in range(n):
+        rng = np.random.default_rng(s)
+        net = ChurnNetwork.from_scenario(scen, 128, rng, mix=mix)
+        st = P2PCheckpointStore(spec, scen.mtbf,
+                                np.random.default_rng(10_000 + s), mix=mix)
+        from repro.sim import FixedIntervalPolicy
+        r = simulate_job(network=net, policy=FixedIntervalPolicy(900.0), k=k,
+                         work_required=work, V=V, T_d=0.0, store=st,
+                         speed=speed)
+        walls.append(r.wall_time)
+    walls = np.asarray(walls)
+    assert res.wall_time.mean() == pytest.approx(walls.mean(), rel=0.10)
+
+
+# ------------------------------------------------------ overlay weighting
+def test_weighted_rendezvous_placement_prefers_heavy_nodes():
+    nodes = [f"peer{i}" for i in range(40)]
+    # Unweighted path unchanged.
+    base = rendezvous_placement("img:42", nodes, 3)
+    assert base == rendezvous_placement("img:42", nodes, 3)
+    assert len(base) == 3
+    with pytest.raises(ValueError):
+        rendezvous_placement("x", nodes, 2, weights=[1.0])
+    with pytest.raises(ValueError):
+        rendezvous_placement("x", nodes, 2, weights=[0.0] * len(nodes))
+    # Heavy nodes (10x weight on the first 10) win far more keys.
+    weights = [10.0] * 10 + [1.0] * 30
+    hits = sum(1 for i in range(200)
+               for nd in rendezvous_placement(f"img:{i}", nodes, 3,
+                                              weights=weights)
+               if int(nd[4:]) < 10)
+    # E[heavy share] = 10*10/(10*10+30) ~ 77% of 600 picks; demand > 55%.
+    assert hits > 330, hits
+
+
+def test_restore_seconds_from_heterogeneous_uplinks():
+    tm = TransferModel(img_bytes=100e6, peer_uplink=5e6, peer_downlink=50e6)
+    assert tm.restore_seconds_from([]) == tm.server_seconds()
+    assert tm.restore_seconds_from([1.0]) == tm.restore_seconds(1)
+    assert tm.restore_seconds_from([1.0, 1.0]) == tm.restore_seconds(2)
+    # A 4x-uplink holder equals four baseline holders.
+    assert tm.restore_seconds_from([4.0]) == tm.restore_seconds(4)
+    # Downlink cap still binds.
+    assert tm.restore_seconds_from([100.0]) == tm.img_bytes / tm.peer_downlink
+
+
+# --------------------------------------------------- sweep & workflow layer
+def test_heterogeneity_sweep_smoke_and_csv():
+    cells = heterogeneity_sweep(
+        scenarios=[scenario("constant", mtbf=MTBF)],
+        mixes=[peer_class_mix("homogeneous"), SKEWED],
+        seeds=range(2), work=2 * 3600.0, mtbf0=MTBF, backend="numpy")
+    assert [c.mix for c in cells] == ["homogeneous", SKEWED.name]
+    assert all(np.isfinite(c.adaptive_wall) and c.adaptive_wall > 0
+               for c in cells)
+    # The skewed fleet runs slower in absolute terms (more churn, slower
+    # compute) — the sweep's whole point.
+    assert cells[1].adaptive_wall > cells[0].adaptive_wall
+    rows = hetero_csv(cells)
+    assert rows[0].startswith("scenario,mix,")
+    assert len(rows) == 1 + 2
+    assert all(r.count(",") == rows[0].count(",") for r in rows)
+
+
+def test_workflow_per_stage_mixes_and_handoff_hazard():
+    """A stage pinned to the stable fast core fails far less than the same
+    stage on the volatile tail, inside one workflow; trivial-mix stages
+    reproduce the no-mix workflow bit-exactly."""
+    scen = scenario("constant", mtbf=MTBF)
+    volatile = peer_class_mix("two_class", frac_volatile=0.9, hazard_ratio=6.0)
+    core = PeerClassMix((PeerClass("server_class", hazard_mult=0.15,
+                                   speed=2.0, uplink_mult=4.0),), (1.0,))
+    spec = WorkflowSpec(stages=(
+        Stage("tail", work=2 * 3600.0, k=8, mix=volatile),
+        Stage("core", work=2 * 3600.0, k=8, deps=("tail",), handoff=120.0,
+              mix=core),
+    ))
+    res = simulate_workflow(spec, scen, seeds=range(4), V=V, T_d=TD,
+                            backend="numpy")
+    assert res.all_completed
+    assert (res.stages["tail"].sim.n_failures.mean()
+            > 4 * res.stages["core"].sim.n_failures.mean())
+    # core stage at speed 2: fault-free wall is half its work.
+    assert (res.stages["core"].sim.work_required == 3600.0).all()
+
+    plain = WorkflowSpec(stages=(
+        Stage("a", work=1800.0, k=8),
+        Stage("b", work=1800.0, k=8, deps=("a",), handoff=120.0),
+    ))
+    r0 = simulate_workflow(plain, scen, seeds=range(3), V=V, T_d=TD,
+                           backend="numpy")
+    r1 = simulate_workflow(plain, scen, seeds=range(3), V=V, T_d=TD,
+                           backend="numpy", mix=peer_class_mix("homogeneous"))
+    np.testing.assert_array_equal(r0.makespan, r1.makespan)

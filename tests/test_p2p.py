@@ -137,6 +137,7 @@ def _store_cells(scen, spec, pol, n, **kw):
             for s in range(n)]
 
 
+@pytest.mark.parity
 def test_engine_endogenous_td_matches_per_replica_heap_oracle():
     """Acceptance criterion: the engine's closed-form availability law and
     the heap's per-replica events give the same mean completion time

@@ -147,6 +147,7 @@ def test_engine_censors_livelocked_cells():
 
 
 # ------------------------------------------------- distributional parity
+@pytest.mark.parity
 def test_parity_fixed_policy_mean_wall():
     """Same scenario, fixed policy: engine and heap means agree within band."""
     scen = scenario("constant", mtbf=7200.0)
@@ -158,6 +159,7 @@ def test_parity_fixed_policy_mean_wall():
     assert res.wall_time.mean() == pytest.approx(heap_mean, rel=0.06)
 
 
+@pytest.mark.parity
 def test_parity_adaptive_policy_mean_wall():
     """Adaptive estimators differ in noise shape, so the band is looser."""
     scen = scenario("constant", mtbf=7200.0)
