@@ -41,7 +41,7 @@ from repro.configs import (
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.configs.specs import cache_struct, params_struct
 from repro.distributed.sharding import resolve_rules, sharding_context, tree_shardings
-from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.hlo_analysis import analyze_hlo, xla_cost_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import (
     cache_logical_specs,
@@ -178,7 +178,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         "peak_estimate_bytes": peak,
         "tpu_adjusted_peak_bytes": max(peak - f32_copy, 0),
     }
-    ca = compiled.cost_analysis() or {}
+    ca = xla_cost_analysis(compiled)
     record["xla_cost_analysis"] = {
         "flops": float(ca.get("flops", 0.0)),
         "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
@@ -190,7 +190,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     record["hlo"] = hlo.to_dict()
 
     # Roofline terms (per step, seconds) — per-device quantities over
-    # per-chip peaks (DESIGN.md Sec 8).
+    # per-chip peaks.
     flops = hlo.dot_flops
     byts = hlo.bytes_accessed
     coll = hlo.total_collective_bytes

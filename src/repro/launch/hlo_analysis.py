@@ -47,6 +47,20 @@ COLLECTIVE_OPS = (
 )
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized to a flat dict.
+
+    Older JAX returns a single dict of cost properties; newer JAX returns
+    a list with one per-device dict (and the module is the per-device SPMD
+    program, so the first entry IS the per-device analysis every caller
+    wants).  Returns ``{}`` when the analysis is unavailable.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
 def _shapes_in(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
     out = []
     for dt, dims in _SHAPE_RE.findall(text):

@@ -18,6 +18,8 @@ from repro.p2p.overlay import (
     ReplicaSetProcess,
     availability,
     rendezvous_placement,
+    shock_availability,
+    shock_survivor_pmf,
     stationary_loss_rate,
 )
 from repro.p2p.store import R_MAX, P2PCheckpointStore, StoreSpec
@@ -31,5 +33,7 @@ __all__ = [
     "TransferModel",
     "availability",
     "rendezvous_placement",
+    "shock_availability",
+    "shock_survivor_pmf",
     "stationary_loss_rate",
 ]

@@ -33,11 +33,16 @@ from __future__ import annotations
 
 import hashlib
 import math
-from typing import Callable, List, Optional, Sequence
+from typing import TYPE_CHECKING, Callable, List, Optional, Sequence
 
 import numpy as np
 
-MtbfFn = Callable[[float], float]  # wall time (s) -> per-peer MTBF (s)
+if TYPE_CHECKING:  # pragma: no cover - annotation only (avoids an import
+    # cycle: repro.sim.engine imports repro.p2p.store -> this module at
+    # package-init time, before repro.sim.scenarios finishes loading)
+    from repro.sim.scenarios import ShockClock, ShockSpec
+
+MtbfFn = Callable[[float], float]  # wall time (s) -> current MTBF (s)
 
 
 def availability(mu: float, t_repair: float) -> float:
@@ -45,6 +50,69 @@ def availability(mu: float, t_repair: float) -> float:
     if mu < 0 or t_repair < 0:
         raise ValueError("mu and t_repair must be non-negative")
     return 1.0 / (1.0 + mu * t_repair)
+
+
+def shock_availability(mu: float, t_repair: float, shock_rate: float = 0.0,
+                       kill_frac: float = 0.0) -> float:
+    """Stationary holder availability under correlated shocks.
+
+    Shock epochs (Poisson, ``shock_rate``) kill an up holder with
+    probability ``kill_frac``; thinning makes the holder's shock-death
+    process Poisson with rate ``shock_rate * kill_frac``, and the
+    superposition with the background Exp(mu) hazard is still memoryless —
+    so alternating-renewal applies *exactly* with the effective hazard:
+
+        A = 1 / (1 + (mu + shock_rate*kill_frac) * t_repair)
+
+    The MARGINAL is unchanged from an i.i.d. fleet with that rate; what
+    shocks change is the joint law — see :func:`shock_survivor_pmf`.
+    """
+    if shock_rate < 0 or not 0.0 <= kill_frac <= 1.0:
+        raise ValueError("shock_rate must be >= 0 and kill_frac in [0, 1]")
+    return availability(mu + shock_rate * kill_frac, t_repair)
+
+
+def shock_survivor_pmf(R: int, mu: float, t_repair: float, shock_rate: float,
+                       kill_frac: float, job_fail_rate: float,
+                       job_kill_prob: float) -> np.ndarray:
+    """Exact survivor-count law seen by a restore attempt under shocks.
+
+    Without shocks every restore finds m ~ Binomial(R, A) survivors (each
+    holder's stationary Bernoulli is independent of the job's failure
+    instant).  With shocks the restore *instant is not exchangeable*: a
+    job failure was caused by a shock with probability
+
+        q = shock_rate * job_kill_prob
+            / (job_fail_rate + shock_rate * job_kill_prob)
+
+    (the exponential race between the background job-failure process at
+    ``job_fail_rate`` and the thinned shock-kill process), and conditional
+    on a shock-caused failure each in-scope holder was additionally killed
+    by THAT shock with probability ``kill_frac`` — so survivors drop to
+    Binomial(R, A*(1-kill_frac)).  The attempt-time law is the mixture
+
+        P(m) = q * Binom(R, A*(1-f))(m) + (1-q) * Binom(R, A)(m)
+
+    with A = :func:`shock_availability`.  This is the closed form the
+    batched engine samples branchlessly; independence (q = 0) strictly
+    stochastically dominates it, which is exactly how an i.i.d. law
+    undercounts replica loss under correlated churn.
+    """
+    if R < 0:
+        raise ValueError("replication factor must be >= 0")
+    if job_fail_rate < 0 or not 0.0 <= job_kill_prob <= 1.0:
+        raise ValueError("job_fail_rate >= 0 and job_kill_prob in [0, 1]")
+    A = shock_availability(mu, t_repair, shock_rate, kill_frac)
+    s_kill = shock_rate * job_kill_prob
+    denom = job_fail_rate + s_kill
+    q = s_kill / denom if denom > 0 else 0.0
+    A_post = A * (1.0 - kill_frac)
+
+    def binom(p: float) -> np.ndarray:
+        return np.array([math.comb(R, m) * p ** m * (1.0 - p) ** (R - m)
+                         for m in range(R + 1)])
+
+    return q * binom(A_post) + (1.0 - q) * binom(A)
 
 
 def stationary_loss_rate(mu: float, R: int, t_repair: float) -> float:
@@ -80,12 +148,27 @@ class ReplicaSetProcess:
 
     def __init__(self, R: int, mtbf_fn: MtbfFn, t_repair: float,
                  rng: np.random.Generator, t0: float = 0.0,
-                 slot_mults: Optional[Sequence[float]] = None):
+                 slot_mults: Optional[Sequence[float]] = None,
+                 shock: Optional["ShockSpec"] = None,
+                 shock_clock: Optional["ShockClock"] = None,
+                 shock_rng: Optional[np.random.Generator] = None,
+                 scope_mask: Optional[Sequence[bool]] = None):
         """``slot_mults`` gives holder slot ``i`` a hazard multiplier
         (heterogeneous fleets, DESIGN.md Sec 7): its lifetimes are
         Exp(mtbf/mult) and its stationary availability
         1/(1 + mult*mu*t_repair).  ``None`` keeps the homogeneous process,
-        with an unchanged RNG call sequence."""
+        with an unchanged RNG call sequence.
+
+        ``shock`` adds correlated mass-kill epochs (DESIGN.md Sec 8): at
+        each epoch of ``shock_clock`` every UP in-scope holder dies
+        independently with probability ``kill_frac`` and enters repair.
+        Pass the SAME clock as the job's :class:`ChurnNetwork` so holder
+        losses coincide with the job failures that trigger restores —
+        the correlation the engine's mixture law models.  ``shock_rng``
+        (kill Bernoullis) and the clock are derived from ``rng`` when
+        omitted; ``scope_mask`` restricts kills to a holder subset.  With
+        ``shock=None`` the RNG call sequence is unchanged bit-for-bit.
+        """
         if R < 0:
             raise ValueError("replication factor must be >= 0")
         if t_repair <= 0:
@@ -106,12 +189,43 @@ class ReplicaSetProcess:
         self.t0 = float(t0)
         self.t = float(t0)
         self.n_losses = 0  # transitions into the all-dead state
+        self.shock = shock
+        self._shock_i = 0
+        if shock is not None:
+            if scope_mask is None:
+                scope_mask = (True,) * R
+            scope_mask = tuple(bool(b) for b in scope_mask)
+            if len(scope_mask) != R:
+                raise ValueError("need one scope flag per holder slot")
+            self._scope = scope_mask
+            # Spawned (not drawn) from the main rng, so attaching a shock
+            # leaves the holder lifetime/repair draws bit-identical.
+            kids = rng.spawn(2)
+            if shock_clock is None:
+                from repro.sim.scenarios import ShockClock  # runtime-safe
+                shock_clock = ShockClock(shock.rate, kids[0])
+            self._clock = shock_clock
+            self._shock_rng = shock_rng if shock_rng is not None else kids[1]
+            # Epochs before t0 predate the (stationary) start of this
+            # process: skip them so a late-created replica set does not
+            # replay history.
+            while self._clock.epoch(self._shock_i) <= t0:
+                self._shock_i += 1
         mtbf0 = mtbf_fn(t0)
         self._up = np.zeros(R, dtype=bool)
         self._next = np.full(R, np.inf)
         for i in range(R):
             mult = slot_mults[i] if slot_mults is not None else 1.0
-            A = availability(mult / mtbf0, t_repair)
+            # Stationary init: the shock adds a thinned-Poisson kill rate
+            # (rate * kill_frac for in-scope slots) to the holder's hazard;
+            # the superposed up-phase is still exponential, so the
+            # alternating-renewal marginal is exact (shock_availability).
+            mu_i = mult / mtbf0
+            if shock is not None and self._scope[i]:
+                A = shock_availability(mu_i, t_repair, shock.rate,
+                                       shock.kill_frac)
+            else:
+                A = availability(mu_i, t_repair)
             self._up[i] = rng.random() < A
             hold = mtbf0 / mult if self._up[i] else t_repair
             self._next[i] = t0 + rng.exponential(hold)
@@ -120,13 +234,33 @@ class ReplicaSetProcess:
         m = self.mtbf_fn(t)
         return m / self.slot_mults[i] if self.slot_mults is not None else m
 
+    def _next_shock_time(self) -> float:
+        return (self._clock.epoch(self._shock_i)
+                if self.shock is not None else math.inf)
+
     def advance(self, t: float) -> None:
-        """Process holder deaths/repairs up to wall time ``t``, in order."""
+        """Process holder deaths/repairs/shock epochs up to ``t``, in order."""
         while self.R:
             i = int(np.argmin(self._next))
             te = float(self._next[i])
-            if te > t:
+            ts = self._next_shock_time()
+            if min(te, ts) > t:
                 break
+            if ts <= te:
+                # Mass-kill epoch: every UP in-scope holder dies w.p.
+                # kill_frac, simultaneously; its pending natural death is
+                # superseded by the repair completion.
+                self._shock_i += 1
+                f = self.shock.kill_frac
+                was_up = bool(self._up.any())
+                for j in range(self.R):
+                    if self._up[j] and self._scope[j] \
+                            and self._shock_rng.random() < f:
+                        self._up[j] = False
+                        self._next[j] = ts + self.rng.exponential(self.t_repair)
+                if was_up and not self._up.any():
+                    self.n_losses += 1
+                continue
             if self._up[i]:
                 self._up[i] = False
                 self._next[i] = te + self.rng.exponential(self.t_repair)

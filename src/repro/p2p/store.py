@@ -27,7 +27,7 @@ from repro.p2p.transfer import TransferModel
 
 if TYPE_CHECKING:  # pragma: no cover - annotation only (avoids an import
     # cycle: repro.sim.engine imports this module at package-init time)
-    from repro.sim.scenarios import PeerClassMix
+    from repro.sim.scenarios import PeerClassMix, ShockClock, ShockSpec
 
 # The batched engine unrolls the Binomial(R, A) inverse-CDF over a fixed
 # number of terms; R beyond this adds no meaningful availability anyway
@@ -86,21 +86,34 @@ class P2PCheckpointStore:
 
     def __init__(self, spec: StoreSpec, mtbf_fn: Callable[[float], float],
                  rng: np.random.Generator, t0: float = 0.0,
-                 mix: Optional["PeerClassMix"] = None):
+                 mix: Optional["PeerClassMix"] = None,
+                 shock: Optional["ShockSpec"] = None,
+                 shock_clock: Optional["ShockClock"] = None):
         """``mix`` (a :class:`repro.sim.scenarios.PeerClassMix`) makes the
         holder fleet heterogeneous: holder slot classes come from the mix's
         deterministic assignment over the R slots, each class scales the
         holder hazard, and restores stripe over the *surviving* holders'
         class uplinks (DESIGN.md Sec 7).  This is the exact Poisson-binomial
-        per-event oracle for the batched engine's mean-field law."""
+        per-event oracle for the batched engine's mean-field law.
+
+        ``shock`` subjects the holders to correlated mass-kill epochs
+        (DESIGN.md Sec 8); pass the job network's ``shock_clock`` so
+        replica losses coincide with the job failures that trigger
+        restores — the correlation the engine's shock-mixture survivor law
+        models in closed form.  Class scopes resolve through ``mix``.
+        """
         self.spec = spec
         holder_mults = holder_ups = None
         if mix is not None and not mix.is_trivial and spec.R > 0:
             holder_mults = mix.hazard_mults(spec.R)
             holder_ups = mix.uplink_mults(spec.R)
         self._holder_ups = holder_ups
+        scope_mask = (shock.scope_mask(mix, spec.R)
+                      if shock is not None else None)
         self.holders = ReplicaSetProcess(spec.R, mtbf_fn, spec.t_repair,
-                                         rng, t0=t0, slot_mults=holder_mults)
+                                         rng, t0=t0, slot_mults=holder_mults,
+                                         shock=shock, shock_clock=shock_clock,
+                                         scope_mask=scope_mask)
         self.server_bytes = 0.0
         self.n_server_restores = 0
         self.n_peer_restores = 0

@@ -69,9 +69,15 @@ class TransferModel:
         downlink, and an empty set falls back to the server.  With all
         multipliers 1.0 this is exactly :meth:`restore_seconds` of the
         count.
+
+        The zero-survivor branch must stay total (DESIGN.md Sec 8): a
+        correlated shock routinely empties the whole surviving set, and the
+        restore then *must* come back as the finite server-fallback time —
+        never a divide-by-zero or inf that would wedge the retry loop.  The
+        ``not total > 0`` form also routes a NaN aggregate to the fallback.
         """
         total = math.fsum(uplink_mults) * self.peer_uplink
-        if total <= 0.0:
+        if not total > 0.0:
             return self.server_seconds()
         return self.img_bytes / min(total, self.peer_downlink)
 

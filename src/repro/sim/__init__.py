@@ -24,8 +24,10 @@ from repro.sim.experiments import (
     GridEntry,
     HeterogeneityCell,
     OffloadCell,
+    ShockCell,
     compare,
     compare_grid,
+    correlated_churn_sweep,
     fig4_dynamic,
     fig4_static,
     fig5_td_sweep,
@@ -37,6 +39,7 @@ from repro.sim.experiments import (
     offload_csv,
     scenario_sweep,
     server_offload_sweep,
+    shock_csv,
     summarize,
 )
 from repro.sim.job import (
@@ -49,14 +52,18 @@ from repro.sim.job import (
 )
 from repro.sim.network import ChurnNetwork, DeathEvent, constant_mtbf, doubling_mtbf
 from repro.sim.scenarios import (
+    SHOCK_STREAM,
     PeerClass,
     PeerClassMix,
     Scenario,
+    ShockClock,
+    ShockSpec,
     available_mixes,
     available_scenarios,
     peer_class_mix,
     register_mix,
     register_scenario,
+    resolve_shock,
     scenario,
 )
 from repro.sim.workflow import (
@@ -84,7 +91,11 @@ __all__ = [
     "PeerClass",
     "PeerClassMix",
     "PolicyConfig",
+    "SHOCK_STREAM",
     "Scenario",
+    "ShockCell",
+    "ShockClock",
+    "ShockSpec",
     "SimResult",
     "Stage",
     "StageResult",
@@ -95,6 +106,7 @@ __all__ = [
     "compare",
     "compare_grid",
     "constant_mtbf",
+    "correlated_churn_sweep",
     "doubling_mtbf",
     "fig4_dynamic",
     "fig4_static",
@@ -108,10 +120,12 @@ __all__ = [
     "peer_class_mix",
     "register_mix",
     "register_scenario",
+    "resolve_shock",
     "run_cells",
     "scenario",
     "scenario_sweep",
     "server_offload_sweep",
+    "shock_csv",
     "simulate_job",
     "simulate_workflow",
     "summarize",

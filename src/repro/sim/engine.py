@@ -109,6 +109,42 @@ reduce bit-exactly to the homogeneous path when every multiplier is 1.0:
 ``hsum_job == float(k)``, ``speed == 1.0``, and multiplying by 1.0 is
 exact in IEEE arithmetic.
 
+**Correlated churn shocks** (DESIGN.md Sec 8): a cell whose scenario, mix,
+or :class:`CellSpec.shock` declares a :class:`ShockSpec` adds Poisson
+shock epochs at ``rate``, each killing every in-scope peer independently
+with probability ``kill_frac`` at the same instant.  The engine carries
+this branchlessly and in closed form:
+
+* **job failures** — an epoch kills the job with probability
+  ``pkill = 1 - (1-f)^n_scope_job``; Bernoulli-thinning a Poisson process
+  is Poisson, so the job-level failure process stays a single exponential
+  race with rate ``hsum_job*mu + rate*pkill`` — the same draw ``u`` the
+  background path consumes, no extra noise stream and therefore trivially
+  batch-composition-invariant.
+* **estimator stream** — shock deaths among the watch neighbourhood add
+  ``rate * kill_frac * n_scope_watch`` to the pooled expectation feed and
+  to each peer's sampled per-share intensity (epoch-level burst clustering
+  within one step is folded into the per-step Poisson draw; exactly
+  mean-preserving, and the heap oracle delivers true simultaneous bursts
+  — the parity suite bounds the difference).
+* **store cells** — the i.i.d. ``Binomial(R, A)`` survivor law is replaced
+  by the shock-mixture law of ``repro.p2p.overlay.shock_survivor_pmf``: a
+  restore was triggered by a shock with probability
+  ``q = rate*pkill / (hsum_job*mu + rate*pkill)``, and then finds each
+  in-scope holder additionally killed by that same shock — survivors ~
+  ``Binomial(R, A*(1-f))`` with ``A`` itself computed at the
+  shock-augmented hazard ``mu + rate*f``.  Independence undercounts
+  replica loss exactly at restore instants; the mixture is sampled by one
+  branchless two-recurrence inverse-CDF unroll from the same ``u2``.
+* **macro-stepping is disabled** for shocked cells (like store cells): the
+  burst closed form assumes one homogeneous failure process, and a burst
+  must never straddle a shock epoch whose estimator burst or replica
+  depletion the step needs to see.
+
+Every shock column enters as an additive term that is exactly 0.0 when
+``rate == 0``, so ``shock_rate=0`` (and no shock at all) is bit-identical
+to the pre-shock path on both backends (tests/test_shocks.py).
+
 **Endogenous restore times** (DESIGN.md Sec 6): a cell carrying a
 :class:`repro.p2p.StoreSpec` derives every restore's duration from the
 P2P checkpoint store instead of the exogenous ``T_d`` constant.  Each of
@@ -145,7 +181,9 @@ from repro.sim.scenarios import (
     TRACE,
     PeerClassMix,
     Scenario,
+    ShockSpec,
     hazard_kernel,
+    resolve_shock,
 )
 
 try:  # pragma: no cover - exercised implicitly by backend selection
@@ -229,7 +267,13 @@ class PolicyConfig:
 
 @dataclass(frozen=True)
 class CellSpec:
-    """One simulation cell: a job under a scenario, policy, and seed."""
+    """One simulation cell: a job under a scenario, policy, and seed.
+
+    ``shock`` overrides the correlated-churn shock resolved from the
+    scenario/mix (:func:`repro.sim.scenarios.resolve_shock`) — workflow
+    stages use it to subject one stage to a shock wave the rest of the
+    DAG does not see.
+    """
 
     scenario: Scenario
     policy: PolicyConfig
@@ -244,6 +288,13 @@ class CellSpec:
     t0: float = 0.0  # wall-clock offset (workflow stages start mid-scenario)
     store: Optional[StoreSpec] = None  # endogenous T_d from the P2P store
     mix: Optional[PeerClassMix] = None  # heterogeneous fleet composition
+    shock: Optional[ShockSpec] = None  # correlated-churn override
+
+
+def _cell_shock(c: CellSpec) -> Optional[ShockSpec]:
+    """The effective shock of a cell: the explicit override, else whichever
+    of scenario/mix declares one (ambiguity raises in resolve_shock)."""
+    return c.shock if c.shock is not None else resolve_shock(c.scenario, c.mix)
 
 
 @dataclass(frozen=True)
@@ -326,6 +377,13 @@ class _Params(NamedTuple):
     cls_n: np.ndarray        # [B, _CLS_CAP] holder count per class
     cls_h: np.ndarray        # [B, _CLS_CAP] hazard multiplier per class
     cls_td1: np.ndarray      # [B, _CLS_CAP] one-source restore per class (s)
+    shock_rate: np.ndarray   # correlated shock epochs per second
+    shock_pkill: np.ndarray  # P(an epoch kills >= 1 job peer)
+    shock_dwatch: np.ndarray  # E[watched deaths per epoch] = f * n_scope_watch
+    shock_dpeer: np.ndarray  # [B, _PEER_CAP] E[deaths/epoch] per peer's share
+    shock_f: np.ndarray      # holder kill fraction (homogeneous store cells)
+    cls_f: np.ndarray        # [B, _CLS_CAP] holder kill fraction per class
+    shocked: np.ndarray      # bool: rate > 0 (disables macro-stepping)
 
 
 class _State(NamedTuple):
@@ -410,6 +468,63 @@ def _pack(cells: Sequence[CellSpec]) -> _Params:
             for ci, pc in enumerate(mix.classes):
                 cls_h[i, ci] = pc.hazard_mult
                 cls_td1[i, ci] = c.store.td_up1 / pc.uplink_mult
+    # Correlated-churn shock columns (DESIGN.md Sec 8).  All-zero for
+    # unshocked cells, and every consumer folds them in as additive terms
+    # that are exactly 0.0 then — the basis of the shock_rate=0
+    # bit-identity contract.
+    shock_rate = np.zeros(B)
+    shock_pkill = np.zeros(B)
+    shock_dwatch = np.zeros(B)
+    shock_dpeer = np.zeros((B, _PEER_CAP))
+    shock_f = np.zeros(B)
+    cls_f = np.zeros((B, _CLS_CAP))
+    shocked = np.zeros(B, dtype=bool)
+    for i, c in enumerate(cells):
+        sk = _cell_shock(c)
+        if sk is None:
+            continue
+        # Validates class scopes against the cell's mix; the mask over the
+        # watch prefix also covers the k job slots (prefix assignment).
+        mask = sk.scope_mask(c.mix, watch[i])
+        shock_rate[i] = sk.rate
+        shocked[i] = sk.rate > 0.0
+        shock_pkill[i] = sk.job_kill_prob(sum(mask[:c.k]))
+        shock_dwatch[i] = sk.kill_frac * sum(mask)
+        if c.policy.regime == "pooled":
+            shock_dpeer[i, :] = shock_dwatch[i]  # only peer slot 0 is live
+        else:
+            for j in range(min(c.k, _PEER_CAP)):
+                # Exact in-scope count of peer j's slot share j::k.
+                shock_dpeer[i, j] = sk.kill_frac * sum(mask[j::c.k])
+        if c.store is not None and c.store.R > 0:
+            # A class scope on a TRIVIAL multi-class mix (identical
+            # baseline classes used as partition groups) still shocks only
+            # part of the holder fleet — the homogeneous shock_f column
+            # cannot express that, so such cells take the per-class path
+            # too (cls_h/cls_td1 are all-1.0 there, so the only difference
+            # from homogeneous is the scoped kill fraction — matching the
+            # scope-masked per-event oracle).
+            partial = (sk.scope != "all" and c.mix is not None
+                       and len(c.mix) > 1)
+            if partial or (c.mix is not None and not c.mix.is_trivial):
+                if len(c.mix) > _CLS_CAP:
+                    raise ValueError(
+                        f"store cells support mixes of <= {_CLS_CAP} "
+                        f"classes, got {len(c.mix)}")
+                if not store_mix[i]:  # trivial mix skipped the columns
+                    store_mix[i] = True
+                    for cls_idx in c.mix.assign(c.store.R):
+                        cls_n[i, cls_idx] += 1.0
+                    for ci, pc in enumerate(c.mix.classes):
+                        cls_h[i, ci] = pc.hazard_mult
+                        cls_td1[i, ci] = c.store.td_up1 / pc.uplink_mult
+                for ci, pc in enumerate(c.mix.classes):
+                    if sk.scope in ("all", pc.name):
+                        cls_f[i, ci] = sk.kill_frac
+            else:
+                # Homogeneous holders (no mix, or a scope covering the
+                # whole single-class fleet): one fleet-wide kill fraction.
+                shock_f[i] = sk.kill_frac
     L = max(2, max(len(c.scenario.trace_t) for c in cells))
     trace_t = np.zeros((B, L))
     trace_mtbf = np.ones((B, L))
@@ -467,6 +582,13 @@ def _pack(cells: Sequence[CellSpec]) -> _Params:
         cls_n=cls_n,
         cls_h=cls_h,
         cls_td1=cls_td1,
+        shock_rate=shock_rate,
+        shock_pkill=shock_pkill,
+        shock_dwatch=shock_dwatch,
+        shock_dpeer=shock_dpeer,
+        shock_f=shock_f,
+        cls_f=cls_f,
+        shocked=shocked,
     )
 
 
@@ -522,7 +644,8 @@ def _trunc_exp_moments(kmu, L, q, xp):
     return m, v
 
 
-def _replica_draw(mu, u2, p: _Params, xp, any_het: bool):
+def _replica_draw(mu, u2, p: _Params, xp, any_het: bool, any_shock: bool,
+                  kmu_bg, srate):
     """Endogenous restore law: sample the surviving replica count and turn
     it into this attempt's restore duration (DESIGN.md Sec 6).
 
@@ -542,28 +665,71 @@ def _replica_draw(mu, u2, p: _Params, xp, any_het: bool):
     DESIGN.md Sec 7).  Non-mix cells keep the exact legacy formula bit-for-
     bit (both paths are computed and selected with ``where``).
 
+    ``any_shock`` (static) switches the survivor draw to the shock-mixture
+    law of :func:`repro.p2p.overlay.shock_survivor_pmf` (DESIGN.md Sec 8):
+    the attempt follows a shock-caused failure with probability
+    ``q = srate / (kmu_bg + srate)`` and then finds each in-scope holder
+    additionally killed by that same shock — the mixture
+    ``q * Binom(R, A*(1-f)) + (1-q) * Binom(R, A)`` is sampled by running
+    both pmf recurrences and inverting the mixed CDF with the SAME ``u2``,
+    so no extra noise stream is consumed.  ``A`` itself carries the
+    shock-augmented holder hazard ``mu + rate*f``.  All shock terms are
+    additive zeros at rate 0, so the mixture collapses to the i.i.d. law
+    bit-for-bit there.
+
     Returns (td_rest, from_server, td_expect): the sampled attempt duration
     (legacy cells keep p.T_d), whether it hits the server fallback, and
     E[td] for the oracle policy.
     """
-    A = xp.clip(1.0 / (1.0 + mu * p.repair), 1e-12, 1.0 - 1e-12)
+    A_hom = xp.clip(1.0 / (1.0 + mu * p.repair
+                           + (p.shock_rate * p.shock_f) * p.repair),
+                    1e-12, 1.0 - 1e-12)
+    A = A_hom
     td_up1 = p.td_up1
+    A2_mix = td2_mix = None
     if any_het:
-        A_c = 1.0 / (1.0 + (mu * p.repair)[..., None] * p.cls_h)
+        A_c = (1.0 / (1.0 + (mu * p.repair)[..., None] * p.cls_h
+                      + (p.shock_rate * p.repair)[..., None] * p.cls_f))
         nA = p.cls_n * A_c                    # expected survivors per class
         sumA = xp.sum(nA, axis=-1)
         A_mix = xp.clip(sumA / xp.maximum(p.R, 1.0), 1e-12, 1.0 - 1e-12)
         td_mix = sumA / xp.maximum(xp.sum(nA / p.cls_td1, axis=-1), 1e-300)
         A = xp.where(p.store_mix, A_mix, A)
         td_up1 = xp.where(p.store_mix, td_mix, td_up1)
+        if any_shock:
+            # Post-shock per-class survival: the same shock that killed the
+            # job also killed each in-scope holder w.p. f_c.
+            nA2 = nA * (1.0 - p.cls_f)
+            sumA2 = xp.sum(nA2, axis=-1)
+            A2_mix = xp.clip(sumA2 / xp.maximum(p.R, 1.0), 0.0, 1.0 - 1e-12)
+            td2_mix = sumA2 / xp.maximum(xp.sum(nA2 / p.cls_td1, axis=-1),
+                                         1e-300)
+    if any_shock:
+        q = srate / xp.maximum(kmu_bg + srate, 1e-300)
+        A2 = A_hom * (1.0 - p.shock_f)
+        if any_het:
+            A2 = xp.where(p.store_mix, A2_mix, A2)
+            # Mixture-weighted stripe bandwidth (mean-field): exactly
+            # td_up1 at q=0, and the survival-weighted post-shock uplink
+            # otherwise.
+            td_up1 = xp.where(p.store_mix,
+                              (1.0 - q) * td_up1 + q * td2_mix, td_up1)
+        ratio_b = A2 / (1.0 - A2)
+        pmf_b = (1.0 - A2) ** p.R
     ratio = A / (1.0 - A)
-    pmf = (1.0 - A) ** p.R                    # P(m = 0)
+    pmf_a = (1.0 - A) ** p.R
+    pmf = (1.0 - q) * pmf_a + q * pmf_b if any_shock else pmf_a  # P(m = 0)
     cdf = pmf
     m = xp.zeros_like(mu)
     etd = pmf * p.td_srv                      # E[td] accumulator: m=0 term
     for j in range(_R_MAX):
         m = m + (u2 > cdf)
-        pmf = xp.maximum(pmf * (p.R - j) / (j + 1.0) * ratio, 0.0)
+        pmf_a = xp.maximum(pmf_a * (p.R - j) / (j + 1.0) * ratio, 0.0)
+        if any_shock:
+            pmf_b = xp.maximum(pmf_b * (p.R - j) / (j + 1.0) * ratio_b, 0.0)
+            pmf = (1.0 - q) * pmf_a + q * pmf_b
+        else:
+            pmf = pmf_a
         cdf = cdf + pmf
         etd = etd + pmf * striped_restore_seconds(j + 1.0, td_up1,
                                                   p.td_cap, p.td_srv, xp)
@@ -576,30 +742,40 @@ def _replica_draw(mu, u2, p: _Params, xp, any_het: bool):
 
 
 def _attempt(s: _State, p: _Params, u2, xp, lw, any_store: bool,
-             any_het: bool):
+             any_het: bool, any_shock: bool):
     """Pure pre-sampling half of a step: what is each cell about to do?
 
     ``u2`` is this step's replica-survival uniform (store cells sample the
     surviving holder count from it; legacy cells ignore it).  ``any_store``
-    / ``any_het`` are static per batch: all-legacy batches skip the
-    R_MAX-term replica unroll entirely, all-homogeneous-store batches skip
-    the per-class availability columns (the u2 stream is still consumed so
+    / ``any_het`` / ``any_shock`` are static per batch: all-legacy batches
+    skip the R_MAX-term replica unroll entirely, all-homogeneous-store
+    batches skip the per-class availability columns, all-unshocked batches
+    skip the second mixture recurrence (the u2 stream is still consumed so
     a cell's realization never depends on batch composition).
     """
     mu = hazard_kernel(s.t, p.scen_kind, p.scen_p, p.trace_t, p.trace_mtbf, xp)
     # The job-level failure process under a class mix: each slot fails at
     # mu * h_slot, and a sum of independent exponentials is Poisson with
     # the summed rate — hsum_job == float(k) for homogeneous cells.
-    kmu = p.hsum_job * mu
+    kmu_bg = p.hsum_job * mu
+    # Correlated shocks (DESIGN.md Sec 8): job-killing epochs are the
+    # Bernoulli-thinned shock Poisson process (rate * pkill), and the
+    # superposition with the background process is again Poisson — one
+    # exponential race, same ``u`` draw, +0.0 exactly when unshocked.
+    srate = p.shock_rate * p.shock_pkill
+    kmu = kmu_bg + srate
     active = ~s.finished
-    # Censoring is checked at the top of the work loop (not inside restore
-    # retries), matching simulate_job.
-    censor_now = active & ~s.in_restore & (s.t - p.t0 > p.max_wall)
+    # Censoring is checked before EVERY attempt — work cycles and restore
+    # retries alike, matching simulate_job: under shock-dominated churn
+    # the retry loop is exactly where a censored cell would otherwise burn
+    # unbounded steps (expected retries grow like exp(rate * T_d)).
+    censor_now = active & (s.t - p.t0 > p.max_wall)
     att = active & ~censor_now
 
     if any_store:
         td_rest, from_server, td_expect = _replica_draw(mu, u2, p, xp,
-                                                        any_het)
+                                                        any_het, any_shock,
+                                                        kmu_bg, srate)
     else:
         td_rest, from_server, td_expect = p.T_d, p.store_on, p.T_d
 
@@ -616,11 +792,13 @@ def _attempt(s: _State, p: _Params, u2, xp, lw, any_store: bool,
     # use E[td] under the true availability.
     td_known = xp.where(p.store_on, s.td_obs[:, 0], p.T_d)
     Td_hat = xp.where(s.seen_restore, td_known, V_hat)
-    # The oracle knows the fleet composition: its per-peer rate is the
-    # class-mean hazard hsum_job/k * mu (== mu for homogeneous cells, and
-    # hsum/k is exactly 1.0 there, so the product is bit-identical).  The
-    # adaptive estimate mu_hat already converges to the watch-pool mean.
-    mu_true = mu * (p.hsum_job / p.k)
+    # The oracle knows the fleet composition AND the shock process: its
+    # per-peer rate is the class-mean hazard hsum_job/k * mu plus the
+    # job-killing shock rate spread over the k peers (srate/k is exactly
+    # 0.0 for unshocked cells, so the sum is bit-identical there).  The
+    # adaptive estimate mu_hat already converges to the watch-pool mean
+    # of the same effective rate.
+    mu_true = mu * (p.hsum_job / p.k) + srate / p.k
     iv2 = _opt_interval(
         xp.stack([mu_hat, mu_true]), p.k,
         xp.stack([xp.maximum(V_hat, 1e-6), p.V]),
@@ -751,7 +929,14 @@ def _apply(s: _State, p: _Params, pre, u, z, u3, z3, macro_threshold,
     M = xp.clip(xp.minimum(M_want, M_cap), 0.0, _MACRO_CAP)
     # Store cells never macro-step: the burst closed form above assumes a
     # constant per-failure restore time, which endogenous T_d is not.
-    macro = (att & ~s.in_restore & ~p.store_on & (p_surv < macro_threshold)
+    # Shocked cells never macro-step either (DESIGN.md Sec 8): a burst
+    # must not straddle a shock epoch — the adaptive burst cap
+    # window/(watch*mu) above counts only background deaths, so an epoch
+    # inside the burst would outrun the estimator exactly like a
+    # mis-estimated livelock; ~p.shocked is all-True for unshocked
+    # batches, keeping them bit-identical.
+    macro = (att & ~s.in_restore & ~p.store_on & ~p.shocked
+             & (p_surv < macro_threshold)
              & xp.isfinite(kmu) & (kmu > 0.0) & (M >= 1.0))
     capped = macro & (M < M_want)
     m_ok = macro & ~capped                         # burst ends in a success
@@ -813,9 +998,14 @@ def _apply(s: _State, p: _Params, pre, u, z, u3, z3, macro_threshold,
     elapsed = t - s.t
     if peer_axis == 1:
         # Deaths arrive at the class-weighted watch rate (hsum_watch ==
-        # float(watch) for homogeneous cells); exposure stays in raw
-        # slot-seconds — the estimator is class-blind, like the heap MLE.
-        d = (p.hsum_watch * mu * elapsed)[:, None]
+        # float(watch) for homogeneous cells) plus the correlated-shock
+        # death rate among the watched scope (rate * f * n_scope_watch,
+        # exactly +0.0 when unshocked); exposure stays in raw
+        # slot-seconds — the estimator is class-blind, like the heap MLE,
+        # and therefore converges to the watch-pool mean EFFECTIVE hazard
+        # including shocks, which is what the interval rule should see.
+        d = ((p.hsum_watch * mu + p.shock_rate * p.shock_dwatch)
+             * elapsed)[:, None]
         expo = (p.watch * elapsed)[:, None]
         beta = xp.exp(d * p.log_decay[:, None])
         ema_d = s.ema_d * beta + d
@@ -827,11 +1017,18 @@ def _apply(s: _State, p: _Params, pre, u, z, u3, z3, macro_threshold,
                     < xp.where(pooled, 1.0, p.k)[:, None])
         rate_slot = xp.where(pooled, p.watch, p.watch / p.k)  # slots per peer
         # Death intensity per peer: its watch/k slot share scaled by the
-        # mean class multiplier of that share (all 1.0 when homogeneous).
+        # mean class multiplier of that share (all 1.0 when homogeneous),
+        # plus its share of the shock-death intensity (exact in-scope
+        # count of the j::k slot share; +0.0 when unshocked).  Epoch-level
+        # burst clustering within one step is folded into the per-step
+        # Poisson draw — mean-exact; the heap oracle delivers the true
+        # simultaneous bursts and the parity suite bounds the difference.
         rate_death = xp.where(pooled[:, None], p.hsum_watch[:, None],
                               (p.watch / p.k)[:, None]
                               * p.hmean_peer[:, :peer_axis])
-        lam = rate_death * (mu * elapsed)[:, None] * peer_act
+        lam = (rate_death * (mu * elapsed)[:, None]
+               + (p.shock_rate * elapsed)[:, None]
+               * p.shock_dpeer[:, :peer_axis]) * peer_act
         d = xp.where(pooled[:, None], lam, _sample_counts(lam, u3, z3, xp))
         beta = xp.exp(d * p.log_decay[:, None])
         ema_d = xp.where(peer_act, s.ema_d * beta + d, s.ema_d)
@@ -861,7 +1058,7 @@ def _lw_numpy(z):
 
 def _run_numpy(p: _Params, seeds: Sequence[int], max_steps: int,
                macro_threshold: float, any_store: bool, any_het: bool,
-               peer_axis: int) -> tuple:
+               any_shock: bool, peer_axis: int) -> tuple:
     # One stream per UNIQUE seed, consumed positionally (draw i belongs to
     # step i): a cell's realization depends only on its own seed, never on
     # batch composition, and cells sharing a seed share churn randomness —
@@ -903,7 +1100,8 @@ def _run_numpy(p: _Params, seeds: Sequence[int], max_steps: int,
                 u3 = block_u3[inv, :, j]
                 z3 = block_z3[inv, :, j]
             j += 1
-            pre = _attempt(s, p, u2, np, _lw_numpy, any_store, any_het)
+            pre = _attempt(s, p, u2, np, _lw_numpy, any_store, any_het,
+                           any_shock)
             s = _apply(s, p, pre, u, z, u3, z3, macro_threshold, peer_axis, np)
     return s, steps
 
@@ -920,7 +1118,8 @@ if _HAVE_JAX:
         return lambertw0(z, iters=_LW_ITERS)
 
     def _jax_chunk(state_and_keys, p: _Params, macro_threshold: float,
-                   any_store: bool, any_het: bool, peer_axis: int):
+                   any_store: bool, any_het: bool, any_shock: bool,
+                   peer_axis: int):
         def body(carry, _):
             s, keys = carry
             # Per-CELL keys (seeded from CellSpec.seed): realizations are
@@ -943,7 +1142,8 @@ if _HAVE_JAX:
                     k, (peer_axis,), dtype=jnp.float64))(k5)
             else:
                 u3 = z3 = None
-            pre = _attempt(s, p, u2, jnp, lambertw0_jnp, any_store, any_het)
+            pre = _attempt(s, p, u2, jnp, lambertw0_jnp, any_store, any_het,
+                           any_shock)
             return (_apply(s, p, pre, u, z, u3, z3, macro_threshold,
                            peer_axis, jnp), keys), None
 
@@ -955,11 +1155,12 @@ if _HAVE_JAX:
 
 def _run_jax(p: _Params, seeds: Sequence[int], max_steps: int,
              macro_threshold: float, any_store: bool, any_het: bool,
-             peer_axis: int) -> tuple:
+             any_shock: bool, peer_axis: int) -> tuple:
     global _jax_chunk_jit
     with jax.experimental.enable_x64(True):
         if _jax_chunk_jit is None:
-            _jax_chunk_jit = jax.jit(_jax_chunk, static_argnums=(2, 3, 4, 5))
+            _jax_chunk_jit = jax.jit(_jax_chunk,
+                                     static_argnums=(2, 3, 4, 5, 6))
         pj = _Params(*(jnp.asarray(a) for a in p))
         keys = jax.vmap(jax.random.PRNGKey)(
             jnp.asarray(list(seeds), dtype=jnp.uint32))
@@ -967,7 +1168,7 @@ def _run_jax(p: _Params, seeds: Sequence[int], max_steps: int,
         steps = 0
         while steps < max_steps:
             s, keys = _jax_chunk_jit((s, keys), pj, macro_threshold, any_store,
-                                     any_het, peer_axis)
+                                     any_het, any_shock, peer_axis)
             steps += _CHUNK
             if bool(s.finished.all()):
                 break
@@ -1003,12 +1204,13 @@ def run_cells(cells: Sequence[CellSpec], *, backend: str = "auto",
     seeds = [c.seed for c in cells]
     any_store = any(c.store is not None for c in cells)
     any_het = bool(p.store_mix.any())
+    any_shock = any(_cell_shock(c) is not None for c in cells)
     # Per-peer estimator state is only materialized when some cell needs it.
     peer_axis = (_PEER_CAP if any(c.policy.regime != "pooled" for c in cells)
                  else 1)
     run = _run_jax if backend == "jax" else _run_numpy
     s, steps = run(p, seeds, max_steps, float(macro_threshold), any_store,
-                   any_het, peer_axis)
+                   any_het, any_shock, peer_axis)
 
     ran_out = ~np.asarray(s.finished)
     completed = ~(np.asarray(s.censored) | ran_out)

@@ -187,6 +187,13 @@ class OraclePolicy:
     Clamped to the same ``[min_interval, max_interval]`` band as
     :class:`AdaptiveCheckpointController`, so adaptive-vs-oracle gaps
     measure estimation quality rather than the clipping asymmetry.
+
+    ``shock_rate_per_peer`` folds a correlated-churn shock process into
+    the oracle's truth (DESIGN.md Sec 8): the job-killing shock epochs are
+    Poisson with rate ``shock.rate * shock.job_kill_prob(n_scope)``, i.e.
+    ``shock.rate * shock.job_kill_prob(n_scope) / k`` per peer — the same
+    effective rate the batched engine's oracle cells use.  0.0 (the
+    default) is the shock-free oracle, unchanged.
     """
 
     k: int
@@ -195,10 +202,11 @@ class OraclePolicy:
     mtbf_fn: MtbfFn
     min_interval: float = 1.0
     max_interval: float = 24 * 3600.0
+    shock_rate_per_peer: float = 0.0
     _now: float = 0.0
 
     def interval(self) -> float:
-        mu = 1.0 / self.mtbf_fn(self._now)
+        mu = 1.0 / self.mtbf_fn(self._now) + self.shock_rate_per_peer
         iv = optimal_interval_scalar(mu, self.k, self.V, self.T_d)
         return min(max(iv, self.min_interval), self.max_interval)
 
@@ -362,6 +370,22 @@ def simulate_job(
             # store's surviving replicas); churn during restore forces a
             # retry, re-reading the replica set at the new start time.
             while True:
+                if t > max_wall_time:
+                    # Censor INSIDE the retry loop too: under heavy or
+                    # correlated churn (shock epochs faster than the
+                    # restore time) the expected number of retries grows
+                    # like exp(rate * T_d), and a job can burn essentially
+                    # unbounded simulated time without ever reaching the
+                    # work-loop censor check above.  Interrupted attempts
+                    # were already billed per attempt (abort_restore), so
+                    # the censored lower-bound result is fully accounted.
+                    return SimResult(
+                        wall_time=t, work_required=work_required / speed,
+                        n_checkpoints=n_ckpt, n_failures=n_fail,
+                        wasted_work=wasted, checkpoint_time=ckpt_time,
+                        restore_time=restore_time, completed=False,
+                        **store_stats(),
+                    )
                 td = T_d if store is None else store.restore_seconds_at(t)
                 fail_in_restore = drain_observations(t + td)
                 if fail_in_restore is None:

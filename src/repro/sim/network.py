@@ -7,16 +7,35 @@ style networks (Sec 2).  Events are delivered in time order from a heap.
 
 The paper's Fig. 4 (right) uses a failure rate that doubles over 20 hours;
 ``doubling_mtbf`` builds that schedule.
+
+**Correlated churn shocks** (DESIGN.md Sec 8): a :class:`ShockSpec` adds
+mass-kill events on top of the independent per-slot lifetimes — Poisson
+shock epochs from a (shareable) :class:`ShockClock`, each killing every
+in-scope slot independently with probability ``kill_frac`` at the same
+instant.  Killed slots emit ordinary :class:`DeathEvent`\\ s (their session
+ends early) and respawn immediately, so consumers see one time-ordered
+stream in which shock epochs appear as bursts of simultaneous deaths.
+With ``shock=None`` the RNG call sequence and the event stream are
+unchanged bit-for-bit.
 """
 from __future__ import annotations
 
 import heapq
+import math
+from collections import deque
 from dataclasses import dataclass
 from typing import Callable, Iterator, Optional, Sequence
 
 import numpy as np
 
-from repro.sim.scenarios import PeerClassMix, Scenario, scenario
+from repro.sim.scenarios import (
+    PeerClassMix,
+    Scenario,
+    ShockClock,
+    ShockSpec,
+    resolve_shock,
+    scenario,
+)
 
 MtbfFn = Callable[[float], float]  # wall time (s) -> current MTBF (s)
 
@@ -58,7 +77,11 @@ class ChurnNetwork:
 
     def __init__(self, n_slots: int, mtbf_fn: MtbfFn, rng: np.random.Generator,
                  lifetime_sampler: Optional[Callable[[np.random.Generator, float], float]] = None,
-                 slot_mults: Optional[Sequence[float]] = None):
+                 slot_mults: Optional[Sequence[float]] = None,
+                 shock: Optional[ShockSpec] = None,
+                 shock_clock: Optional[ShockClock] = None,
+                 shock_rng: Optional[np.random.Generator] = None,
+                 scope_mask: Optional[Sequence[bool]] = None):
         """``lifetime_sampler(rng, birth)`` overrides the default
         Exp(mtbf_fn(birth)) session lengths — e.g. heavy-tailed Weibull
         lifetimes from the scenario registry.
@@ -68,6 +91,15 @@ class ChurnNetwork:
         by ``slot_mults[i]``, which for exponential (and Weibull) lifetimes
         is exactly a hazard scaling.  ``None`` keeps the homogeneous fleet,
         bit-for-bit (the RNG call sequence is unchanged).
+
+        ``shock`` enables correlated mass-kill epochs (DESIGN.md Sec 8).
+        ``shock_clock`` supplies the (shareable) epoch schedule — pass the
+        SAME clock to the job network and its replica-holder processes so
+        job failures and replica losses stay correlated; when omitted, a
+        private clock is derived from ``rng``.  ``shock_rng`` drives the
+        per-slot kill Bernoullis (derived from ``rng`` when omitted);
+        ``scope_mask`` restricts kills to a slot subset (defaults to all
+        slots; class scopes are resolved by :meth:`from_scenario`).
         """
         if n_slots <= 0:
             raise ValueError("need at least one peer slot")
@@ -84,23 +116,55 @@ class ChurnNetwork:
         self.rng = rng
         self.lifetime_sampler = lifetime_sampler
         self.slot_mults = slot_mults
-        self._heap: list[tuple[float, int, float]] = []  # (death_time, slot, birth_time)
+        self.shock = shock
+        self._shock_i = 0              # cursor into the shared epoch schedule
+        self._pending: deque = deque()  # shock deaths awaiting delivery
+        # Lazy deletion: a shock preempts a slot's scheduled natural death,
+        # so heap entries carry a per-slot version and stale ones are
+        # skipped on pop.  With shock=None nothing is ever invalidated.
+        self._ver = [0] * n_slots
+        self._birth = [0.0] * n_slots
+        if shock is not None:
+            if scope_mask is None:
+                scope_mask = (True,) * n_slots
+            scope_mask = tuple(bool(b) for b in scope_mask)
+            if len(scope_mask) != n_slots:
+                raise ValueError("need one scope flag per slot")
+            self._scope_slots = tuple(i for i in range(n_slots)
+                                      if scope_mask[i])
+            # Dedicated streams: SPAWNED from the main rng's seed sequence
+            # (not drawn from its stream), so attaching a shock — even a
+            # rate-0 one — leaves every lifetime draw bit-identical.
+            kids = rng.spawn(2)
+            self._clock = shock_clock if shock_clock is not None else \
+                ShockClock(shock.rate, kids[0])
+            self._shock_rng = shock_rng if shock_rng is not None else kids[1]
+        self._heap: list[tuple[float, int, float, int]] = []
         for slot in range(n_slots):
             self._spawn(slot, birth=0.0)
 
     @classmethod
     def from_scenario(cls, scen: Scenario, n_slots: int,
                       rng: np.random.Generator,
-                      mix: Optional[PeerClassMix] = None) -> "ChurnNetwork":
+                      mix: Optional[PeerClassMix] = None,
+                      shock: Optional[ShockSpec] = None,
+                      shock_clock: Optional[ShockClock] = None) -> "ChurnNetwork":
         """Build a network whose churn follows a registry scenario, including
         its lifetime distribution (Weibull scenarios sample true heavy
         tails here; the batched engine approximates them by renewal rate).
         ``mix`` assigns per-slot hazard multipliers from a
         :class:`PeerClassMix` (its deterministic prefix-proportional slot
-        assignment, the same one the batched engine packs)."""
+        assignment, the same one the batched engine packs).  The effective
+        shock is ``shock`` when given, else whichever of scenario/mix
+        declares one (:func:`repro.sim.scenarios.resolve_shock`); class
+        scopes resolve to slot masks through the mix's assignment."""
         mults = mix.hazard_mults(n_slots) if mix is not None else None
+        if shock is None:
+            shock = resolve_shock(scen, mix)
+        mask = shock.scope_mask(mix, n_slots) if shock is not None else None
         return cls(n_slots, scen.mtbf_fn, rng,
-                   lifetime_sampler=scen.sample_lifetime, slot_mults=mults)
+                   lifetime_sampler=scen.sample_lifetime, slot_mults=mults,
+                   shock=shock, shock_clock=shock_clock, scope_mask=mask)
 
     def _spawn(self, slot: int, birth: float) -> None:
         if self.lifetime_sampler is not None:
@@ -116,18 +180,61 @@ class ChurnNetwork:
             # Hazard scaling: dividing an Exp (or Weibull) lifetime by h
             # multiplies its hazard by h; /1.0 is exact for baseline slots.
             lifetime = lifetime / self.slot_mults[slot]
-        heapq.heappush(self._heap, (birth + lifetime, slot, birth))
+        self._birth[slot] = birth
+        heapq.heappush(self._heap,
+                       (birth + lifetime, slot, birth, self._ver[slot]))
+
+    # ------------------------------------------------------------------ #
+    # Time-ordered event merge: natural deaths, shock epochs, pending.    #
+    # ------------------------------------------------------------------ #
+    def _natural_peek(self) -> float:
+        h = self._heap
+        while h and h[0][3] != self._ver[h[0][1]]:
+            heapq.heappop(h)  # stale: slot was shock-killed meanwhile
+        return h[0][0] if h else math.inf
+
+    def _next_shock_time(self) -> float:
+        return (self._clock.epoch(self._shock_i)
+                if self.shock is not None else math.inf)
+
+    def _process_shock(self, te: float) -> None:
+        """One epoch: kill each in-scope slot independently w.p. kill_frac,
+        queueing their (simultaneous) deaths; killed slots respawn at te."""
+        self._shock_i += 1
+        f = self.shock.kill_frac
+        for slot in self._scope_slots:
+            if self._shock_rng.random() < f:
+                self._pending.append(DeathEvent(
+                    time=te, slot=slot, lifetime=te - self._birth[slot]))
+                self._ver[slot] += 1  # cancel the scheduled natural death
+                self._spawn(slot, birth=te)
 
     def next_death(self) -> DeathEvent:
         """Pop the next death event; the slot is immediately re-occupied."""
-        death_time, slot, birth = heapq.heappop(self._heap)
+        t = self.peek_next_death_time()
+        if self._pending and self._pending[0].time <= t:
+            return self._pending.popleft()
+        death_time, slot, birth, _ = heapq.heappop(self._heap)
         self._spawn(slot, birth=death_time)
         return DeathEvent(time=death_time, slot=slot, lifetime=death_time - birth)
 
     def deaths_until(self, t_end: float) -> Iterator[DeathEvent]:
-        """Yield death events with time <= t_end, in order."""
-        while self._heap and self._heap[0][0] <= t_end:
+        """Yield death events with time <= t_end, in order (shock-epoch
+        deaths arrive as same-timestamp bursts)."""
+        while self.peek_next_death_time() <= t_end:
             yield self.next_death()
 
     def peek_next_death_time(self) -> float:
-        return self._heap[0][0] if self._heap else float("inf")
+        """Wall time of the next delivered death.  Shock epochs scheduled
+        before the next natural death are processed (their kill Bernoullis
+        drawn) here — deterministic, since the dedicated shock streams are
+        consumed in epoch order regardless of who asks first."""
+        while True:
+            if self._pending:
+                return self._pending[0].time
+            t_nat = self._natural_peek()
+            t_shk = self._next_shock_time()
+            if t_shk < t_nat:
+                self._process_shock(t_shk)
+                continue
+            return t_nat

@@ -35,13 +35,32 @@ assigned to peer slots by the deterministic prefix-proportional rule
 :meth:`PeerClassMix.assign`, so the batched engine and the per-event heap
 oracle agree on which slot belongs to which class without exchanging any
 state.
+
+**Correlated churn shocks** (DESIGN.md Sec 8): a :class:`ShockSpec` adds a
+second, *correlated* failure process on top of the scenario's independent
+per-peer hazard — Poisson shock epochs at ``rate`` per second, each killing
+every live peer in ``scope`` independently with probability ``kill_frac``
+*at the same instant*.  This is the diurnal-wave / LAN-partition /
+flash-exit regime measured in real volunteer fleets (Anderson & Fedak) and
+the one an i.i.d. availability law cannot express: at a shock epoch the
+deaths of different peers are maximally correlated, so a job failure
+coincides with replica-holder losses exactly when the replicas are needed.
+A shock spec can ride on a :class:`Scenario` (fleet-wide waves) or on a
+:class:`PeerClassMix` (``scope`` naming one class models a campus
+partition or a volunteer flash exit); :func:`resolve_shock` picks the
+effective spec for a simulation cell and rejects ambiguous declarations.
+:class:`ShockClock` is the *shared* lazily-extended epoch schedule both
+per-event processes (job churn and replica holders) consume, preserving
+the job-failure/replica-loss correlation the batched engine's mixture law
+models in closed form.
 """
 from __future__ import annotations
 
 import bisect
+import dataclasses
 import math
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -50,6 +69,122 @@ import numpy as np
 CONSTANT, DOUBLING, DIURNAL, FLASH_CROWD, WEIBULL, TRACE = range(6)
 
 _TWO_PI = 2.0 * math.pi
+
+# Per-seed tag of the dedicated noise stream feeding shock epochs/kills in
+# the per-event simulators ("shck"); distinct from the engine's observation
+# stream and the workflow's hand-off stream so the three never alias.
+SHOCK_STREAM = 0x7368636B
+
+
+@dataclass(frozen=True)
+class ShockSpec:
+    """A correlated-churn shock process layered on a scenario or mix.
+
+    Shock epochs arrive as a Poisson process with ``rate`` per second; at
+    each epoch every live peer in ``scope`` is killed independently with
+    probability ``kill_frac`` — *simultaneously*, which is what makes the
+    process correlated (the marginal per-peer kill rate is just
+    ``rate * kill_frac``, indistinguishable from background churn; the
+    cross-peer simultaneity is the whole point).  ``scope`` is ``"all"``
+    (fleet-wide wave) or the name of one :class:`PeerClass` in the cell's
+    mix (partition / flash exit of that population).
+
+    ``rate = 0`` is a valid spec and must behave bit-identically to no
+    shock at all — the engine's carry is formulated as additive zero terms
+    and the per-event simulators draw nothing from the shock streams, so
+    this holds exactly (tests/test_shocks.py).
+    """
+
+    rate: float
+    kill_frac: float
+    scope: str = "all"
+
+    def __post_init__(self) -> None:
+        if not (self.rate >= 0.0 and math.isfinite(self.rate)):
+            raise ValueError("shock rate must be finite and >= 0")
+        if not 0.0 < self.kill_frac <= 1.0:
+            raise ValueError("kill_frac must be in (0, 1]")
+        if not self.scope:
+            raise ValueError("scope must be 'all' or a peer-class name")
+
+    # ------------------------------------------------------------------ #
+    def scope_mask(self, mix: Optional["PeerClassMix"],
+                   n: int) -> Tuple[bool, ...]:
+        """Which of ``n`` slots the shock can kill, under the mix's
+        deterministic prefix-proportional slot assignment (``None`` mix is
+        only valid for ``scope='all'``)."""
+        if self.scope == "all":
+            return (True,) * n
+        if mix is None:
+            raise ValueError(
+                f"class-scoped shock {self.scope!r} needs a PeerClassMix")
+        names = [c.name for c in mix.classes]
+        if self.scope not in names:
+            raise ValueError(
+                f"shock scope {self.scope!r} names no class of the mix "
+                f"{sorted(names)}")
+        ci = names.index(self.scope)
+        return tuple(a == ci for a in mix.assign(n))
+
+    def scope_count(self, mix: Optional["PeerClassMix"], n: int) -> int:
+        return sum(self.scope_mask(mix, n))
+
+    def job_kill_prob(self, n_scope: int) -> float:
+        """P(a shock epoch kills >= 1 of ``n_scope`` in-scope job peers) —
+        each epoch's job-kill events thin the epoch Poisson process, so the
+        job-level shock-failure process is Poisson with rate
+        ``rate * job_kill_prob``."""
+        if n_scope < 0:
+            raise ValueError("n_scope must be non-negative")
+        return -math.expm1(n_scope * math.log1p(-self.kill_frac)) \
+            if self.kill_frac < 1.0 else (0.0 if n_scope == 0 else 1.0)
+
+
+class ShockClock:
+    """Shared, lazily-extended Poisson epoch schedule.
+
+    Every per-event consumer of one simulation's shock process (the
+    :class:`~repro.sim.network.ChurnNetwork` job churn AND the
+    :class:`~repro.p2p.overlay.ReplicaSetProcess` replica holders) must
+    read the SAME epochs — shocks kill job peers and checkpoint holders at
+    the same instants, which is precisely the correlation that makes
+    restores find depleted replica sets.  Consumers keep their own cursor
+    into the schedule (:meth:`epoch` extends it on demand) and draw their
+    own per-peer kill Bernoullis; only the epochs are shared.
+    """
+
+    def __init__(self, rate: float, rng: np.random.Generator):
+        if rate < 0:
+            raise ValueError("shock rate must be >= 0")
+        self.rate = float(rate)
+        self.rng = rng
+        self._epochs: list = []
+
+    def epoch(self, i: int) -> float:
+        """Wall time of the i-th shock epoch (inf when rate is 0)."""
+        if self.rate <= 0.0:
+            return math.inf
+        while len(self._epochs) <= i:
+            prev = self._epochs[-1] if self._epochs else 0.0
+            self._epochs.append(prev + self.rng.exponential(1.0 / self.rate))
+        return self._epochs[i]
+
+
+def resolve_shock(scenario: Optional["Scenario"] = None,
+                  mix: Optional["PeerClassMix"] = None) -> Optional[ShockSpec]:
+    """The effective shock spec of a (scenario, mix) pair.
+
+    A shock may ride on the scenario (fleet-wide waves) or on the mix
+    (class-targeted partitions); declaring one on both is ambiguous — two
+    simultaneous epoch processes are not modelled — and raises.
+    """
+    s = scenario.shock if scenario is not None else None
+    m = mix.shock if mix is not None else None
+    if s is not None and m is not None:
+        raise ValueError(
+            "shock declared on both the scenario and the mix; attach it to "
+            "exactly one")
+    return s if s is not None else m
 
 
 @dataclass(frozen=True)
@@ -61,6 +196,10 @@ class Scenario:
     benign value for every formula) rather than 0 to keep the branchless
     kernel free of spurious divides.  ``trace_t``/``trace_mtbf`` are only
     populated for the trace kind.
+
+    ``shock`` layers a correlated-churn :class:`ShockSpec` on top of the
+    independent hazard (DESIGN.md Sec 8); :meth:`with_shock` derives a
+    shocked copy so registry factories stay shock-agnostic.
     """
 
     name: str
@@ -68,6 +207,11 @@ class Scenario:
     params: Tuple[float, float, float, float]
     trace_t: Tuple[float, ...] = ()
     trace_mtbf: Tuple[float, ...] = ()
+    shock: Optional[ShockSpec] = None
+
+    def with_shock(self, shock: Optional[ShockSpec]) -> "Scenario":
+        """This scenario with ``shock`` attached (None detaches)."""
+        return dataclasses.replace(self, shock=shock)
 
     # ------------------------------------------------------------------ #
     # Scalar path (reference simulator, oracle policy).                   #
@@ -318,11 +462,33 @@ class PeerClassMix:
     a different order produce *bit-identical* slot assignments and therefore
     bit-identical simulation results (the ordering-invariance contract
     tested in tests/test_heterogeneity.py).
+
+    ``shock`` attaches a class-targeted (or fleet-wide) correlated-churn
+    :class:`ShockSpec` to the fleet itself — e.g. a campus partition that
+    flash-exits the ``campus`` class (DESIGN.md Sec 8).  A simulation cell
+    resolves its effective shock via :func:`resolve_shock`.
     """
 
     classes: Tuple[PeerClass, ...]
     weights: Tuple[float, ...]
     name: str = ""
+    shock: Optional[ShockSpec] = None
+
+    def with_shock(self, shock: Optional[ShockSpec]) -> "PeerClassMix":
+        """This mix with ``shock`` attached (None detaches).
+
+        Copies the already-canonical fields directly instead of going
+        through ``dataclasses.replace``: re-running ``__post_init__`` would
+        re-normalize the weights, and ``w / fsum(w)`` is not bit-stable
+        when ``fsum(w)`` is one ulp off 1.0 — which would break the
+        bit-identity contracts built on deterministic slot assignment.
+        """
+        new = object.__new__(PeerClassMix)
+        object.__setattr__(new, "classes", self.classes)
+        object.__setattr__(new, "weights", self.weights)
+        object.__setattr__(new, "name", self.name)
+        object.__setattr__(new, "shock", shock)
+        return new
 
     def __post_init__(self) -> None:
         if not self.classes or len(self.classes) != len(self.weights):

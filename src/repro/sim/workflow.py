@@ -45,7 +45,12 @@ import numpy as np
 from repro.p2p.store import StoreSpec
 from repro.p2p.transfer import striped_restore_seconds
 from repro.sim.engine import BatchResult, CellSpec, PolicyConfig, run_cells
-from repro.sim.scenarios import PeerClassMix, Scenario
+from repro.sim.scenarios import (
+    PeerClassMix,
+    Scenario,
+    ShockSpec,
+    resolve_shock,
+)
 
 # Tag of the per-seed child stream feeding hand-off fetch randomness;
 # distinct from the engine's observation stream so the two never alias.
@@ -60,6 +65,12 @@ class Stage:
     fleets, DESIGN.md Sec 7) — e.g. an evaluate stage pinned to
     ``server_class`` machines while the train stage rides the volunteer
     tail.  ``None`` inherits the workflow-level mix.
+
+    ``shock`` subjects THIS stage (its cycles, restores, and hand-off
+    fetches) to a correlated-churn shock process (DESIGN.md Sec 8) —
+    modelling e.g. a partition that hits the volunteer-tail train stage
+    while the pinned evaluate stage rides it out.  ``None`` inherits
+    whatever the workflow's scenario/mix declares.
     """
 
     name: str
@@ -70,6 +81,7 @@ class Stage:
     V: Optional[float] = None        # per-stage checkpoint overhead override
     T_d: Optional[float] = None     # per-stage restore overhead override
     mix: Optional[PeerClassMix] = None  # per-stage fleet composition override
+    shock: Optional[ShockSpec] = None  # per-stage correlated-churn override
 
 
 @dataclass(frozen=True)
@@ -163,6 +175,7 @@ def _handoff_times(
     t_start: np.ndarray, n_deps: int, handoff: float, max_time: float,
     store: Optional[StoreSpec] = None,
     mix: Optional[PeerClassMix] = None,
+    shock: Optional[ShockSpec] = None,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Churn-exposed edge fetches: pull each of the ``n_deps`` dependency
     outputs in turn, starting at per-seed times ``t_start``.
@@ -188,6 +201,16 @@ def _handoff_times(
     Poisson-binomial, striped over the survivors' class uplinks (the
     engine's mean-field law has the same mean).
 
+    With a ``shock`` (DESIGN.md Sec 8) the fetching peers are additionally
+    killed by correlated epochs — the fetch-failure race runs at
+    ``hazard_sum(k)*mu + rate*pkill`` — and a store fetch samples the
+    dependency's survivors from the shock-mixture law: with probability
+    ``q`` (the fetch failure was a shock) each in-scope holder was also
+    killed by that epoch, so the draw uses the post-shock availability.
+    A shock that empties the surviving set is the normal case at high
+    ``kill_frac`` and must flow through the same server-fallback /
+    waste / censoring accounting, never an error.
+
     Returns (elapsed, completed, waste, server_bytes).  Server fallbacks
     are billed per ATTEMPT: a churn-interrupted server fetch still moved
     elapsed/total of the image through the shared pipe.  A fetch whose
@@ -203,7 +226,25 @@ def _handoff_times(
     if n_deps == 0 or (store is None and handoff <= 0.0):
         return elapsed, ok_flags, waste, srv_bytes
     img = store.transfer.img_bytes if store is not None else 0.0
-    if mix is not None and mix.is_trivial:
+    # Shock aggregates; all zero (and no extra RNG draws) when unshocked.
+    # Computed against the ORIGINAL mix: a class scope must validate and
+    # count against the declared classes even when a trivial mix then
+    # collapses onto the exact homogeneous path below.
+    srate = 0.0
+    f_all = 0.0
+    if shock is not None:
+        n_scope = shock.scope_count(mix, k)  # validates class scopes
+        srate = shock.rate * shock.job_kill_prob(n_scope)
+        if shock.scope == "all" or (
+                mix is not None and len(mix) == 1
+                and shock.scope == mix.classes[0].name):
+            f_all = shock.kill_frac  # scope covers the whole holder fleet
+    # A trivial mix collapses onto the exact homogeneous path ONLY when
+    # the shock (if any) covers the whole fleet: a class scope on a
+    # trivial multi-class mix (partition groups of identical machines)
+    # still needs the per-class holders path to kill just its group.
+    if mix is not None and mix.is_trivial and (
+            shock is None or shock.scope == "all" or len(mix) == 1):
         mix = None  # exact homogeneous path (identical RNG call sequence)
     khaz = mix.hazard_sum(k) if mix is not None else float(k)
     holders = None
@@ -213,31 +254,48 @@ def _handoff_times(
         for ci in mix.assign(store.R):
             counts[ci] = counts.get(ci, 0) + 1
         holders = [(cnt, mix.classes[ci].hazard_mult,
-                    mix.classes[ci].uplink_mult)
+                    mix.classes[ci].uplink_mult,
+                    shock.kill_frac if shock is not None
+                    and shock.scope in ("all", mix.classes[ci].name) else 0.0)
                    for ci, cnt in sorted(counts.items())]
     for i, rng in enumerate(rngs):
         t = t0 = float(t_start[i])
         for _dep in range(n_deps):
             while ok_flags[i]:
                 mu = 1.0 / scen.mtbf(t)
+                # Did a shock trigger the failure that led to THIS attempt?
+                # (First attempts start from a completed upstream stage, but
+                # drawing per attempt keeps the law identical to the
+                # engine's restore mixture; no draw when unshocked.)
+                post = srate > 0.0 and \
+                    rng.random() < srate / (khaz * mu + srate)
                 if store is None:
                     total = handoff
                     from_server = False
                 elif holders is not None:
                     ups: list = []
-                    for cnt, h_c, u_c in holders:
-                        A_c = 1.0 / (1.0 + mu * h_c * store.t_repair)
+                    for cnt, h_c, u_c, f_c in holders:
+                        # Holder hazard + thinned shock-kill rate (exactly
+                        # +0.0 when unshocked — identical availability).
+                        hold = shock.rate * f_c if shock is not None else 0.0
+                        A_c = 1.0 / (1.0 + (mu * h_c + hold) * store.t_repair)
+                        if post:
+                            A_c *= (1.0 - f_c)
                         ups += [u_c] * int(rng.binomial(cnt, A_c))
                     total = store.transfer.restore_seconds_from(ups)
                     from_server = not ups
                 else:
-                    A = min(max(float(store.availability_at(mu)), 0.0), 1.0)
+                    hold = shock.rate * f_all if shock is not None else 0.0
+                    A = 1.0 / (1.0 + (mu + hold) * store.t_repair)
+                    if post:
+                        A *= (1.0 - f_all)
+                    A = min(max(A, 0.0), 1.0)
                     m = int(rng.binomial(store.R, A)) if store.R > 0 else 0
                     total = float(striped_restore_seconds(
                         float(m), store.td_up1, store.td_cap,
                         store.td_server, np))
                     from_server = m == 0
-                t_fail = -math.log1p(-rng.uniform()) / (khaz * mu)
+                t_fail = -math.log1p(-rng.uniform()) / (khaz * mu + srate)
                 if t_fail >= total:
                     t += total
                     if from_server:
@@ -281,6 +339,13 @@ def simulate_workflow(
     rates, compute speeds, estimator streams, endogenous restores, and
     hand-off fetches all become class-aware (DESIGN.md Sec 7).
 
+    Correlated shocks (DESIGN.md Sec 8) ride the same resolution: a shock
+    declared on the scenario or mix hits every stage, and a stage's own
+    :attr:`Stage.shock` overrides it for that stage alone — its cycles,
+    restores, AND its hand-off fetches (a shock emptying a dependency's
+    surviving replica set routes the fetch to the server fallback and the
+    retry time to ``handoff_waste``, never an error).
+
     Seed isolation: every seed gets its own hand-off random stream (a
     child of that seed alone), and engine cells already derive per-cell
     streams from their own seeds — so a seed's whole workflow realization
@@ -304,6 +369,10 @@ def simulate_workflow(
             ready = np.maximum(ready, finish[d])
             deps_ok &= completed[d]
         stage_mix = stage.mix if stage.mix is not None else mix
+        # The stage's effective shock: its own override, else whatever the
+        # scenario/mix declares (the same resolution CellSpec applies).
+        stage_shock = (stage.shock if stage.shock is not None
+                       else resolve_shock(scen, stage_mix))
         # Fault-free stage runtime in wall seconds (speed == 1.0 exactly
         # for homogeneous stages) — scales both censor horizons.
         speed = (stage_mix.mean_speed(stage.k)
@@ -315,7 +384,7 @@ def simulate_workflow(
         handoff, handoff_ok, handoff_waste, edge_srv_bytes = _handoff_times(
             rngs, scen, stage.k, ready, len(stage.deps), stage.handoff,
             max_time=max_wall_factor * max(total_handoff, stage_wall),
-            store=store, mix=stage_mix)
+            store=store, mix=stage_mix, shock=stage_shock)
         deps_ok &= handoff_ok
         start = ready + handoff
         v = stage.V if stage.V is not None else V
@@ -324,7 +393,8 @@ def simulate_workflow(
             CellSpec(scenario=scen, policy=policy, seed=1000 * idx + s,
                      k=stage.k, work=stage.work, V=v, T_d=td, n_slots=n_slots,
                      max_wall_time=max_wall_factor * stage_wall,
-                     t0=float(start[i]), store=store, mix=stage_mix)
+                     t0=float(start[i]), store=store, mix=stage_mix,
+                     shock=stage.shock)
             for i, s in enumerate(seeds)
         ]
         sim = run_cells(cells, backend=backend)

@@ -1,0 +1,609 @@
+"""Correlated churn shocks (DESIGN.md Sec 8): spec, both engines, parity.
+
+Four layers of checking:
+
+* the :class:`ShockSpec` contract — validation, scenario/mix attachment
+  and resolution, scope masks over the deterministic slot assignment;
+* the exactness contracts — ``shock_rate=0`` reproduces the unshocked
+  path BIT-identically on both engine backends (the shock carry is all
+  additive zero terms), shocked cells never macro-step (macro-threshold
+  invariance), class-ordering and batch-composition invariance survive
+  the shock axis;
+* the per-event processes — :class:`ChurnNetwork` mass-kill bursts at the
+  right aggregate rate, :class:`ReplicaSetProcess` holder loss matching
+  the closed forms in ``repro.p2p.overlay`` (stationary availability and
+  the post-epoch depletion the mixture survivor law models);
+* the restore-path bugfixes the shock axis exposes — censoring INSIDE
+  restore retries on both engines, and the all-holders-dead case routing
+  to the server fallback (billed per attempt) instead of erroring;
+
+plus heap-vs-engine 3-sigma CI parity for a shocked two-class mix under
+pooled and gossip regimes on BOTH backends (``pytest -m parity`` lane).
+"""
+import numpy as np
+import pytest
+
+from repro.p2p import (
+    P2PCheckpointStore,
+    StoreSpec,
+    TransferModel,
+    shock_availability,
+    shock_survivor_pmf,
+)
+from repro.p2p.overlay import ReplicaSetProcess
+from repro.sim import (
+    SHOCK_STREAM,
+    AdaptivePolicy,
+    CellSpec,
+    ChurnNetwork,
+    FixedIntervalPolicy,
+    GossipAdaptivePolicy,
+    PeerClass,
+    PeerClassMix,
+    PolicyConfig,
+    ShockClock,
+    ShockSpec,
+    Stage,
+    WorkflowSpec,
+    correlated_churn_sweep,
+    peer_class_mix,
+    resolve_shock,
+    run_cells,
+    scenario,
+    shock_csv,
+    simulate_job,
+    simulate_workflow,
+)
+from repro.core.adaptive import AdaptiveCheckpointController
+
+V, TD = 20.0, 50.0
+MTBF = 4000.0
+PRIOR_MU = 1.0 / (8.0 * MTBF)
+TM = TransferModel(img_bytes=200e6, peer_uplink=5e6, peer_downlink=50e6,
+                   server_capacity=100e6, server_load=20.0)
+SHOCK = ShockSpec(rate=1.0 / 1800.0, kill_frac=0.4)
+SKEWED = peer_class_mix("two_class", frac_volatile=0.25, hazard_ratio=6.0,
+                        speed_ratio=2.0)
+
+
+# ------------------------------------------------------------ spec contract
+def test_shock_spec_validation():
+    with pytest.raises(ValueError):
+        ShockSpec(rate=-1.0, kill_frac=0.5)
+    with pytest.raises(ValueError):
+        ShockSpec(rate=float("inf"), kill_frac=0.5)
+    with pytest.raises(ValueError):
+        ShockSpec(rate=1e-3, kill_frac=0.0)
+    with pytest.raises(ValueError):
+        ShockSpec(rate=1e-3, kill_frac=1.5)
+    with pytest.raises(ValueError):
+        ShockSpec(rate=1e-3, kill_frac=0.5, scope="")
+    sk = ShockSpec(rate=1e-3, kill_frac=0.5)
+    assert sk.job_kill_prob(0) == 0.0
+    assert sk.job_kill_prob(1) == pytest.approx(0.5)
+    assert sk.job_kill_prob(2) == pytest.approx(0.75)
+    assert ShockSpec(rate=1e-3, kill_frac=1.0).job_kill_prob(3) == 1.0
+
+
+def test_shock_scope_masks_and_resolution():
+    sk_all = ShockSpec(rate=1e-3, kill_frac=0.5)
+    assert sk_all.scope_mask(None, 4) == (True,) * 4
+    sk_cls = ShockSpec(rate=1e-3, kill_frac=0.5, scope="volatile")
+    with pytest.raises(ValueError):
+        sk_cls.scope_mask(None, 4)  # class scope needs a mix
+    with pytest.raises(ValueError):
+        ShockSpec(rate=1e-3, kill_frac=0.5, scope="nope").scope_mask(SKEWED, 4)
+    mask = sk_cls.scope_mask(SKEWED, 16)
+    assign = SKEWED.assign(16)
+    vol = [c.name for c in SKEWED.classes].index("volatile")
+    assert mask == tuple(a == vol for a in assign)
+    assert sk_cls.scope_count(SKEWED, 16) == sum(mask) == 4  # 25% volatile
+
+    scen = scenario("constant", mtbf=MTBF)
+    assert resolve_shock(scen, SKEWED) is None
+    assert resolve_shock(scen.with_shock(sk_all), SKEWED) is sk_all
+    assert resolve_shock(scen, SKEWED.with_shock(sk_cls)) is sk_cls
+    with pytest.raises(ValueError):
+        resolve_shock(scen.with_shock(sk_all), SKEWED.with_shock(sk_cls))
+    # with_shock preserves the canonical mix fields bit-for-bit.
+    m2 = SKEWED.with_shock(sk_cls)
+    assert m2.weights == SKEWED.weights and m2.classes == SKEWED.classes
+
+
+def test_shock_clock_is_shared_and_lazy():
+    clock = ShockClock(1.0 / 600.0, np.random.default_rng(0))
+    e5 = clock.epoch(5)
+    assert clock.epoch(0) < clock.epoch(1) < e5
+    assert clock.epoch(5) == e5  # cached, not re-drawn
+    assert ShockClock(0.0, np.random.default_rng(0)).epoch(0) == np.inf
+
+
+# --------------------------------------------------- exactness contracts
+def _grid_cells(scen, n=2):
+    store = StoreSpec(R=3, transfer=TM)
+    pols = [
+        PolicyConfig(kind="adaptive", prior_mu=PRIOR_MU, prior_v=V),
+        PolicyConfig(kind="fixed", fixed_T=900.0),
+        PolicyConfig(kind="oracle"),
+        PolicyConfig(kind="adaptive", prior_mu=PRIOR_MU, prior_v=V,
+                     regime="isolated"),
+        PolicyConfig(kind="adaptive", prior_mu=PRIOR_MU, prior_v=V,
+                     regime="gossip", gossip_period=600.0),
+    ]
+    return [CellSpec(scenario=scen, policy=pol, seed=s, k=8,
+                     work=3 * 3600.0, V=V, T_d=TD, store=st, mix=m)
+            for pol in pols for s in range(n)
+            for st in (None, store) for m in (None, SKEWED)]
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_shock_rate_zero_is_bit_identical(backend):
+    """The acceptance property: attaching a rate-0 ShockSpec reproduces
+    the pre-shock path BIT-exactly on both backends — across policies,
+    estimator regimes, store cells, and class mixes (every shock carry is
+    an additive 0.0 term, and the per-event dedicated streams are spawned,
+    not drawn, from the main rng)."""
+    if backend == "jax":
+        pytest.importorskip("jax")
+    scen = scenario("diurnal", mtbf=MTBF)
+    a = run_cells(_grid_cells(scen), backend=backend)
+    b = run_cells(_grid_cells(scen.with_shock(
+        ShockSpec(rate=0.0, kill_frac=0.5))), backend=backend)
+    for field in ("wall_time", "work_required", "n_checkpoints", "n_failures",
+                  "wasted_work", "checkpoint_time", "restore_time",
+                  "completed", "server_bytes", "n_server_restores",
+                  "n_peer_restores"):
+        np.testing.assert_array_equal(getattr(a, field), getattr(b, field),
+                                      err_msg=field)
+
+
+def test_shocked_cells_do_not_perturb_unshocked_batchmates():
+    """Composition invariance: adding shocked cells to a batch must not
+    change the realizations of the unshocked cells sharing it (the shock
+    carry consumes no extra noise stream)."""
+    scen = scenario("constant", mtbf=MTBF)
+    pol = PolicyConfig(kind="adaptive", prior_mu=PRIOR_MU, prior_v=V)
+    plain = [CellSpec(scenario=scen, policy=pol, seed=s, k=8,
+                      work=3 * 3600.0, V=V, T_d=TD) for s in range(4)]
+    shocked = [CellSpec(scenario=scen.with_shock(SHOCK), policy=pol, seed=s,
+                        k=8, work=3 * 3600.0, V=V, T_d=TD,
+                        store=StoreSpec(R=3, transfer=TM), mix=SKEWED)
+               for s in range(4)]
+    alone = run_cells(plain, backend="numpy")
+    mixed = run_cells(plain + shocked, backend="numpy")
+    np.testing.assert_array_equal(alone.wall_time, mixed.wall_time[:4])
+    np.testing.assert_array_equal(alone.n_failures, mixed.n_failures[:4])
+
+
+def test_class_scoped_shock_is_order_invariant():
+    """Same population and the same class-targeted shock, classes written
+    in the opposite order: bit-equal results (scope masks ride the
+    canonical name-sorted slot assignment)."""
+    c1 = PeerClass("stable")
+    c2 = PeerClass("volatile", hazard_mult=4.0, speed=0.5, uplink_mult=0.25)
+    sk = ShockSpec(rate=1.0 / 1800.0, kill_frac=0.5, scope="volatile")
+    m_fwd = PeerClassMix((c1, c2), (0.75, 0.25)).with_shock(sk)
+    m_rev = PeerClassMix((c2, c1), (0.25, 0.75)).with_shock(sk)
+    scen = scenario("constant", mtbf=MTBF)
+    store = StoreSpec(R=3, transfer=TM)
+    pol = PolicyConfig(kind="adaptive", prior_mu=PRIOR_MU, prior_v=V)
+    mk = lambda m: [CellSpec(scenario=scen, policy=pol, seed=s, k=8,
+                             work=2 * 3600.0, V=V, T_d=TD, store=store, mix=m)
+                    for s in range(3)]
+    a = run_cells(mk(m_fwd), backend="numpy")
+    b = run_cells(mk(m_rev), backend="numpy")
+    for field in ("wall_time", "n_failures", "server_bytes", "restore_time"):
+        np.testing.assert_array_equal(getattr(a, field), getattr(b, field),
+                                      err_msg=field)
+
+
+def test_shocked_cells_never_macro_step():
+    """The macro-step carve-out (satellite audit): a burst must never
+    straddle a shock epoch, so shocked cells run exact steps at ANY
+    macro threshold — results are bit-identical across thresholds, while
+    the unshocked twin batch does engage the fast path."""
+    scen = scenario("constant", mtbf=600.0)
+    bad_prior = 1.0 / (64.0 * 600.0)
+    mk = lambda sc: [CellSpec(scenario=sc,
+                              policy=PolicyConfig(kind="adaptive",
+                                                  prior_mu=bad_prior,
+                                                  prior_v=V),
+                              seed=s, k=16, work=1800.0, V=V, T_d=TD,
+                              max_wall_time=400 * 3600.0)
+                     for s in range(8)]
+    shocked = scen.with_shock(ShockSpec(rate=1.0 / 900.0, kill_frac=0.3))
+    exact = run_cells(mk(shocked), backend="numpy", macro_threshold=0.0)
+    fast = run_cells(mk(shocked), backend="numpy", macro_threshold=0.05)
+    for field in ("wall_time", "n_failures", "wasted_work", "restore_time",
+                  "n_checkpoints", "completed"):
+        np.testing.assert_array_equal(getattr(exact, field),
+                                      getattr(fast, field), err_msg=field)
+    # The carve-out is doing the work: the unshocked twin DOES take the
+    # macro fast path (different draws, so realizations shift — exactly
+    # what must NOT happen for shocked cells).
+    plain_exact = run_cells(mk(scen), backend="numpy", macro_threshold=0.0)
+    plain_fast = run_cells(mk(scen), backend="numpy", macro_threshold=0.05)
+    assert not np.array_equal(plain_exact.wall_time, plain_fast.wall_time)
+
+
+# ------------------------------------------------- per-event shock processes
+def test_churn_network_mass_kill_rate_and_bursts():
+    """Marginal per-slot death rate is mu + rate*kill_frac, and shock
+    epochs appear as multi-death bursts at identical timestamps."""
+    shock = ShockSpec(rate=1.0 / 1800.0, kill_frac=0.4)
+    scen = scenario("constant", mtbf=MTBF).with_shock(shock)
+    net = ChurnNetwork.from_scenario(scen, 64, np.random.default_rng(0))
+    horizon = 150_000.0
+    evs = list(net.deaths_until(horizon))
+    rate = len(evs) / horizon / 64
+    expect = 1.0 / MTBF + shock.rate * shock.kill_frac
+    assert rate == pytest.approx(expect, rel=0.06)
+    from collections import Counter
+    bursts = [c for c in Counter(e.time for e in evs).values() if c > 1]
+    # ~83 epochs, each killing Binomial(64, 0.4) >= 2 slots essentially
+    # always — dozens of simultaneous-death timestamps.
+    assert len(bursts) > 40
+    assert max(bursts) > 10  # a 0.4 kill of 64 slots is a BIG burst
+
+
+def test_class_scoped_shock_kills_only_that_class():
+    sk = ShockSpec(rate=1.0 / 600.0, kill_frac=1.0, scope="volatile")
+    mix = peer_class_mix("two_class", frac_volatile=0.25, hazard_ratio=1.0)
+    scen = scenario("constant", mtbf=1e9)  # background churn ~ never
+    net = ChurnNetwork.from_scenario(scen.with_shock(sk), 16,
+                                     np.random.default_rng(0), mix=mix)
+    assign = mix.assign(16)
+    vol = [c.name for c in mix.classes].index("volatile")
+    deaths = list(net.deaths_until(50_000.0))
+    assert len(deaths) > 50
+    assert all(assign[e.slot] == vol for e in deaths)
+
+
+def test_replica_process_matches_shock_closed_forms():
+    """The exact closed-form cross-check (overlay.py): long-run holder
+    availability equals shock_availability, and the survivor count right
+    after an epoch is depleted to ~A*(1-f) per holder — the post-shock
+    branch of the mixture law."""
+    shock = ShockSpec(rate=1.0 / 1800.0, kill_frac=0.4)
+    mu, t_rep, R = 1.0 / MTBF, 900.0, 6
+    clock = ShockClock(shock.rate, np.random.default_rng(1))
+    proc = ReplicaSetProcess(R, lambda t: MTBF, t_rep,
+                             np.random.default_rng(2), shock=shock,
+                             shock_clock=clock)
+    A = shock_availability(mu, t_rep, shock.rate, shock.kill_frac)
+    T = 2_000_000.0
+    stat = np.mean([proc.n_alive(t) for t in np.linspace(500.0, T, 3000)]) / R
+    assert stat == pytest.approx(A, abs=0.015)
+    # Fresh process: sample immediately after each epoch.
+    clock2 = ShockClock(shock.rate, np.random.default_rng(1))
+    proc2 = ReplicaSetProcess(R, lambda t: MTBF, t_rep,
+                              np.random.default_rng(2), shock=shock,
+                              shock_clock=clock2)
+    post = []
+    i = 0
+    while clock2.epoch(i) < T:
+        post.append(proc2.n_alive(clock2.epoch(i) + 1e-6))
+        i += 1
+    post_mean = np.mean(post) / R
+    assert post_mean == pytest.approx(A * (1.0 - shock.kill_frac), abs=0.02)
+    # And the mixture pmf itself: sums to 1, reduces to Binomial at q=0,
+    # and correlation strictly depletes the expected survivor count.
+    pmf = shock_survivor_pmf(R, mu, t_rep, shock.rate, shock.kill_frac,
+                             job_fail_rate=16.0 * mu, job_kill_prob=0.9)
+    assert pmf.sum() == pytest.approx(1.0)
+    pmf0 = shock_survivor_pmf(R, mu, t_rep, 0.0, 0.0,
+                              job_fail_rate=16.0 * mu, job_kill_prob=0.0)
+    m = np.arange(R + 1)
+    A0 = 1.0 / (1.0 + mu * t_rep)
+    assert (pmf0 * m).sum() == pytest.approx(R * A0)
+    assert (pmf * m).sum() < (pmf0 * m).sum()
+
+
+# ------------------------------------------------- restore-path bugfixes
+def test_restore_retries_censor_instead_of_spinning():
+    """Regression (the restore-path bugfix): when churn is faster than the
+    restore time, retries used to continue far past max_wall_time because
+    censoring was only checked at the top of the work loop — expected
+    overshoot grows like exp(rate*T_d) retries.  Both engines must now
+    censor inside the retry loop, reporting a lower-bound wall time near
+    the horizon."""
+    scen = scenario("constant", mtbf=1000.0)  # k=16 -> job MTBF 62.5 s
+    max_wall = 2000.0
+    rng = np.random.default_rng(0)
+    net = ChurnNetwork.from_scenario(scen, 64, rng)
+    r = simulate_job(network=net, policy=FixedIntervalPolicy(600.0), k=16,
+                     work_required=24 * 3600.0, V=V, T_d=500.0,
+                     max_wall_time=max_wall)
+    assert not r.completed
+    assert r.wall_time <= 2.0 * max_wall  # one in-flight retry of slack
+    # Engine, exact path (macro_threshold=0 — the mode the heap is
+    # comparable to; the macro closed form deliberately folds a whole
+    # retry burst into one step and reports ITS end as the censored
+    # lower bound, which is bounded in steps but not in simulated time).
+    cells = [CellSpec(scenario=scen,
+                      policy=PolicyConfig(kind="fixed", fixed_T=600.0),
+                      seed=s, k=16, work=24 * 3600.0, V=V, T_d=500.0,
+                      max_wall_time=max_wall) for s in range(4)]
+    res = run_cells(cells, backend="numpy", macro_threshold=0.0)
+    assert (~res.completed).all()
+    assert (res.wall_time <= 2.0 * max_wall).all()
+    # Default threshold still terminates in a handful of steps and censors.
+    fast = run_cells(cells, backend="numpy")
+    assert (~fast.completed).all()
+    assert fast.n_steps < 50
+
+
+def test_all_holders_dead_routes_to_server_fallback():
+    """Satellite regression: a kill_frac=1.0 shock routinely leaves ZERO
+    surviving holders — the restore must come back as the finite server
+    fallback (billed per attempt), never a ZeroDivisionError/inf, on the
+    heap, the engine, and the striping law itself."""
+    assert TM.restore_seconds_from([]) == TM.server_seconds()
+    assert np.isfinite(TM.restore_seconds_from([]))
+    shock = ShockSpec(rate=1.0 / 3600.0, kill_frac=1.0)
+    scen = scenario("constant", mtbf=MTBF)
+    spec = StoreSpec(R=3, t_repair=900.0, transfer=TM)
+    work = 4 * 3600.0
+    res = run_cells([CellSpec(scenario=scen.with_shock(shock),
+                              policy=PolicyConfig(kind="fixed", fixed_T=900.0),
+                              seed=s, k=16, work=work, V=V,
+                              T_d=spec.td_server, store=spec)
+                     for s in range(4)], backend="numpy")
+    assert np.isfinite(res.wall_time).all()
+    assert (res.n_server_restores > 0).all()  # post-shock restores: no peers
+    assert (res.server_bytes
+            >= TM.img_bytes * res.n_server_restores - 1e-6).all()
+    # Heap twin with the SHARED clock (job failures coincide with holder
+    # wipeouts — the correlation under test).
+    for s in range(2):
+        clock = ShockClock(shock.rate, np.random.default_rng(
+            np.random.SeedSequence([s, SHOCK_STREAM])))
+        net = ChurnNetwork.from_scenario(scen.with_shock(shock), 128,
+                                         np.random.default_rng(s),
+                                         shock_clock=clock)
+        st = P2PCheckpointStore(spec, scen.mtbf,
+                                np.random.default_rng(10_000 + s),
+                                shock=shock, shock_clock=clock)
+        r = simulate_job(network=net, policy=FixedIntervalPolicy(900.0), k=16,
+                         work_required=work, V=V, T_d=0.0, store=st,
+                         max_wall_time=50 * work)
+        assert np.isfinite(r.wall_time)
+        assert r.n_server_restores > 0
+
+
+def test_workflow_edge_fetch_survives_total_wipeout_as_waste():
+    """A shocked hand-off edge with kill_frac=1.0 falls back to the server
+    (per-attempt billing) and books retry time as handoff_waste — the
+    workflow completes or censors, never errors."""
+    shock = ShockSpec(rate=1.0 / 1800.0, kill_frac=1.0)
+    scen = scenario("constant", mtbf=MTBF).with_shock(shock)
+    store = StoreSpec(R=2, t_repair=900.0, transfer=TM)
+    spec = WorkflowSpec(stages=(
+        Stage("a", work=1800.0, k=8),
+        Stage("b", work=1800.0, k=8, deps=("a",)),
+    ))
+    res = simulate_workflow(spec, scen, seeds=range(4), V=V, T_d=TD,
+                            backend="numpy", store=store)
+    b = res.stages["b"]
+    assert np.isfinite(b.handoff_time).all()
+    assert (b.server_bytes > 0).any()  # wiped edges hit the server pipe
+
+
+def test_partial_scope_on_trivial_mix_shocks_only_its_group():
+    """Regression (review finding): a class scope on a TRIVIAL multi-class
+    mix — partition groups of identical machines — must shock only that
+    group's holders, not the whole fleet.  With two equal groups the
+    engine's per-class law is symmetric in which group is named (bit-equal
+    results), and a partial scope is strictly gentler than the fleet-wide
+    scope, strictly harsher than no shock."""
+    groups = PeerClassMix((PeerClass("east"), PeerClass("west")), (0.5, 0.5))
+    assert groups.is_trivial
+    scen = scenario("constant", mtbf=MTBF)
+    spec = StoreSpec(R=4, t_repair=900.0, transfer=TM)
+    mk = lambda sk: [CellSpec(scenario=scen if sk is None
+                              else scen.with_shock(sk),
+                              policy=PolicyConfig(kind="fixed", fixed_T=900.0),
+                              seed=s, k=8, work=3 * 3600.0, V=V,
+                              T_d=spec.td_server, store=spec, mix=groups)
+                     for s in range(6)]
+    rate, f = 1.0 / 900.0, 1.0
+    east = run_cells(mk(ShockSpec(rate, f, scope="east")), backend="numpy")
+    west = run_cells(mk(ShockSpec(rate, f, scope="west")), backend="numpy")
+    both = run_cells(mk(ShockSpec(rate, f, scope="all")), backend="numpy")
+    none = run_cells(mk(None), backend="numpy")
+    # Equal identical groups: naming either one is the same law, bit-for-bit.
+    np.testing.assert_array_equal(east.wall_time, west.wall_time)
+    np.testing.assert_array_equal(east.n_server_restores,
+                                  west.n_server_restores)
+    # Partial scope sits strictly between no shock and the full wave: a
+    # fleet-wide kill_frac=1.0 wipes every holder at each shock-caused
+    # restore (certain server fallback), the half-fleet scope leaves the
+    # other group serving, no shock leaves the i.i.d. law.
+    # (n_failures is NOT ordered here: at kill_frac=1.0 a single in-scope
+    # job peer already makes every epoch a job kill, so both scopes run
+    # the same job-failure law and differ only in holder depletion.)
+    assert (none.n_server_restores.mean()
+            < east.n_server_restores.mean()
+            < both.n_server_restores.mean())
+
+
+def test_workflow_handoff_partial_scope_trivial_mix_hits_holders():
+    """Regression (review finding): the hand-off fetch path used to
+    collapse a trivial multi-class mix onto the homogeneous path for a
+    class scope naming the first-sorted class, silently dropping the
+    holder kills.  With the dependency's single holder in scope and
+    near-certain shock-triggered fetches, every seed must hit the server
+    fallback."""
+    groups = PeerClassMix((PeerClass("east"), PeerClass("west")), (0.5, 0.5))
+    sk = ShockSpec(rate=1.0 / 30.0, kill_frac=1.0, scope="east")
+    scen = scenario("constant", mtbf=MTBF)
+    store = StoreSpec(R=1, t_repair=600.0, transfer=TM)
+    assert groups.assign(store.R) == (0,)  # the lone holder IS in scope
+    spec = WorkflowSpec(stages=(
+        Stage("a", work=900.0, k=8),
+        Stage("b", work=900.0, k=8, deps=("a",)),
+    ))
+    res = simulate_workflow(spec, scen.with_shock(sk), seeds=range(4), V=V,
+                            T_d=TD, backend="numpy", store=store, mix=groups)
+    b = res.stages["b"]
+    assert (b.server_bytes >= TM.img_bytes).all()
+    assert np.isfinite(b.handoff_time).all()
+
+
+# ---------------------------------------------------- workflow & sweep layer
+def test_workflow_per_stage_shock_and_rate_zero_identity():
+    scen = scenario("constant", mtbf=MTBF)
+    spec = WorkflowSpec(stages=(
+        Stage("calm", work=2 * 3600.0, k=8),
+        Stage("stormy", work=2 * 3600.0, k=8,
+              shock=ShockSpec(rate=1.0 / 900.0, kill_frac=0.5)),
+    ))
+    res = simulate_workflow(spec, scen, seeds=range(4), V=V, T_d=TD,
+                            backend="numpy")
+    assert (res.stages["stormy"].sim.n_failures.mean()
+            > 1.5 * res.stages["calm"].sim.n_failures.mean())
+
+    plain = WorkflowSpec(stages=(
+        Stage("a", work=1800.0, k=8),
+        Stage("b", work=1800.0, k=8, deps=("a",), handoff=120.0),
+    ))
+    r0 = simulate_workflow(plain, scen, seeds=range(3), V=V, T_d=TD,
+                           backend="numpy")
+    r1 = simulate_workflow(
+        plain, scen.with_shock(ShockSpec(rate=0.0, kill_frac=0.5)),
+        seeds=range(3), V=V, T_d=TD, backend="numpy")
+    np.testing.assert_array_equal(r0.makespan, r1.makespan)
+
+
+def test_correlated_churn_sweep_smoke_csv_and_monotonicity():
+    cells = correlated_churn_sweep(
+        scenarios=[scenario("constant", mtbf=MTBF)],
+        shock_rates_per_hour=(0.0, 1.0, 3.0), kill_frac=0.35,
+        seeds=range(4), work=6 * 3600.0, mtbf0=MTBF, backend="numpy")
+    assert [c.shocks_per_hour for c in cells] == [0.0, 1.0, 3.0]
+    assert all(np.isfinite(c.adaptive_wall) and c.adaptive_wall > 0
+               for c in cells)
+    # The experiment's thesis: the fixed interval was tuned for the base
+    # rate, so Eq. 11 advantage grows with shock intensity.
+    rels = [c.relative_runtime for c in cells]
+    assert rels[0] < rels[1] < rels[2]
+    assert cells[2].mean_failures > cells[0].mean_failures
+    rows = shock_csv(cells)
+    assert rows[0].startswith("scenario,shocks_per_hour,")
+    assert len(rows) == 1 + 3
+    assert all(r.count(",") == rows[0].count(",") for r in rows)
+
+
+def test_jax_backend_matches_numpy_for_shocked_cells():
+    pytest.importorskip("jax")
+    scen = scenario("constant", mtbf=MTBF).with_shock(SHOCK)
+    pol = PolicyConfig(kind="adaptive", prior_mu=1.0 / MTBF, prior_v=V)
+    cells = [CellSpec(scenario=scen, policy=pol, seed=s, k=8,
+                      work=3 * 3600.0, V=V, T_d=TD) for s in range(16)]
+    a = run_cells(cells, backend="numpy")
+    b = run_cells(cells, backend="jax")
+    assert b.completed.all()
+    assert b.wall_time.mean() == pytest.approx(a.wall_time.mean(), rel=0.08)
+    assert b.n_failures.mean() == pytest.approx(a.n_failures.mean(), rel=0.15)
+
+
+# ------------------------------------------------- heap-oracle parity (CI)
+def _heap_walls(scen, shock, policy_factory, n, k, work, speed=1.0,
+                store_spec=None):
+    walls = []
+    for s in range(n):
+        rng = np.random.default_rng(s)
+        clock = ShockClock(shock.rate, np.random.default_rng(
+            np.random.SeedSequence([s, SHOCK_STREAM])))
+        net = ChurnNetwork.from_scenario(scen, 128, rng, mix=SKEWED
+                                         if store_spec is None else None,
+                                         shock_clock=clock)
+        st = None
+        td = TD
+        if store_spec is not None:
+            st = P2PCheckpointStore(store_spec, scen.mtbf,
+                                    np.random.default_rng(10_000 + s),
+                                    shock=shock, shock_clock=clock)
+            td = 0.0
+        r = simulate_job(network=net, policy=policy_factory(), k=k,
+                         work_required=work, V=V, T_d=td, speed=speed,
+                         store=st)
+        walls.append(r.wall_time)
+    return np.asarray(walls)
+
+
+def _ci_assert(engine_walls, heap_walls):
+    n, m = len(engine_walls), len(heap_walls)
+    se = np.sqrt(engine_walls.var() / n + heap_walls.var() / m)
+    diff = abs(engine_walls.mean() - heap_walls.mean())
+    assert diff <= 3.0 * se, (engine_walls.mean(), heap_walls.mean(), se)
+
+
+@pytest.mark.parity
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_engine_matches_heap_for_shocked_two_class_pooled(backend):
+    """The acceptance parity bar, pooled regime: a shocked two-class mix,
+    heap mass-kill events vs the engine's superposed-rate carry, 3 sigma,
+    on BOTH backends."""
+    if backend == "jax":
+        pytest.importorskip("jax")
+    scen = scenario("constant", mtbf=MTBF).with_shock(SHOCK)
+    n, k, work = 48, 8, 4 * 3600.0
+    pol = PolicyConfig(kind="adaptive", prior_mu=PRIOR_MU, prior_v=V)
+    res = run_cells([CellSpec(scenario=scen, policy=pol, seed=s, k=k,
+                              work=work, V=V, T_d=TD, mix=SKEWED)
+                     for s in range(n)],
+                    backend=backend, macro_threshold=0.0)
+    assert res.completed.all()
+    heap = _heap_walls(scen, SHOCK, lambda: AdaptivePolicy(
+        AdaptiveCheckpointController(k=k, prior_mu=PRIOR_MU, prior_v=V,
+                                     mu_window=32)),
+        n, k, work, speed=SKEWED.mean_speed(k))
+    _ci_assert(res.wall_time, heap)
+
+
+@pytest.mark.parity
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_engine_matches_heap_for_shocked_two_class_gossip(backend):
+    """Same bar under the gossip estimator regime: shock-death bursts feed
+    the slot-routed per-peer estimators on the heap, the sampled per-share
+    intensities on the engine."""
+    if backend == "jax":
+        pytest.importorskip("jax")
+    scen = scenario("constant", mtbf=MTBF).with_shock(SHOCK)
+    n, k, work = 48, 8, 4 * 3600.0
+    pol = PolicyConfig(kind="adaptive", prior_mu=PRIOR_MU, prior_v=V,
+                       regime="gossip", gossip_period=600.0, gossip_fanout=2)
+    res = run_cells([CellSpec(scenario=scen, policy=pol, seed=s, k=k,
+                              work=work, V=V, T_d=TD, mix=SKEWED)
+                     for s in range(n)],
+                    backend=backend, macro_threshold=0.0)
+    assert res.completed.all()
+    heap = _heap_walls(scen, SHOCK, lambda: GossipAdaptivePolicy.make(
+        k, regime="gossip", period=600.0, fanout=2, weight=0.5,
+        prior_mu=PRIOR_MU, prior_v=V, mu_window=32),
+        n, k, work, speed=SKEWED.mean_speed(k))
+    _ci_assert(res.wall_time, heap)
+
+
+@pytest.mark.parity
+def test_engine_shock_mixture_tracks_shared_clock_heap_store():
+    """Store cells: the engine's closed-form shock-mixture survivor law vs
+    the heap running job churn AND holder wipeouts off ONE shared shock
+    clock.  Wall-time means at 3 sigma; restore sourcing within a band
+    (the mixture models the triggering epoch's depletion exactly but not
+    its ~t_repair persistence — documented in DESIGN.md Sec 8)."""
+    scen = scenario("constant", mtbf=MTBF).with_shock(SHOCK)
+    spec = StoreSpec(R=3, t_repair=900.0, transfer=TM)
+    n, k, work = 48, 16, 4 * 3600.0
+    res = run_cells([CellSpec(scenario=scen,
+                              policy=PolicyConfig(kind="fixed", fixed_T=900.0),
+                              seed=s, k=k, work=work, V=V,
+                              T_d=spec.td_server, store=spec)
+                     for s in range(n)],
+                    backend="numpy", macro_threshold=0.0)
+    assert res.completed.all()
+    heap = _heap_walls(scen, SHOCK,
+                       lambda: FixedIntervalPolicy(900.0), n, k, work,
+                       store_spec=spec)
+    _ci_assert(res.wall_time, heap)
