@@ -71,7 +71,39 @@ def quant_rows() -> List[str]:
     return rows
 
 
+def sim_step_rows() -> List[str]:
+    """Fused Pallas sim-step chunk vs the stock lax.scan chunk body, on a
+    class-pooled gossip batch (the fleet-scale engine's inner loop).
+
+    Two completion profiles: ``uniform`` (every cell carries the same
+    work, so the kernel's per-block early exit never fires — this row
+    bounds the kernel's overhead) and ``skewed`` (one straggler block
+    carries 8x work; the scan body must step the whole batch until the
+    stragglers finish while the fused kernel's finished blocks exit
+    their chunks immediately — the workload the kernel is for)."""
+    from repro.sim import CellSpec, PolicyConfig, run_cells, scenario
+
+    pol = PolicyConfig(kind="adaptive", prior_mu=1.0 / 32000.0, prior_v=20.0,
+                       regime="gossip", gossip_period=600.0, gossip_fanout=2)
+    B = 256
+    rows = []
+    for profile in ("uniform", "skewed"):
+        cells = [CellSpec(scenario=scenario("constant", mtbf=4000.0),
+                          policy=pol, seed=s, k=64, n_slots=256,
+                          work=(8 * 1800.0 if profile == "skewed" and s < 32
+                                else 1800.0), V=20.0, T_d=50.0)
+                 for s in range(B)]
+        t_scan = _time(lambda c: run_cells(c, backend="jax", mesh=None,
+                                           step="scan"), cells)
+        t_fused = _time(lambda c: run_cells(c, backend="jax", mesh=None,
+                                            step="fused"), cells)
+        rows.append(f"sim_step_fused_{profile}_B{B},{t_fused:.0f},"
+                    f"scan_us={t_scan:.0f};"
+                    f"speedup_vs_scan={t_scan / t_fused:.2f}x")
+    return rows
+
+
 def run_all() -> List[str]:
     rows = ["name,us_per_call,derived"]
-    rows += flash_rows() + ssd_rows() + quant_rows()
+    rows += flash_rows() + ssd_rows() + quant_rows() + sim_step_rows()
     return rows

@@ -3,7 +3,7 @@
 One section per paper table/figure plus the framework benches.  Prints
 ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig4,fig5,kernels,e2e,roofline,offload,gossip,hetero,shocks]
+    PYTHONPATH=src python -m benchmarks.run [--only fig4,fig5,kernels,e2e,roofline,offload,gossip,hetero,shocks,fleet]
 """
 from __future__ import annotations
 
@@ -16,7 +16,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig5,kernels,e2e,roofline,offload,"
-                         "gossip,hetero,shocks")
+                         "gossip,hetero,shocks,fleet")
     ap.add_argument("--fast", action="store_true",
                     help="tiny smoke grids (CI): fewer seeds/intervals, short jobs")
     args = ap.parse_args()
@@ -85,6 +85,14 @@ def main() -> None:
         for row in correlated_churn.run_all(fast=args.fast)[1:]:
             print(row, flush=True)
         sys.stderr.write(f"[bench] correlated_churn done in "
+                         f"{time.monotonic() - t:.0f}s\n")
+
+    if want("fleet"):
+        from benchmarks import fleet
+        t = time.monotonic()
+        for row in fleet.run_all(fast=args.fast)[1:]:
+            print(row, flush=True)
+        sys.stderr.write(f"[bench] fleet done in "
                          f"{time.monotonic() - t:.0f}s\n")
 
     if want("roofline"):

@@ -42,3 +42,15 @@ def local_mesh_for_testing(n_devices: Optional[int] = None) -> Mesh:
     devs = jax.devices()
     n = len(devs) if n_devices is None else n_devices
     return jax.make_mesh((1, n), (DATA_AXIS, MODEL_AXIS))
+
+
+def cell_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """A 1-D data mesh for sharding simulation cell batches.
+
+    ``sim/engine.py`` resolves its ``cell`` logical axis against this
+    (``run_cells(mesh=...)``; the ``"auto"`` default builds one over every
+    local device when more than one is present — e.g. under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+    """
+    n = len(jax.devices()) if n_devices is None else n_devices
+    return jax.make_mesh((n,), (DATA_AXIS,))

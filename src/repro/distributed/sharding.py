@@ -151,6 +151,17 @@ def resolve_rules(mesh: Mesh, dims: Dict[str, int]) -> ShardingRules:
     table["embed"] = ()
     table["layers"] = ()
     table["conv"] = ()
+
+    # --- simulation cell batch (sim/engine.py fleet-scale path) --------------
+    # Cells are embarrassingly parallel, so the cell axis takes every
+    # data-parallel device it divides: (pod, data) -> (data,) -> replicated.
+    if _fits(dims.get("cell"), mesh, dp_axes):
+        table["cell"] = dp_axes
+    elif (DATA_AXIS in mesh.axis_names
+          and _fits(dims.get("cell"), mesh, (DATA_AXIS,))):
+        table["cell"] = (DATA_AXIS,)
+    else:
+        table["cell"] = ()
     return ShardingRules(table=table)
 
 

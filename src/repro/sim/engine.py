@@ -70,11 +70,32 @@ cell, ``PolicyConfig.regime``:
   re-seeded at the merged value (mirroring
   ``AdaptiveCheckpointController.ingest_gossip``).
 
-Per-peer estimator state (``ema_d``/``ema_T``/``mu0``/``td_obs``) is
-carried on a trailing peer axis sized ``_PEER_CAP`` whenever any cell in
-the batch runs a non-pooled regime (1 otherwise); per-peer observation
-noise comes from a dedicated stream per seed so a cell's realization
-still never depends on batch composition.
+Non-pooled regimes carry their estimator state in one of two *forms*:
+
+* **per-peer** (``k <= _PEER_CAP``) — ``ema_d``/``ema_T``/``mu0``/``td_obs``
+  carry a trailing peer axis sized ``_PEER_CAP`` whenever any cell in the
+  batch runs this form (1 otherwise); per-peer observation noise comes
+  from a dedicated stream per seed so a cell's realization never depends
+  on batch composition.  This is the exact reference — and the parity
+  oracle for:
+* **class-pooled** (any ``k``; automatic above ``_PEER_CAP``, forceable
+  via ``run_cells(peer_form=...)``) — the fleet-scale form (DESIGN.md
+  Sec 9).  Only the *decision peer* (slot 0) keeps a sampled estimator
+  row; the other ``k-1`` peers are exchangeable within their peer class
+  and are carried as per-class sufficient-statistic moments
+  (``pm_d``/``pm_T``/``pm_mu0``, width ``_CLS_CAP``) evolved in
+  expectation, plus one scalar population variance ``pm_v`` of the peer
+  point estimates.  A gossip pull then samples the remote mean from the
+  pooled population with the *exact within-class exchangeability
+  correction* — the without-replacement variance factor
+  ``(N-F)/(N-1)/F`` for ``F`` fanout draws from the ``N = k-1`` other
+  exchangeable peers — instead of materializing per-peer rows.  Isolated
+  cells are exact in this form (nothing is exchanged, and the decision
+  peer's law is unchanged); gossip cells replace the per-peer remote
+  mean with its mean-field moment law, validated 3-sigma against the
+  per-peer form and the heap oracle (tests/test_fleet.py).  Class-pooled
+  noise comes from a third dedicated stream per seed (``_PM_STREAM``),
+  so the form is batch-composition-invariant like everything else.
 
 **Heterogeneous peer fleets** (DESIGN.md Sec 7): a cell carrying a
 :class:`repro.sim.scenarios.PeerClassMix` stops treating its peers as
@@ -158,6 +179,28 @@ striping) or ``td_server`` when all replicas are lost (server fallback),
 and the engine accounts the aggregate server I/O each cell imposes.
 Store cells never macro-step: the burst closed form assumes a constant
 restore time, so their survival threshold is treated as 0.
+
+**Fleet-scale execution** (DESIGN.md Sec 9): the cell batch itself scales
+with hardware, not with Python:
+
+* **Cell sharding** — on the JAX backend the batch is sharded over the
+  data axes of a device mesh with ``jax.shard_map`` (``run_cells(mesh=)``;
+  ``"auto"`` builds a 1-D mesh over every local device).  Cells are
+  independent, so the per-shard program is the unmodified chunk body with
+  no collectives; the batch is padded to the mesh's data extent and the
+  padding sliced off the result.  The host-side completion check is
+  sharding-aware: each chunk returns its global unfinished count as a
+  replicated scalar, so the early-exit loop never gathers the sharded
+  state.
+* **Fused step kernel** — ``run_cells(step="fused")`` runs the branchless
+  ``_attempt`` -> ``_replica_draw`` -> ``_apply`` inner step as one Pallas
+  kernel (:mod:`repro.kernels.sim_step`) that keeps the whole carried
+  state in VMEM across a chunk of steps and exits early once its block's
+  cells are all finished (the stock ``lax.scan`` body, the default,
+  cannot).  The kernel consumes pre-generated per-step draws from the
+  same key chain as the scan body, so the two paths are bit-identical on
+  supported batches (no per-peer-form cells); on CPU it falls back to
+  interpret mode.
 """
 from __future__ import annotations
 
@@ -197,22 +240,41 @@ except Exception:  # pragma: no cover
 _E = math.e
 _POLICY_IDS = {"fixed": 0, "adaptive": 1, "oracle": 2}
 _REGIME_IDS = {"pooled": 0, "isolated": 1, "gossip": 2}
-_CHUNK = 256   # lax.scan steps per jitted call; host checks completion between
+DEFAULT_CHUNK = 256
+"""Engine steps per jitted call on the JAX backend.
+
+The host loop checks global completion between chunks, so the chunk size
+trades compile size and dispatch overhead against wasted post-completion
+steps: a larger chunk amortizes dispatch over more steps but runs up to
+``chunk - 1`` no-op steps after the last cell finishes.  Override per run
+with ``run_cells(chunk=...)`` or process-wide with the
+``REPRO_SIM_CHUNK`` environment variable (the keyword wins).  The NumPy
+backend checks completion every step and ignores this knob.
+"""
 _LW_ITERS = 4  # Halley iterations for the per-step W0 (cubic convergence:
                # 3 reaches 1e-14 over the paper's argument range; one spare)
 _MACRO_CAP = 1e9  # absolute bound on failures folded into one macro step
 _RNG_BLOCK = 256  # numpy backend: uniforms/normals pregenerated per seed
-_PEER_CAP = 32    # peer-axis width for per-peer estimator regimes; fixed (not
-                  # the batch max) so a cell's observation noise is invariant
-                  # to batch composition
+_PEER_CAP = 32    # peer-axis width for the per-peer estimator FORM (the
+                  # exact small-k reference; class-pooled moments carry any
+                  # larger k).  Fixed (not the batch max) so a cell's
+                  # observation noise is invariant to batch composition.
 _FANOUT_CAP = 8   # static unroll bound for the gossip pull loop
 _POIS_TERMS = 16  # inverse-CDF unroll terms for per-peer death sampling
 _POIS_SWITCH = 6.0  # switch to the clipped-normal approximation above this
                     # mean (P[X > 16 | lam = 6] ~ 1e-4, clip bias < 1%)
 _OBS_STREAM = 0x6F627376  # numpy backend: per-seed tag of the secondary
                           # stream feeding per-peer observation noise
+_PM_STREAM = 0x706D6573   # per-seed tag ("pmes") of the dedicated stream
+                          # feeding class-pooled estimator noise (decision-
+                          # row deaths + gossip-pull normal), so pooled-form
+                          # cells are batch-composition-invariant too
 _CLS_CAP = 4      # max peer classes whose replica holders a store cell can
-                  # carry (per-class availability columns in the step)
+                  # carry (per-class availability columns in the step); also
+                  # the class axis of the class-pooled estimator moments
+_EXACT_AGG_MAX = 4096  # watch sizes up to this use exact per-slot class
+                       # aggregates in _pack; larger fleets take the O(1)
+                       # closed forms (O(1/n) quota discretization error)
 
 
 @dataclass(frozen=True)
@@ -384,16 +446,25 @@ class _Params(NamedTuple):
     shock_f: np.ndarray      # holder kill fraction (homogeneous store cells)
     cls_f: np.ndarray        # [B, _CLS_CAP] holder kill fraction per class
     shocked: np.ndarray      # bool: rate > 0 (disables macro-stepping)
+    pm_on: np.ndarray        # bool: estimator carried in class-pooled form
+    pm_nc: np.ndarray        # [B, _CLS_CAP] non-decision peers per class
+    pm_rate: np.ndarray      # [B, _CLS_CAP] mean watch-share hazard mult of
+                             # a class-c peer (fleet mean for huge fleets)
+    pm_shock: np.ndarray     # [B, _CLS_CAP] E[shock deaths/epoch] seen by a
+                             # class-c peer's watch share
 
 
 class _State(NamedTuple):
     """Per-cell mutable simulation state (floats for jit).
 
-    All arrays are shape [B] except the per-peer estimator state
-    (``ema_d``/``ema_T``/``mu0``/``td_obs``), which carries a trailing
-    peer axis of width 1 (all-pooled batches) or ``_PEER_CAP``.  Peer
-    slot 0 is the *decision peer*: the job's checkpoint interval is
-    computed from its estimates in every regime.
+    All arrays are shape [B] except the estimator state: ``ema_d`` /
+    ``ema_T`` / ``mu0`` / ``td_obs`` carry a trailing peer axis of width
+    ``_PEER_CAP`` when any cell in the batch runs the per-peer form
+    (width 1 otherwise), and the class-pooled moments ``pm_d`` / ``pm_T``
+    / ``pm_mu0`` carry a trailing class axis of width ``_CLS_CAP`` (inert
+    zeros for cells not in that form).  Peer slot 0 is the *decision
+    peer*: the job's checkpoint interval is computed from its estimates
+    in every regime and both forms.
     """
 
     t: np.ndarray            # absolute wall clock (starts at t0)
@@ -417,22 +488,67 @@ class _State(NamedTuple):
     sv_bytes: np.ndarray     # server I/O imposed so far
     n_srv: np.ndarray        # restores served by the server fallback
     n_peer: np.ndarray       # restores served from peer replicas
+    pm_d: np.ndarray         # [B, _CLS_CAP] class-mean decayed death count
+    pm_T: np.ndarray         # [B, _CLS_CAP] class-mean decayed exposure
+    pm_mu0: np.ndarray       # [B, _CLS_CAP] class prior center (gossip
+                             # rounds re-seed it at the merged estimate)
+    pm_v: np.ndarray         # population variance of the k-1 non-decision
+                             # peers' point estimates (class-pooled form)
 
 
-def _pack(cells: Sequence[CellSpec]) -> _Params:
+def _scope_weight(sk: ShockSpec, mix: Optional[PeerClassMix]) -> float:
+    """Fraction of slots a shock's scope covers under the mix's quota
+    assignment — the O(1) closed form of ``mean(scope_mask)`` (exact up to
+    the O(1/n) quota discretization the mask itself carries).  Replicates
+    ``scope_mask``'s scope validation so huge fleets fail identically."""
+    if sk.scope == "all":
+        return 1.0
+    if mix is None:
+        raise ValueError(
+            f"class-scoped shock {sk.scope!r} needs a PeerClassMix")
+    names = [pc.name for pc in mix.classes]
+    if sk.scope not in names:
+        raise ValueError(
+            f"shock scope {sk.scope!r} names no class of the mix "
+            f"{sorted(names)}")
+    return float(mix.weights[names.index(sk.scope)])
+
+
+def _pack(cells: Sequence[CellSpec], peer_form: str = "auto") -> _Params:
     B = len(cells)
     if B == 0:
         raise ValueError("need at least one cell")
+    if peer_form not in ("auto", "perpeer", "pm"):
+        raise ValueError(f"unknown peer_form {peer_form!r}")
     f = lambda vals: np.asarray(vals, dtype=np.float64)
     watch = [min(4 * c.k, c.n_slots) if c.watch is None
              else min(c.watch, c.n_slots) for c in cells]
+    # Which estimator form carries each non-pooled cell (module docstring):
+    # per-peer rows up to _PEER_CAP, class-pooled moments beyond — or force
+    # one form batch-wide with peer_form ("perpeer" keeps the historical
+    # hard cap; "pm" is how the parity suite pits the forms against each
+    # other at small k).
+    pm_on_l = []
+    for c in cells:
+        nonpooled = c.policy.regime != "pooled"
+        if peer_form == "pm":
+            pm = nonpooled
+        else:
+            pm = nonpooled and c.k > _PEER_CAP
+            if pm and peer_form == "perpeer":
+                raise ValueError(
+                    f"per-peer estimator form supports k <= {_PEER_CAP}, "
+                    f"got k={c.k} (use peer_form='auto' or 'pm' for the "
+                    f"class-pooled form)")
+        if (pm and c.mix is not None and not c.mix.is_trivial
+                and len(c.mix) > _CLS_CAP):
+            raise ValueError(
+                f"class-pooled estimator supports mixes of <= {_CLS_CAP} "
+                f"classes, got {len(c.mix)}")
+        pm_on_l.append(pm)
     for c in cells:
         if c.k > c.n_slots:
             raise ValueError(f"job needs {c.k} slots but network has {c.n_slots}")
-        if c.policy.regime != "pooled" and c.k > _PEER_CAP:
-            raise ValueError(
-                f"per-peer estimator regimes support k <= {_PEER_CAP}, "
-                f"got k={c.k}")
         if (c.mix is not None and c.store is not None
                 and not c.mix.is_trivial and len(c.mix) > _CLS_CAP):
             raise ValueError(
@@ -455,12 +571,24 @@ def _pack(cells: Sequence[CellSpec]) -> _Params:
             hsum_job[i] = float(c.k)
             hsum_watch[i] = float(watch[i])
             continue
-        hm = np.asarray(mix.hazard_mults(watch[i]))
-        hsum_job[i] = math.fsum(hm[:c.k])
-        hsum_watch[i] = math.fsum(hm)
-        speed[i] = mix.mean_speed(c.k)
-        for j in range(min(c.k, _PEER_CAP)):
-            hmean_peer[i, j] = float(np.mean(hm[j::c.k]))
+        if watch[i] <= _EXACT_AGG_MAX:
+            hm = np.asarray(mix.hazard_mults(watch[i]))
+            hsum_job[i] = math.fsum(hm[:c.k])
+            hsum_watch[i] = math.fsum(hm)
+            speed[i] = mix.mean_speed(c.k)
+            for j in range(min(c.k, _PEER_CAP)):
+                hmean_peer[i, j] = float(np.mean(hm[j::c.k]))
+        else:
+            # Fleet-scale closed forms: the quota assignment puts weight
+            # w_c of any long slot range in class c (±1 slot), so every
+            # aggregate collapses to a weight-dot — O(#classes) instead of
+            # O(watch) Python, with O(1/watch) discretization error.
+            w = np.asarray(mix.weights)
+            hbar = float(w @ [pc.hazard_mult for pc in mix.classes])
+            hsum_job[i] = c.k * hbar
+            hsum_watch[i] = watch[i] * hbar
+            speed[i] = float(w @ [pc.speed for pc in mix.classes])
+            hmean_peer[i, :min(c.k, _PEER_CAP)] = hbar
         if c.store is not None and c.store.R > 0:
             store_mix[i] = True
             for cls_idx in mix.assign(c.store.R):
@@ -483,19 +611,32 @@ def _pack(cells: Sequence[CellSpec]) -> _Params:
         sk = _cell_shock(c)
         if sk is None:
             continue
-        # Validates class scopes against the cell's mix; the mask over the
-        # watch prefix also covers the k job slots (prefix assignment).
-        mask = sk.scope_mask(c.mix, watch[i])
         shock_rate[i] = sk.rate
         shocked[i] = sk.rate > 0.0
-        shock_pkill[i] = sk.job_kill_prob(sum(mask[:c.k]))
-        shock_dwatch[i] = sk.kill_frac * sum(mask)
+        if watch[i] <= _EXACT_AGG_MAX:
+            # Validates class scopes against the cell's mix; the mask over
+            # the watch prefix also covers the k job slots (prefix
+            # assignment).
+            mask = sk.scope_mask(c.mix, watch[i])
+            shock_pkill[i] = sk.job_kill_prob(sum(mask[:c.k]))
+            shock_dwatch[i] = sk.kill_frac * sum(mask)
+            dpeer = [sk.kill_frac * sum(mask[j::c.k])
+                     for j in range(min(c.k, _PEER_CAP))]
+        else:
+            # Closed forms again (see the hazard aggregates above): a scope
+            # covers weight-w_scope of any long slot range, so per-share
+            # in-scope counts are w_scope * share size.
+            w_scope = _scope_weight(sk, c.mix)
+            shock_pkill[i] = sk.job_kill_prob(c.k * w_scope)
+            shock_dwatch[i] = sk.kill_frac * watch[i] * w_scope
+            dpeer = [sk.kill_frac * (watch[i] / c.k) * w_scope
+                     for j in range(min(c.k, _PEER_CAP))]
         if c.policy.regime == "pooled":
             shock_dpeer[i, :] = shock_dwatch[i]  # only peer slot 0 is live
         else:
-            for j in range(min(c.k, _PEER_CAP)):
-                # Exact in-scope count of peer j's slot share j::k.
-                shock_dpeer[i, j] = sk.kill_frac * sum(mask[j::c.k])
+            # Exact in-scope count of peer j's slot share j::k (fleet-mean
+            # share above the exact-aggregate cutoff).
+            shock_dpeer[i, :len(dpeer)] = dpeer
         if c.store is not None and c.store.R > 0:
             # A class scope on a TRIVIAL multi-class mix (identical
             # baseline classes used as partition groups) still shocks only
@@ -525,6 +666,59 @@ def _pack(cells: Sequence[CellSpec]) -> _Params:
                 # Homogeneous holders (no mix, or a scope covering the
                 # whole single-class fleet): one fleet-wide kill fraction.
                 shock_f[i] = sk.kill_frac
+    # Class-pooled estimator columns (module docstring; DESIGN.md Sec 9).
+    # pm_nc/pm_rate/pm_shock describe the k-1 non-decision peers grouped by
+    # peer class: how many, the mean class multiplier of each one's watch
+    # share, and the shock-death intensity its share sees.  Small fleets
+    # compute them exactly from the quota assignment (so the pm form sees
+    # the same per-share composition the per-peer form samples from);
+    # fleet-scale cells take the weight-dot closed forms.
+    pm_on = np.asarray(pm_on_l, dtype=bool)
+    pm_nc = np.zeros((B, _CLS_CAP))
+    pm_rate = np.ones((B, _CLS_CAP))
+    pm_shock = np.zeros((B, _CLS_CAP))
+    for i, c in enumerate(cells):
+        if not pm_on_l[i]:
+            continue
+        sk = _cell_shock(c)
+        f_kill = sk.kill_frac if sk is not None else 0.0
+        mix = c.mix
+        if mix is None or len(mix) == 1:
+            # One exchangeable class.  With no class structure the scope is
+            # "all" (scope_mask validates that), so the mean in-scope count
+            # of a non-decision share is exact: the decision peer holds
+            # ceil(watch/k) of the watch slots and the rest split the
+            # remainder evenly in distribution.
+            pm_nc[i, 0] = c.k - 1
+            if mix is not None:
+                pm_rate[i, 0] = mix.classes[0].hazard_mult
+            pm_shock[i, 0] = (f_kill * (watch[i] - math.ceil(watch[i] / c.k))
+                              / max(c.k - 1, 1))
+        elif c.k <= _EXACT_AGG_MAX and watch[i] <= _EXACT_AGG_MAX:
+            asg = mix.assign(c.k)
+            hm = np.asarray(mix.hazard_mults(watch[i]))
+            msk = (np.asarray(sk.scope_mask(mix, watch[i]), dtype=np.float64)
+                   if sk is not None else None)
+            for ci in range(len(mix)):
+                js = [j for j in range(1, c.k) if asg[j] == ci]
+                pm_nc[i, ci] = len(js)
+                if js:
+                    pm_rate[i, ci] = float(np.mean(
+                        [np.mean(hm[j::c.k]) for j in js]))
+                    if msk is not None:
+                        pm_shock[i, ci] = f_kill * float(np.mean(
+                            [msk[j::c.k].sum() for j in js]))
+        else:
+            # Fleet-scale closed forms: shares homogenize to the fleet-mean
+            # multiplier and in-scope fraction, class counts to the quota
+            # weights (normalized so they sum to exactly k-1).
+            w = np.asarray(mix.weights)
+            hbar = float(w @ [pc.hazard_mult for pc in mix.classes])
+            w_scope = _scope_weight(sk, mix) if sk is not None else 0.0
+            for ci in range(len(mix)):
+                pm_nc[i, ci] = w[ci] * (c.k - 1)
+                pm_rate[i, ci] = hbar
+                pm_shock[i, ci] = f_kill * (watch[i] / c.k) * w_scope
     L = max(2, max(len(c.scenario.trace_t) for c in cells))
     trace_t = np.zeros((B, L))
     trace_mtbf = np.ones((B, L))
@@ -589,6 +783,10 @@ def _pack(cells: Sequence[CellSpec]) -> _Params:
         shock_f=shock_f,
         cls_f=cls_f,
         shocked=shocked,
+        pm_on=pm_on,
+        pm_nc=pm_nc,
+        pm_rate=pm_rate,
+        pm_shock=pm_shock,
     )
 
 
@@ -597,6 +795,7 @@ def _init_state(p: _Params, xp, n_peer: int) -> _State:
     zeros = xp.zeros(B)
     false = xp.zeros(B, dtype=bool)
     zeros_p = xp.zeros((B, n_peer))
+    zeros_c = xp.zeros((B, _CLS_CAP))
     return _State(t=xp.asarray(p.t0), done=zeros, in_restore=false,
                   finished=false, censored=false, n_ckpt=zeros, n_fail=zeros,
                   wasted=zeros, ckpt_time=zeros, restore_time=zeros,
@@ -605,7 +804,9 @@ def _init_state(p: _Params, xp, n_peer: int) -> _State:
                   seen_ckpt=false, seen_restore=false,
                   td_obs=zeros_p + p.T_d[:, None],
                   next_g=p.t0 + p.g_period, n_round=zeros,
-                  sv_bytes=zeros, n_srv=zeros, n_peer=zeros)
+                  sv_bytes=zeros, n_srv=zeros, n_peer=zeros,
+                  pm_d=zeros_c, pm_T=zeros_c,
+                  pm_mu0=zeros_c + p.prior_mu[:, None], pm_v=zeros)
 
 
 def _opt_interval(mu, k, V, T_d, xp, lw):
@@ -871,7 +1072,11 @@ def _gossip_mix(s_t, ema_d, ema_T, mu0, n_round, next_g, finished,
     rem_mu = xp.zeros_like(mu_hat)
     for f in range(_FANOUT_CAP):
         off = 1.0 + ((n_round * p.g_fanout + f) % km1)
-        j = ((idx + off[:, None]) % kk).astype(p.regime.dtype)
+        # Clamp to the materialized peer axis: per-peer cells always have
+        # j < k <= P, so this only guards class-pooled cells (k may exceed
+        # P) riding a mixed batch — their result is overridden anyway.
+        j = xp.minimum((idx + off[:, None]) % kk,
+                       float(P - 1)).astype(p.regime.dtype)
         in_f = (f < p.g_fanout)[:, None]
         rem_mu = rem_mu + xp.where(in_f,
                                    xp.take_along_axis(mu_hat, j, axis=1), 0.0)
@@ -885,15 +1090,103 @@ def _gossip_mix(s_t, ema_d, ema_T, mu0, n_round, next_g, finished,
             xp.where(due, s_t + p.g_period, next_g))
 
 
-def _apply(s: _State, p: _Params, pre, u, z, u3, z3, macro_threshold,
-           peer_axis: int, xp) -> _State:
+def _pool_update(s: _State, p: _Params, t, elapsed, mu, finished,
+                 u_pm, z_pm, xp):
+    """One class-pooled estimator step (module docstring; DESIGN.md Sec 9).
+
+    The decision peer keeps the exact per-peer law: its watch-share death
+    count is Poisson-sampled from ``u_pm``/``z_pm[:, 0]`` (the dedicated
+    ``_PM_STREAM`` noise) and decayed through the same window-K MLE as a
+    per-peer row.  The other k-1 peers are carried as per-class moments fed
+    in expectation, plus the population variance ``pm_v`` of their point
+    estimates, which evolves by the exchangeable mean-field recurrence
+
+        v' = (beta_bar^2 * v * den_bar^2 + lam_bar) / den_bar'^2
+
+    (numerator noise of each peer's windowed estimate is Poisson with the
+    class-mean intensity; denominators are treated at their pooled mean).
+    A due gossip round replaces the per-peer ring pull with its moment
+    law: every participant's remote mean is a without-replacement sample
+    of ``fanout`` of the other k-1 point estimates, so it is distributed
+    around the population mean with the exact exchangeability correction
+    ``fpc = (N - F) / ((N - 1) * F)``, ``N = k-1``.  The decision peer
+    samples that pull (``z_pm[:, 1]``); the class moments re-seed at their
+    mean-field merged value and the population variance contracts by
+    ``(1-w)^2 + w^2 * fpc``.  Isolated cells never reach the gossip
+    branch and are exact in this form.
+
+    Returns the decision row (ema_d0, ema_T0, mu0_0), the class moments
+    (pm_d, pm_T, pm_mu0, pm_v), and the gossip clock (round_inc, next_g)
+    for the caller to merge under ``p.pm_on``.
+    """
+    a = p.prior_count
+    share = p.watch / p.k                       # watch slots per peer
+    kw = xp.maximum(p.k - 1.0, 1.0)
+    nw = p.pm_nc / kw[:, None]                  # class weights over k-1 peers
+
+    # Decision row: sampled, like per-peer slot 0.
+    lam0 = (share * p.hmean_peer[:, 0] * mu
+            + p.shock_rate * p.shock_dpeer[:, 0]) * elapsed
+    d0 = _sample_counts(lam0, u_pm, z_pm[:, 0], xp)
+    beta0 = xp.exp(d0 * p.log_decay)
+    ema_d0 = s.ema_d[:, 0] * beta0 + d0
+    ema_T0 = s.ema_T[:, 0] * beta0 + share * elapsed
+
+    # Class moments: expectation-fed, like the pooled regime per class.
+    lam_c = (share[:, None] * p.pm_rate * mu[:, None]
+             + p.shock_rate[:, None] * p.pm_shock) * elapsed[:, None]
+    beta_c = xp.exp(lam_c * p.log_decay[:, None])
+    pm_d = s.pm_d * beta_c + lam_c
+    pm_T = s.pm_T * beta_c + share[:, None] * elapsed[:, None]
+
+    # Population-variance recurrence (denominators at their pooled mean).
+    den_old = xp.sum(nw * (s.pm_T + a[:, None] / s.pm_mu0), axis=-1)
+    den_new = xp.sum(nw * (pm_T + a[:, None] / s.pm_mu0), axis=-1)
+    lam_bar = xp.sum(nw * lam_c, axis=-1)
+    beta_bar = xp.sum(nw * beta_c, axis=-1)
+    pm_v = ((beta_bar ** 2 * s.pm_v * den_old ** 2 + lam_bar)
+            / xp.maximum(den_new, 1e-300) ** 2)
+
+    # Gossip round (mean-field ring pull with the fpc correction).
+    due = ((p.regime == _REGIME_IDS["gossip"]) & ~finished & (t >= s.next_g)
+           & p.pm_on)
+    mu_hat0 = (ema_d0 + a) / (ema_T0 + a / s.mu0[:, 0])
+    mu_c = (pm_d + a[:, None]) / (pm_T + a[:, None] / s.pm_mu0)
+    mbar = xp.sum(nw * mu_c, axis=-1)           # mean of the k-1 others
+    N = kw
+    fpc = (xp.maximum(N - p.g_fanout, 0.0)
+           / (xp.maximum(N - 1.0, 1.0) * p.g_fanout))
+    w = p.g_weight
+    rem0 = mbar + z_pm[:, 1] * xp.sqrt(xp.maximum(pm_v, 0.0) * fpc)
+    merged0 = (1.0 - w) * mu_hat0 + w * xp.maximum(rem0, 1e-300)
+    # A pooled peer's remote pool includes the decision peer (1/N of it).
+    mall = (mu_hat0 + (p.k - 1.0) * mbar) / xp.maximum(p.k, 1.0)
+    merged_c = (1.0 - w)[:, None] * mu_c + (w * mall)[:, None]
+    contract = (1.0 - w) ** 2 + w ** 2 * fpc
+
+    ema_d0 = xp.where(due, 0.0, ema_d0)
+    ema_T0 = xp.where(due, 0.0, ema_T0)
+    mu0_0 = xp.where(due, merged0, s.mu0[:, 0])
+    pm_d = xp.where(due[:, None], 0.0, pm_d)
+    pm_T = xp.where(due[:, None], 0.0, pm_T)
+    pm_mu0 = xp.where(due[:, None], merged_c, s.pm_mu0)
+    pm_v = xp.where(due, contract * pm_v, pm_v)
+    next_g = xp.where(due, t + p.g_period, s.next_g)
+    return (ema_d0, ema_T0, mu0_0, pm_d, pm_T, pm_mu0, pm_v,
+            due * 1.0, next_g)
+
+
+def _apply(s: _State, p: _Params, pre, u, z, u3, z3, u_pm, z_pm,
+           macro_threshold, peer_axis: int, any_pm: bool, xp) -> _State:
     """Pure post-sampling half: advance each cell by one (macro-)attempt.
 
     ``u`` is a uniform draw (failure time for regular cells, geometric
     failure count for macro cells); ``z`` a standard normal (macro burst
     duration).  ``u3``/``z3`` (shape [B, peer_axis], or None when
     ``peer_axis`` is 1) drive the per-peer observation sampling of
-    non-pooled estimator regimes.
+    non-pooled estimator regimes.  ``u_pm``/``z_pm`` ([B] / [B, 2], None
+    unless ``any_pm``) drive the class-pooled form's decision-row and
+    gossip-pull noise from the dedicated ``_PM_STREAM`` stream.
     """
     (mu, kmu, attempt_len, work_target, is_final, cycle_len, censor_now, att,
      td_rest, from_server) = pre
@@ -1039,13 +1332,33 @@ def _apply(s: _State, p: _Params, pre, u, z, u3, z3, macro_threshold,
             t, ema_d, ema_T, s.mu0, s.n_round, s.next_g, finished,
             peer_act, p, xp)
 
+    # Class-pooled cells override whatever the branch above wrote to their
+    # decision row and gossip clock — their noise comes from the dedicated
+    # _PM_STREAM draws, so the realization is identical whichever branch
+    # the batch composition put them through.
+    pm_d, pm_T, pm_mu0, pm_v = s.pm_d, s.pm_T, s.pm_mu0, s.pm_v
+    if any_pm:
+        (ema_d0, ema_T0, mu0_0, pmd, pmT, pmm, pmv, rinc, next_g_pm) = \
+            _pool_update(s, p, t, elapsed, mu, finished, u_pm, z_pm, xp)
+        col0 = p.pm_on[:, None] & (xp.arange(ema_d.shape[1])[None, :] == 0)
+        ema_d = xp.where(col0, ema_d0[:, None], ema_d)
+        ema_T = xp.where(col0, ema_T0[:, None], ema_T)
+        mu0 = xp.where(col0, mu0_0[:, None], mu0)
+        pm_d = xp.where(p.pm_on[:, None], pmd, pm_d)
+        pm_T = xp.where(p.pm_on[:, None], pmT, pm_T)
+        pm_mu0 = xp.where(p.pm_on[:, None], pmm, pm_mu0)
+        pm_v = xp.where(p.pm_on, pmv, pm_v)
+        n_round = xp.where(p.pm_on, s.n_round + rinc, n_round)
+        next_g = xp.where(p.pm_on, next_g_pm, next_g)
+
     return _State(t=t, done=done, in_restore=in_restore, finished=finished,
                   censored=censored, n_ckpt=n_ckpt, n_fail=n_fail,
                   wasted=wasted, ckpt_time=ckpt_time, restore_time=restore_time,
                   ema_d=ema_d, ema_T=ema_T, mu0=mu0, seen_ckpt=seen_ckpt,
                   seen_restore=seen_restore, td_obs=td_obs, next_g=next_g,
                   n_round=n_round, sv_bytes=sv_bytes,
-                  n_srv=n_srv, n_peer=n_peer)
+                  n_srv=n_srv, n_peer=n_peer,
+                  pm_d=pm_d, pm_T=pm_T, pm_mu0=pm_mu0, pm_v=pm_v)
 
 
 # --------------------------------------------------------------------------- #
@@ -1058,7 +1371,7 @@ def _lw_numpy(z):
 
 def _run_numpy(p: _Params, seeds: Sequence[int], max_steps: int,
                macro_threshold: float, any_store: bool, any_het: bool,
-               any_shock: bool, peer_axis: int) -> tuple:
+               any_shock: bool, any_pm: bool, peer_axis: int) -> tuple:
     # One stream per UNIQUE seed, consumed positionally (draw i belongs to
     # step i): a cell's realization depends only on its own seed, never on
     # batch composition, and cells sharing a seed share churn randomness —
@@ -1073,10 +1386,14 @@ def _run_numpy(p: _Params, seeds: Sequence[int], max_steps: int,
     gens = [np.random.default_rng(int(sd)) for sd in uniq]
     obs_gens = ([np.random.default_rng(np.random.SeedSequence(
         [int(sd), _OBS_STREAM])) for sd in uniq] if peer_axis > 1 else None)
+    # Third stream per seed: class-pooled decision-row + gossip-pull noise.
+    pm_gens = ([np.random.default_rng(np.random.SeedSequence(
+        [int(sd), _PM_STREAM])) for sd in uniq] if any_pm else None)
     s = _init_state(p, np, peer_axis)
     steps = 0
     block_u = block_z = block_u2 = block_u3 = block_z3 = None
-    u3 = z3 = None
+    block_upm = block_zpm = None
+    u3 = z3 = u_pm = z_pm = None
     j = _RNG_BLOCK
     # Unused branches of the branchless step routinely overflow (exp of a
     # huge rate, inf * 0) before being masked out — silence numpy there.
@@ -1091,6 +1408,11 @@ def _run_numpy(p: _Params, seeds: Sequence[int], max_steps: int,
                                          for g in obs_gens])
                     block_z3 = np.stack([g.standard_normal(
                         (peer_axis, _RNG_BLOCK)) for g in obs_gens])
+                if pm_gens is not None:
+                    block_upm = np.stack([g.random(_RNG_BLOCK)
+                                          for g in pm_gens])
+                    block_zpm = np.stack([g.standard_normal((2, _RNG_BLOCK))
+                                          for g in pm_gens])
                 j = 0
             steps += 1
             u = block_u[inv, j]
@@ -1099,10 +1421,14 @@ def _run_numpy(p: _Params, seeds: Sequence[int], max_steps: int,
             if obs_gens is not None:
                 u3 = block_u3[inv, :, j]
                 z3 = block_z3[inv, :, j]
+            if pm_gens is not None:
+                u_pm = block_upm[inv, j]
+                z_pm = block_zpm[inv, :, j]
             j += 1
             pre = _attempt(s, p, u2, np, _lw_numpy, any_store, any_het,
                            any_shock)
-            s = _apply(s, p, pre, u, z, u3, z3, macro_threshold, peer_axis, np)
+            s = _apply(s, p, pre, u, z, u3, z3, u_pm, z_pm, macro_threshold,
+                       peer_axis, any_pm, np)
     return s, steps
 
 
@@ -1117,62 +1443,161 @@ if _HAVE_JAX:
 
         return lambertw0(z, iters=_LW_ITERS)
 
+    def _step_draws(keys, peer_axis: int, any_pm: bool):
+        """One step's noise draws from the per-cell key chain.
+
+        Per-CELL keys (seeded from CellSpec.seed): realizations are
+        independent of batch composition, and same-seed cells share churn
+        randomness (common random numbers across policies).  Always split
+        6-way — keys are stateless, so the unused observation-noise keys
+        of pooled batches cost nothing and the split count never depends
+        on batch composition.  Class-pooled noise folds ``_PM_STREAM``
+        into the observation keys, so it is independent of the per-peer
+        draws AND invariant to whether the batch materialized them.
+        """
+        splits = jax.vmap(lambda k: jax.random.split(k, 6))(keys)
+        keys, k1, k2, k3, k4, k5 = (splits[:, 0], splits[:, 1],
+                                    splits[:, 2], splits[:, 3],
+                                    splits[:, 4], splits[:, 5])
+        u = jax.vmap(lambda k: jax.random.uniform(k, dtype=jnp.float64))(k1)
+        z = jax.vmap(lambda k: jax.random.normal(k, dtype=jnp.float64))(k2)
+        u2 = jax.vmap(lambda k: jax.random.uniform(k, dtype=jnp.float64))(k3)
+        if peer_axis > 1:
+            u3 = jax.vmap(lambda k: jax.random.uniform(
+                k, (peer_axis,), dtype=jnp.float64))(k4)
+            z3 = jax.vmap(lambda k: jax.random.normal(
+                k, (peer_axis,), dtype=jnp.float64))(k5)
+        else:
+            u3 = z3 = None
+        if any_pm:
+            u_pm = jax.vmap(lambda k: jax.random.uniform(
+                jax.random.fold_in(k, _PM_STREAM), dtype=jnp.float64))(k4)
+            z_pm = jax.vmap(lambda k: jax.random.normal(
+                jax.random.fold_in(k, _PM_STREAM), (2,),
+                dtype=jnp.float64))(k5)
+        else:
+            u_pm = z_pm = None
+        return keys, u, z, u2, u3, z3, u_pm, z_pm
+
     def _jax_chunk(state_and_keys, p: _Params, macro_threshold: float,
                    any_store: bool, any_het: bool, any_shock: bool,
-                   peer_axis: int):
+                   any_pm: bool, peer_axis: int, chunk: int):
         def body(carry, _):
             s, keys = carry
-            # Per-CELL keys (seeded from CellSpec.seed): realizations are
-            # independent of batch composition, and same-seed cells share
-            # churn randomness (common random numbers across policies).
-            # Always split 6-way — keys are stateless, so the unused
-            # observation-noise keys of pooled batches cost nothing and the
-            # split count never depends on batch composition.
-            splits = jax.vmap(lambda k: jax.random.split(k, 6))(keys)
-            keys, k1, k2, k3, k4, k5 = (splits[:, 0], splits[:, 1],
-                                        splits[:, 2], splits[:, 3],
-                                        splits[:, 4], splits[:, 5])
-            u = jax.vmap(lambda k: jax.random.uniform(k, dtype=jnp.float64))(k1)
-            z = jax.vmap(lambda k: jax.random.normal(k, dtype=jnp.float64))(k2)
-            u2 = jax.vmap(lambda k: jax.random.uniform(k, dtype=jnp.float64))(k3)
-            if peer_axis > 1:
-                u3 = jax.vmap(lambda k: jax.random.uniform(
-                    k, (peer_axis,), dtype=jnp.float64))(k4)
-                z3 = jax.vmap(lambda k: jax.random.normal(
-                    k, (peer_axis,), dtype=jnp.float64))(k5)
-            else:
-                u3 = z3 = None
+            keys, u, z, u2, u3, z3, u_pm, z_pm = _step_draws(
+                keys, peer_axis, any_pm)
             pre = _attempt(s, p, u2, jnp, lambertw0_jnp, any_store, any_het,
                            any_shock)
-            return (_apply(s, p, pre, u, z, u3, z3, macro_threshold,
-                           peer_axis, jnp), keys), None
+            return (_apply(s, p, pre, u, z, u3, z3, u_pm, z_pm,
+                           macro_threshold, peer_axis, any_pm, jnp),
+                    keys), None
 
-        (s, keys), _ = jax.lax.scan(body, state_and_keys, None, length=_CHUNK)
+        (s, keys), _ = jax.lax.scan(body, state_and_keys, None, length=chunk)
         return s, keys
 
     _jax_chunk_jit = None  # compiled lazily (needs x64 enabled at trace time)
+    _SHARDED_CACHE: dict = {}  # (mesh, statics...) -> jitted shard_map chunk
+
+    def _get_sharded_chunk(mesh, axes, macro_threshold, any_store, any_het,
+                           any_shock, any_pm, peer_axis, chunk, tmpl):
+        """Jitted shard_map'd chunk for a (mesh, statics) combination.
+
+        Cells are independent, so the per-shard program is the unmodified
+        chunk body; the only collective is the psum that hands the host a
+        replicated global unfinished count, keeping the early-exit check
+        from gathering the sharded state.
+        """
+        key = (mesh, axes, macro_threshold, any_store, any_het, any_shock,
+               any_pm, peer_axis, chunk)
+        fn = _SHARDED_CACHE.get(key)
+        if fn is not None:
+            return fn
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        def body(s, keys, pj):
+            s, keys = _jax_chunk((s, keys), pj, macro_threshold, any_store,
+                                 any_het, any_shock, any_pm, peer_axis, chunk)
+            unfin = jax.lax.psum(
+                jnp.sum((~s.finished).astype(jnp.int32)), axes)
+            return s, keys, unfin
+
+        lead = lambda x: P(tuple(axes), *([None] * (np.ndim(x) - 1)))
+        s_tmpl, k_tmpl, p_tmpl = tmpl
+        in_specs = (jax.tree.map(lead, s_tmpl), lead(k_tmpl),
+                    jax.tree.map(lead, p_tmpl))
+        out_specs = (jax.tree.map(lead, s_tmpl), lead(k_tmpl), P())
+        fn = jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_rep=False))
+        _SHARDED_CACHE[key] = fn
+        return fn
 
 
 def _run_jax(p: _Params, seeds: Sequence[int], max_steps: int,
              macro_threshold: float, any_store: bool, any_het: bool,
-             any_shock: bool, peer_axis: int) -> tuple:
+             any_shock: bool, any_pm: bool, peer_axis: int, chunk: int,
+             mesh, step: str) -> tuple:
     global _jax_chunk_jit
     with jax.experimental.enable_x64(True):
+        B = len(seeds)
+        seeds = list(seeds)
+        axes = None
+        if mesh is not None and step != "fused":
+            # Resolve the "cell" logical axis against the mesh's data axes
+            # (distributed/sharding.py priority list).  The batch is padded
+            # to the data extent by replicating the last cell; padding is
+            # born finished, so it costs one no-op lane per chunk and is
+            # sliced off the result.
+            from repro.distributed.sharding import resolve_rules
+
+            n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+            Bp = -(-B // max(n_dev, 1)) * max(n_dev, 1)
+            axes = resolve_rules(mesh, {"cell": Bp}).physical("cell")
+            if axes is not None and B != Bp:
+                pad = Bp - B
+                p = _Params(*(np.concatenate(
+                    [a, np.repeat(a[-1:], pad, axis=0)]) for a in p))
+                seeds = seeds + [seeds[-1]] * pad
         if _jax_chunk_jit is None:
             _jax_chunk_jit = jax.jit(_jax_chunk,
-                                     static_argnums=(2, 3, 4, 5, 6))
+                                     static_argnums=(2, 3, 4, 5, 6, 7, 8))
         pj = _Params(*(jnp.asarray(a) for a in p))
         keys = jax.vmap(jax.random.PRNGKey)(
             jnp.asarray(list(seeds), dtype=jnp.uint32))
         s = _init_state(pj, jnp, peer_axis)
+        if len(seeds) != B:
+            s = s._replace(finished=s.finished
+                           | (jnp.arange(len(seeds)) >= B))
         steps = 0
-        while steps < max_steps:
-            s, keys = _jax_chunk_jit((s, keys), pj, macro_threshold, any_store,
-                                     any_het, any_shock, peer_axis)
-            steps += _CHUNK
-            if bool(s.finished.all()):
-                break
-        return _State(*(np.asarray(a) for a in s)), steps
+        if step == "fused":
+            from repro.kernels.sim_step import fused_chunk
+
+            while steps < max_steps:
+                s, keys = fused_chunk(
+                    s, keys, pj, macro_threshold=macro_threshold,
+                    any_store=any_store, any_het=any_het,
+                    any_shock=any_shock, any_pm=any_pm, chunk=chunk)
+                steps += chunk
+                if bool(s.finished.all()):
+                    break
+        elif axes is not None:
+            fn = _get_sharded_chunk(mesh, axes, macro_threshold, any_store,
+                                    any_het, any_shock, any_pm, peer_axis,
+                                    chunk, (s, keys, pj))
+            while steps < max_steps:
+                s, keys, unfin = fn(s, keys, pj)
+                steps += chunk
+                if int(unfin) == 0:
+                    break
+        else:
+            while steps < max_steps:
+                s, keys = _jax_chunk_jit((s, keys), pj, macro_threshold,
+                                         any_store, any_het, any_shock,
+                                         any_pm, peer_axis, chunk)
+                steps += chunk
+                if bool(s.finished.all()):
+                    break
+        return _State(*(np.asarray(a)[:B] for a in s)), steps
 
 
 # --------------------------------------------------------------------------- #
@@ -1180,8 +1605,9 @@ def _run_jax(p: _Params, seeds: Sequence[int], max_steps: int,
 # --------------------------------------------------------------------------- #
 
 def run_cells(cells: Sequence[CellSpec], *, backend: str = "auto",
-              max_steps: int = 400_000,
-              macro_threshold: float = 0.05) -> BatchResult:
+              max_steps: int = 400_000, macro_threshold: float = 0.05,
+              peer_form: str = "auto", chunk: Optional[int] = None,
+              mesh="auto", step: str = "auto") -> BatchResult:
     """Simulate every cell to completion (or censoring) and return a batch.
 
     ``backend``: "auto" (the ``REPRO_SIM_BACKEND`` env var when set, else
@@ -1191,6 +1617,20 @@ def run_cells(cells: Sequence[CellSpec], *, backend: str = "auto",
     ``macro_threshold``: cycle survival probability below which failure
     bursts are macro-stepped (see module docstring); 0 disables.  Cells
     with a :class:`repro.p2p.StoreSpec` never macro-step (endogenous T_d).
+    ``peer_form``: which form carries non-pooled estimator state (module
+    docstring) — "auto" (per-peer rows up to k = ``_PEER_CAP``,
+    class-pooled moments beyond), "perpeer" (historical hard cap), "pm"
+    (force class-pooled at any k — the parity suite's knob).
+    ``chunk``: engine steps per jitted call on the JAX backend (defaults
+    to ``REPRO_SIM_CHUNK`` or :data:`DEFAULT_CHUNK`).
+    ``mesh``: cell-batch sharding on the JAX backend — "auto" (shard over
+    a 1-D data mesh of all local devices when more than one is present),
+    ``None`` (single device), or an explicit :class:`jax.sharding.Mesh`
+    whose data axes the ``cell`` logical axis is resolved against.
+    ``step``: inner-step implementation on the JAX backend — "auto"
+    (``REPRO_SIM_STEP`` env var, else "scan"), "scan" (stock ``lax.scan``
+    body), "fused" (the Pallas kernel of :mod:`repro.kernels.sim_step`;
+    requires a batch with no per-peer-form cells, and runs unsharded).
     """
     if backend == "auto":
         backend = os.environ.get("REPRO_SIM_BACKEND") or (
@@ -1199,18 +1639,50 @@ def run_cells(cells: Sequence[CellSpec], *, backend: str = "auto",
         raise RuntimeError("JAX backend requested but jax is not importable")
     if backend not in ("jax", "numpy"):
         raise ValueError(f"unknown backend {backend!r}")
+    if step == "auto":
+        step = os.environ.get("REPRO_SIM_STEP") or "scan"
+    if step not in ("scan", "fused"):
+        raise ValueError(f"unknown step {step!r}")
+    if chunk is None:
+        chunk = int(os.environ.get("REPRO_SIM_CHUNK") or DEFAULT_CHUNK)
+    chunk = int(chunk)
+    if chunk < 1:
+        raise ValueError("chunk must be >= 1")
 
-    p = _pack(cells)
+    p = _pack(cells, peer_form)
     seeds = [c.seed for c in cells]
     any_store = any(c.store is not None for c in cells)
     any_het = bool(p.store_mix.any())
     any_shock = any(_cell_shock(c) is not None for c in cells)
-    # Per-peer estimator state is only materialized when some cell needs it.
-    peer_axis = (_PEER_CAP if any(c.policy.regime != "pooled" for c in cells)
-                 else 1)
-    run = _run_jax if backend == "jax" else _run_numpy
-    s, steps = run(p, seeds, max_steps, float(macro_threshold), any_store,
-                   any_het, any_shock, peer_axis)
+    any_pm = bool(p.pm_on.any())
+    # Per-peer estimator state is only materialized when some cell needs it
+    # (class-pooled cells keep their decision row in slot 0 of a width-1
+    # axis, so an all-pm batch stays narrow at any k).
+    peer_axis = (_PEER_CAP if any(
+        c.policy.regime != "pooled" and not pm
+        for c, pm in zip(cells, p.pm_on)) else 1)
+    if step == "fused":
+        if backend != "jax":
+            raise ValueError("step='fused' requires the JAX backend")
+        if peer_axis != 1:
+            raise ValueError(
+                "step='fused' supports batches with no per-peer-form cells "
+                "(pooled or class-pooled estimators only)")
+    if backend == "jax":
+        mesh_obj = None
+        if mesh == "auto":
+            if len(jax.devices()) > 1:
+                from repro.distributed.mesh import cell_mesh
+                mesh_obj = cell_mesh()
+        elif mesh is not None:
+            mesh_obj = mesh
+        s, steps = _run_jax(p, seeds, max_steps, float(macro_threshold),
+                            any_store, any_het, any_shock, any_pm, peer_axis,
+                            chunk, mesh_obj, step)
+    else:
+        s, steps = _run_numpy(p, seeds, max_steps, float(macro_threshold),
+                              any_store, any_het, any_shock, any_pm,
+                              peer_axis)
 
     ran_out = ~np.asarray(s.finished)
     completed = ~(np.asarray(s.censored) | ran_out)

@@ -1,0 +1,325 @@
+"""Fleet-scale engine (DESIGN.md Sec 9): class-pooled estimator form,
+``cell``-axis sharding, and the fused Pallas sim-step kernel.
+
+Three layers of guarantees, pinned in this order:
+
+* the sharding rule plumbing (``resolve_rules`` priority fallback for the
+  ``cell`` logical axis, ``_fits`` on absent/indivisible axes) is pure
+  table logic and needs no devices;
+* the class-pooled ("pm") estimator form must agree with the per-peer
+  form it replaces within CI bounds where both exist (k <= 32), and with
+  the per-event heap oracle beyond the cap (parity lane);
+* the execution variants — sharded vs single-device, fused kernel vs
+  ``lax.scan`` body, any chunk size — are *bit-identical* reformulations
+  of the same computation, so they are held to exact equality, not bands.
+
+The multi-device cases skip on a single-device host; CI runs them under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+import numpy as np
+import pytest
+
+from repro.distributed.sharding import _fits, resolve_rules
+from repro.sim import (
+    CellSpec,
+    ChurnNetwork,
+    GossipAdaptivePolicy,
+    PeerClass,
+    PeerClassMix,
+    PolicyConfig,
+    ShockSpec,
+    run_cells,
+    scenario,
+    simulate_job,
+)
+
+V, TD = 20.0, 50.0
+MTBF = 4000.0
+PRIOR_MU = 1.0 / (8.0 * MTBF)
+
+
+def _pol(regime, **kw):
+    return PolicyConfig(kind="adaptive", prior_mu=PRIOR_MU, prior_v=V,
+                        regime=regime, **kw)
+
+
+def _cells(scen, pol, n, **kw):
+    base = dict(k=16, work=4 * 3600.0, V=V, T_d=TD)
+    base.update(kw)
+    return [CellSpec(scenario=scen, policy=pol, seed=s, **base)
+            for s in range(n)]
+
+
+def _assert_same(a, b):
+    """Bit-identity across engine execution variants."""
+    np.testing.assert_array_equal(a.wall_time, b.wall_time)
+    np.testing.assert_array_equal(a.wasted_work, b.wasted_work)
+    np.testing.assert_array_equal(a.n_failures, b.n_failures)
+    np.testing.assert_array_equal(a.n_checkpoints, b.n_checkpoints)
+    np.testing.assert_array_equal(a.completed, b.completed)
+
+
+# ------------------------------------------------------------ sharding rules
+class _Mesh:
+    """resolve_rules/_fits only read axis_names and shape."""
+
+    def __init__(self, **shape):
+        self.axis_names = tuple(shape)
+        self.shape = dict(shape)
+
+
+def test_cell_rule_priority_fallback():
+    mesh = _Mesh(pod=2, data=4)
+    # divisible by pod*data -> both DP axes
+    assert resolve_rules(mesh, {"cell": 24}).table["cell"] == ("pod", "data")
+    # divisible by data only -> data
+    assert resolve_rules(mesh, {"cell": 4}).table["cell"] == ("data",)
+    # divisible by neither -> replicated
+    assert resolve_rules(mesh, {"cell": 3}).table["cell"] == ()
+    assert resolve_rules(mesh, {"cell": 3}).physical("cell") is None
+    # missing size -> replicated (dims have no "cell" entry at all)
+    assert resolve_rules(mesh, {}).table["cell"] == ()
+    # a mesh with no DP axes never shards cells
+    assert resolve_rules(_Mesh(model=8), {"cell": 64}).table["cell"] == ()
+
+
+def test_fits_absent_axes_and_divisibility():
+    mesh = _Mesh(data=4)
+    assert not _fits(None, mesh, ("data",))      # unknown dim
+    assert not _fits(8, mesh, ("pod", "data"))   # absent physical axis
+    assert not _fits(7, mesh, ("data",))         # indivisible
+    assert not _fits(2, mesh, ("data",))         # smaller than the axis
+    assert _fits(8, mesh, ("data",))
+
+
+# ------------------------------------------- class-pooled form vs per-peer
+def test_auto_form_lifts_the_peer_cap():
+    """k > 32 non-pooled cells run (and finish) under peer_form='auto' —
+    the ValueError this used to raise is now reserved for the forced
+    per-peer form (tests/test_gossip.py::test_regime_validation)."""
+    res = run_cells([CellSpec(scenario=scenario("constant", mtbf=MTBF),
+                              policy=_pol("isolated"), seed=s, k=64,
+                              n_slots=256, work=3600.0, V=V, T_d=TD)
+                     for s in range(4)], backend="numpy")
+    assert res.completed.all()
+    total = (res.work_required + res.checkpoint_time + res.restore_time
+             + res.wasted_work)
+    np.testing.assert_allclose(res.wall_time, total, rtol=1e-9)
+
+
+@pytest.mark.parametrize("regime_kw", [
+    dict(regime="isolated"),
+    dict(regime="gossip", gossip_period=600.0, gossip_fanout=2),
+])
+def test_pm_form_matches_perpeer_within_band(regime_kw):
+    """At k <= 32 both forms exist; forcing the class-pooled form must
+    reproduce the per-peer mean wall within 3 combined standard errors
+    (the exchangeability correction is exact in distribution, not per
+    draw — the pm noise comes from its own stream)."""
+    scen = scenario("constant", mtbf=MTBF)
+    pol = _pol(**regime_kw)
+    n = 48
+    cells = _cells(scen, pol, n)
+    per = run_cells(cells, backend="numpy", peer_form="perpeer")
+    pm = run_cells(cells, backend="numpy", peer_form="pm")
+    assert per.completed.all() and pm.completed.all()
+    se = np.sqrt(per.wall_time.var() / n + pm.wall_time.var() / n)
+    diff = abs(per.wall_time.mean() - pm.wall_time.mean())
+    assert diff <= 3.0 * se, (per.wall_time.mean(), pm.wall_time.mean(), se)
+
+
+def test_pm_trivial_mix_matches_unmixed():
+    """A PeerClassMix of identical default classes is statistically the
+    same fleet as no mix: the pm per-class moment columns must agree with
+    the single-column path within CI bounds."""
+    scen = scenario("constant", mtbf=MTBF)
+    pol = _pol("isolated")
+    n = 32
+    mix = PeerClassMix((PeerClass("a"), PeerClass("b")), (0.5, 0.5))
+    plain = run_cells(_cells(scen, pol, n, k=64, n_slots=256),
+                      backend="numpy")
+    mixed = run_cells(_cells(scen, pol, n, k=64, n_slots=256, mix=mix),
+                      backend="numpy")
+    se = np.sqrt(plain.wall_time.var() / n + mixed.wall_time.var() / n)
+    diff = abs(plain.wall_time.mean() - mixed.wall_time.mean())
+    assert diff <= 3.0 * se
+
+
+def test_pm_closed_form_aggregates_above_exact_cap():
+    """watch > _EXACT_AGG_MAX switches _pack to O(#classes) closed-form
+    aggregates; the invariants (and completion) must survive the switch,
+    including under a class-scoped shock."""
+    from repro.sim.engine import _EXACT_AGG_MAX
+
+    scen = scenario("constant", mtbf=100.0 * MTBF)
+    mix = PeerClassMix((PeerClass("stable"),
+                        PeerClass("volatile", hazard_mult=4.0, speed=0.5)),
+                       (0.75, 0.25))
+    k = 2 * _EXACT_AGG_MAX  # watch = n_slots = 4k > cap
+    res = run_cells([CellSpec(scenario=scen, policy=_pol("gossip"), seed=s,
+                              k=k, n_slots=4 * k, work=1800.0, V=V, T_d=TD,
+                              mix=mix,
+                              shock=ShockSpec(rate=1e-4, kill_frac=0.2,
+                                              scope="volatile"))
+                     for s in range(4)], backend="numpy")
+    assert res.completed.all()
+    total = (res.work_required + res.checkpoint_time + res.restore_time
+             + res.wasted_work)
+    np.testing.assert_allclose(res.wall_time, total, rtol=1e-9)
+
+
+def test_pm_backends_agree_in_distribution():
+    """jax and numpy draw from different RNGs, so the pm form is held to
+    CI-bounded mean equality across backends (same contract the per-peer
+    form has)."""
+    pytest.importorskip("jax")
+    scen = scenario("constant", mtbf=MTBF)
+    n = 32
+    cells = _cells(scen, _pol("gossip", gossip_period=600.0), n,
+                   k=64, n_slots=256)
+    a = run_cells(cells, backend="jax")
+    b = run_cells(cells, backend="numpy")
+    se = np.sqrt(a.wall_time.var() / n + b.wall_time.var() / n)
+    assert abs(a.wall_time.mean() - b.wall_time.mean()) <= 3.0 * se
+
+
+# ------------------------------------------------------------ cell sharding
+def _jax_devices():
+    try:
+        import jax
+        return len(jax.devices())
+    except Exception:
+        return 0
+
+
+multi_device = pytest.mark.skipif(
+    _jax_devices() < 2,
+    reason="needs >1 device (XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+@multi_device
+def test_sharded_run_bit_identical_to_single_device():
+    """mesh='auto' on a multi-device host shards the cell batch; results
+    must be bitwise what the single-device path produces, including when
+    B does not divide the device count (padding path) and for pm cells."""
+    scen = scenario("constant", mtbf=MTBF)
+    cells = (_cells(scen, _pol("gossip", gossip_period=600.0), 6)
+             + _cells(scen, _pol("isolated"), 5, k=64, n_slots=256))  # B=11
+    single = run_cells(cells, backend="jax", mesh=None)
+    sharded = run_cells(cells, backend="jax", mesh="auto")
+    _assert_same(single, sharded)
+
+
+@multi_device
+def test_explicit_cell_mesh_bit_identical():
+    import jax
+
+    from repro.distributed.mesh import cell_mesh
+
+    n_dev = min(len(jax.devices()), 4)
+    scen = scenario("constant", mtbf=MTBF)
+    cells = _cells(scen, _pol("pooled"), 8)
+    single = run_cells(cells, backend="jax", mesh=None)
+    sharded = run_cells(cells, backend="jax", mesh=cell_mesh(n_dev))
+    _assert_same(single, sharded)
+
+
+# --------------------------------------------------------- fused step kernel
+def test_fused_step_bit_identical_to_scan():
+    """The Pallas kernel replays the scan body's exact draw chain; every
+    supported batch shape (pooled, shocked, heterogeneous, class-pooled)
+    must match the scan results bit for bit."""
+    pytest.importorskip("jax")
+    scen = scenario("constant", mtbf=MTBF)
+    mix = PeerClassMix((PeerClass("stable"),
+                        PeerClass("volatile", hazard_mult=3.0)), (0.5, 0.5))
+    shock = ShockSpec(rate=1e-4, kill_frac=0.3)
+    cells = (_cells(scen, _pol("pooled"), 4)
+             + _cells(scen, _pol("pooled"), 2, shock=shock)
+             + _cells(scen, _pol("pooled"), 2, mix=mix)
+             + _cells(scen, _pol("gossip", gossip_period=600.0), 3,
+                      k=64, n_slots=256))
+    scan = run_cells(cells, backend="jax", step="scan")
+    fused = run_cells(cells, backend="jax", step="fused")
+    _assert_same(scan, fused)
+
+
+def test_fused_step_rejects_unsupported_batches():
+    pytest.importorskip("jax")
+    scen = scenario("constant", mtbf=MTBF)
+    perpeer = _cells(scen, _pol("isolated"), 2)  # k=16 -> per-peer form
+    with pytest.raises(ValueError):
+        run_cells(perpeer, backend="jax", step="fused")
+    with pytest.raises(ValueError):
+        run_cells(_cells(scen, _pol("pooled"), 2), backend="numpy",
+                  step="fused")
+    with pytest.raises(ValueError):
+        run_cells(_cells(scen, _pol("pooled"), 2), backend="jax",
+                  step="nope")
+
+
+# ------------------------------------------------------------- chunk control
+def test_chunk_is_overridable_and_invariant(monkeypatch):
+    """Chunking is an execution detail: any chunk size (kwarg or the
+    REPRO_SIM_CHUNK env var) must produce bit-identical results."""
+    pytest.importorskip("jax")
+    scen = scenario("constant", mtbf=MTBF)
+    cells = _cells(scen, _pol("gossip", gossip_period=600.0), 4)
+    default = run_cells(cells, backend="jax")
+    small = run_cells(cells, backend="jax", chunk=64)
+    _assert_same(default, small)
+    monkeypatch.setenv("REPRO_SIM_CHUNK", "97")
+    env = run_cells(cells, backend="jax")
+    _assert_same(default, env)
+    with pytest.raises(ValueError):
+        run_cells(cells, backend="jax", chunk=0)
+
+
+# -------------------------------------------------------- million-peer smoke
+def test_million_peer_cell_completes():
+    """The tentpole acceptance shape: a 1M-peer job cell runs through the
+    class-pooled form without materializing any per-peer axis."""
+    pytest.importorskip("jax")
+    k = 1_000_000
+    scen = scenario("constant", mtbf=250.0 * 1e6)
+    res = run_cells([CellSpec(scenario=scen,
+                              policy=_pol("gossip", gossip_period=600.0),
+                              seed=0, k=k, n_slots=4 * k, work=1800.0,
+                              V=V, T_d=TD)], backend="jax")
+    assert res.completed.all()
+    assert res.wall_time[0] >= 1800.0
+
+
+# --------------------------------------------------------- heap-oracle parity
+def _heap_walls(scen, n, k, work, **make_kw):
+    walls = []
+    for s in range(n):
+        rng = np.random.default_rng(s)
+        net = ChurnNetwork.from_scenario(scen, 128, rng)
+        pol = GossipAdaptivePolicy.make(k, prior_mu=PRIOR_MU, prior_v=V,
+                                        **make_kw)
+        walls.append(simulate_job(network=net, policy=pol, k=k,
+                                  work_required=work, V=V, T_d=TD).wall_time)
+    return np.asarray(walls)
+
+
+@pytest.mark.parity
+@pytest.mark.parametrize("regime_kw,make_kw", [
+    (dict(regime="isolated"), dict(regime="isolated")),
+    (dict(regime="gossip", gossip_period=600.0, gossip_fanout=2),
+     dict(regime="gossip", period=600.0, fanout=2, weight=0.5)),
+])
+def test_pm_form_matches_heap_oracle_beyond_cap(regime_kw, make_kw):
+    """k = 48 > _PEER_CAP: the engine necessarily runs the class-pooled
+    form; the per-event heap runs 48 true per-peer controllers.  CI-bounded
+    mean equivalence — the fleet-scale acceptance bar."""
+    scen = scenario("constant", mtbf=MTBF)
+    n, k, work = 32, 48, 4 * 3600.0
+    res = run_cells([CellSpec(scenario=scen, policy=_pol(**regime_kw),
+                              seed=s, k=k, work=work, V=V, T_d=TD)
+                     for s in range(n)], backend="numpy")
+    assert res.completed.all()
+    walls = _heap_walls(scen, n, k, work, **make_kw)
+    se = np.sqrt(res.wall_time.var() / n + walls.var() / n)
+    diff = abs(res.wall_time.mean() - walls.mean())
+    assert diff <= 3.0 * se, (res.wall_time.mean(), walls.mean(), se)

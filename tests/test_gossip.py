@@ -58,10 +58,16 @@ def test_regime_validation():
         PolicyConfig(regime="gossip", gossip_weight=1.5)
     with pytest.raises(ValueError):
         PolicyConfig(regime="gossip", gossip_fanout=0)
-    with pytest.raises(ValueError):  # per-peer state axis is capped
+    with pytest.raises(ValueError):  # forced per-peer form keeps the cap
         run_cells([CellSpec(scenario=scenario("constant", mtbf=MTBF),
                             policy=_pol("isolated"), k=64, n_slots=128,
-                            work=3600.0)], backend="numpy")
+                            work=3600.0)], backend="numpy",
+                  peer_form="perpeer")
+    with pytest.raises(ValueError):
+        run_cells([CellSpec(scenario=scenario("constant", mtbf=MTBF),
+                            policy=_pol("isolated"), k=8, n_slots=16,
+                            work=3600.0)], backend="numpy",
+                  peer_form="nope")
     with pytest.raises(ValueError):
         GossipAdaptivePolicy.make(4, regime="nope")
 
