@@ -25,8 +25,19 @@ baseline vs the P2P-offloaded store — the paper's architectural claim.
 ``campus_cluster``, ``fast_core_volunteer_tail``, ``two_class``) applied
 workflow-wide — per-stage hazard, compute speed, and (with ``--p2p``)
 replica uplinks all become class-aware.
+
+``--execute`` runs the DAG FOR REAL through the resumable workflow
+executor (:mod:`repro.exec`, DESIGN.md Sec 10): the sim predicts the
+workflow's waste, then the executor replays the same seed-pinned failure
+schedules against real superstep-checkpointed work units and the script
+prints predicted vs measured waste side by side — the digital-twin
+contract.  (Executor runs are homogeneous: ``--execute`` excludes
+``--p2p`` and ``--mix``.)
 """
 import argparse
+import tempfile
+
+import numpy as np
 
 from repro.p2p import StoreSpec, TransferModel
 from repro.sim import (
@@ -38,6 +49,7 @@ from repro.sim import (
     scenario,
     simulate_workflow,
 )
+from repro.sim.workflow import export_failure_schedule, waste_band
 
 V, TD = 20.0, 50.0
 
@@ -64,6 +76,41 @@ def report(name: str, res, show_server: bool = False) -> None:
     if show_server:
         line += f"  server_IO={res.server_bytes.mean() / 1e9:.2f}GB"
     print(line)
+
+
+def execute_for_real(spec: WorkflowSpec, scen, policy: PolicyConfig,
+                     sim_seeds: int, exec_seeds: int) -> None:
+    """Digital-twin demo: sim predicts the DAG's waste, the executor
+    measures it on real work units replaying the same churn schedules."""
+    from repro.exec import ExecutorConfig, MixTask, WorkflowExecutor
+
+    res = simulate_workflow(spec, scen, policy=policy,
+                            seeds=range(sim_seeds), V=V, T_d=TD)
+    lo, mean, hi = waste_band(res)
+    print(f"\n== digital twin: sim prediction ({sim_seeds} seeds) ==")
+    print(f"predicted waste {mean:.0f}s  (3-sigma band [{lo:.0f}, {hi:.0f}]s, "
+          f"makespan {res.mean_makespan / 3600:.2f}h)")
+
+    tasks = {s.name: MixTask(dim=64, salt=i)
+             for i, s in enumerate(spec.stages)}
+    print(f"\n== digital twin: real execution ({exec_seeds} schedule seeds) ==")
+    measured = []
+    for seed in range(exec_seeds):
+        sched = export_failure_schedule(spec, scen, seed=seed,
+                                        horizon_factor=60.0)
+        with tempfile.TemporaryDirectory(prefix="wf_exec_") as root:
+            cfg = ExecutorConfig(root=root, prior_mu=policy.prior_mu,
+                                 V=V, T_d=TD)
+            rep = WorkflowExecutor(spec, tasks, sched, cfg).run()
+        print(f"  seed {seed}: measured waste {rep.total_waste:8.1f}s  "
+              f"supersteps {rep.executed_supersteps:5d}  "
+              f"completed={rep.completed}  "
+              f"({rep.steps_per_second:.0f} steps/s real)")
+        measured.append(rep.total_waste)
+    m = float(np.mean(measured))
+    verdict = "INSIDE" if lo <= m <= hi else "OUTSIDE"
+    print(f"\npredicted {mean:.0f}s vs measured {m:.0f}s "
+          f"-> {verdict} the sim's 3-sigma band [{lo:.0f}, {hi:.0f}]s")
 
 
 def main():
@@ -93,7 +140,15 @@ def main():
     ap.add_argument("--mix", default=None, metavar="NAME",
                     help="peer-class mix applied workflow-wide "
                          f"(one of: {', '.join(available_mixes())})")
+    ap.add_argument("--execute", action="store_true",
+                    help="also RUN the DAG through the real workflow "
+                         "executor and print predicted vs measured waste")
+    ap.add_argument("--exec-seeds", type=int, default=4,
+                    help="pinned schedule seeds to execute (--execute)")
     args = ap.parse_args()
+    if args.execute and (args.p2p or args.mix):
+        ap.error("--execute runs the homogeneous flat-cost path; "
+                 "drop --p2p/--mix")
 
     scen_kw = {"mtbf0" if args.scenario == "doubling" else
                "scale" if args.scenario == "weibull" else "mtbf": args.mtbf}
@@ -139,6 +194,11 @@ def main():
     rel = 100.0 * fixed.mean_makespan / adaptive.mean_makespan
     print(f"\nworkflow relative runtime (Eq. 11 on makespan): {rel:.1f}% "
           f"({'adaptive wins' if rel > 100 else 'fixed wins'})")
+
+    if args.execute:
+        execute_for_real(spec, scen, adaptive_pol,
+                         sim_seeds=max(args.seeds, 8),
+                         exec_seeds=args.exec_seeds)
 
 
 if __name__ == "__main__":

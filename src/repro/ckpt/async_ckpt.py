@@ -71,9 +71,19 @@ class AsyncCheckpointer:
                 path = store.save_pytree(self.root, step, snapshot, self.n_shards)
                 for r in self._placement(step):
                     dst = os.path.join(r, os.path.basename(path))
+                    # Atomic replication: copy into a ``.tmp`` sibling —
+                    # invisible to list_checkpoints — and rename into place,
+                    # so a crash mid-copy never leaves a half-written
+                    # replica that restore_latest could mistake for a
+                    # committed image (its COMMITTED marker would already
+                    # have been copied by a plain copytree).
+                    tmp = dst + ".tmp"
+                    if os.path.exists(tmp):
+                        shutil.rmtree(tmp)
+                    shutil.copytree(path, tmp)
                     if os.path.exists(dst):
                         shutil.rmtree(dst)
-                    shutil.copytree(path, dst)
+                    os.rename(tmp, dst)
                 self.last_write_seconds = time.monotonic() - t0
             except BaseException as e:
                 self._exc = e

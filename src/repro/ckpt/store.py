@@ -9,10 +9,15 @@ Layout of one checkpoint:
 
 Writes go to ``step_<N>.tmp`` and are renamed after the COMMITTED marker is
 in place, so a crash mid-save never corrupts the latest checkpoint — the
-paper's 'reliable storage' requirement.  ``n_shards`` emulates per-host
-sharding: leaves are assigned round-robin (by size) to shards, matching a
-multi-host save where each host writes its own shard file.  Replication to
-'neighbour' stores (the P2P storage analogue) lives in async_ckpt.py.
+paper's 'reliable storage' requirement.  Every file inside the tmp dir is
+itself written atomically (``.part`` + fsync + ``os.replace``) and the
+marker goes last, so a torn write can never masquerade as a committed
+image: a truncated shard fails the load (bad zip / integrity hash) and the
+restore path falls through to the next replica.  ``n_shards`` emulates
+per-host sharding: leaves are assigned round-robin (by size) to shards,
+matching a multi-host save where each host writes its own shard file.
+Replication to 'neighbour' stores (the P2P storage analogue) lives in
+async_ckpt.py.
 """
 from __future__ import annotations
 
@@ -43,6 +48,35 @@ def _leaf_paths(tree) -> List[Tuple[str, np.ndarray]]:
 
 def _hash(arr: np.ndarray) -> str:
     return hashlib.sha256(arr.tobytes()).hexdigest()[:16]
+
+
+def _atomic_write(path: str, writer) -> None:
+    """Write a file via ``.part`` + fsync + rename so it is all-or-nothing.
+
+    ``writer(fileobj)`` produces the content.  A crash before the
+    ``os.replace`` leaves only a ``.part`` file that every reader ignores;
+    a crash after it leaves the complete, durable file.
+    """
+    part = path + ".part"
+    with open(part, "wb") as f:
+        writer(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(part, path)
+
+
+def _fsync_dir(path: str) -> None:
+    """Best-effort directory fsync (durability of the rename itself)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - platform without dir-open support
+        return
+    try:
+        os.fsync(fd)
+    except OSError:  # pragma: no cover - filesystems that reject dir fsync
+        pass
+    finally:
+        os.close(fd)
 
 
 def save_pytree(root: str, step: int, tree: Params, n_shards: int = 4) -> str:
@@ -80,14 +114,18 @@ def save_pytree(root: str, step: int, tree: Params, n_shards: int = 4) -> str:
         }
 
     for s, arrs in shards.items():
-        np.savez(os.path.join(tmp, f"shard_{s}.npz"), **arrs)
-    with open(os.path.join(tmp, _MANIFEST), "w") as f:
-        json.dump(manifest, f)
-    with open(os.path.join(tmp, _COMMITTED), "w") as f:
-        f.write("ok")
+        _atomic_write(os.path.join(tmp, f"shard_{s}.npz"),
+                      lambda f, arrs=arrs: np.savez(f, **arrs))
+    _atomic_write(os.path.join(tmp, _MANIFEST),
+                  lambda f: f.write(json.dumps(manifest).encode()))
+    # The marker is written (and fsynced) last: its presence certifies that
+    # every shard above it is complete on disk.
+    _atomic_write(os.path.join(tmp, _COMMITTED), lambda f: f.write(b"ok"))
+    _fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    _fsync_dir(root)
     return final
 
 

@@ -125,6 +125,8 @@ class AdaptiveCheckpointController:
     _cached_interval: Optional[float] = field(default=None, init=False, repr=False)
     n_checkpoints: int = field(default=0, init=False)
     n_failures: int = field(default=0, init=False)
+    _exposure_anchor: float = field(default=0.0, init=False, repr=False)
+    _anchor_dirty: bool = field(default=False, init=False, repr=False)
 
     def __post_init__(self) -> None:
         if self.k <= 0:
@@ -160,7 +162,38 @@ class AdaptiveCheckpointController:
         """A node churn event with the failed node's observed lifetime."""
         self.n_failures += 1
         self.mu_est.observe_failure(node_uptime_seconds)
+        self._anchor_dirty = True
         self._invalidate()
+
+    def tick(self, now: float, exposure_peers: Optional[int] = None) -> None:
+        """Live-tick path (workflow executor, DESIGN.md Sec 10).
+
+        Between observed failures, ``exposure_peers`` hosts (default: the
+        job's k) have survived since the last failure — information the
+        windowed MLE would otherwise ignore until the next death.  Each
+        tick folds that failure-free exposure in as a single right-censored
+        observation ``(now - anchor) * peers``, replacing the previous
+        tick's (``reset_censored``) so the censored mass never double
+        counts; the anchor re-arms at the first tick after a failure.
+        The estimate therefore *decays* toward lower mu while the fleet is
+        quiet and snaps back on the next observed inter-arrival — ticking
+        on observed failure inter-arrivals rather than on a modeled rate.
+        """
+        n = self.k if exposure_peers is None else int(exposure_peers)
+        if n <= 0:
+            raise ValueError("exposure_peers must be positive")
+        if self._anchor_dirty or now < self._exposure_anchor:
+            # First tick after a failure (or a clock reset — a new job
+            # incarnation resuming from a checkpoint restarts at t=0).
+            self._exposure_anchor = now
+            self._anchor_dirty = False
+            self.mu_est.reset_censored()
+            self._invalidate()
+            return
+        if now > self._exposure_anchor:
+            self.mu_est.reset_censored()
+            self.mu_est.observe_alive((now - self._exposure_anchor) * n)
+            self._invalidate()
 
     def observe_restore(self, restore_seconds: float) -> None:
         """Measured restore (image download) time — refines T_d (Sec 3.1.3)."""

@@ -1,0 +1,34 @@
+"""Resumable workflow executor — the sim's real-execution twin.
+
+``repro.sim.workflow`` predicts a DAG's behaviour under churn;
+``repro.exec`` runs the same DAG as real Python/JAX work units with
+superstep checkpointing, P2P-style replication, and deterministic failure
+injection replayed from the sim's exported schedules (DESIGN.md Sec 10).
+"""
+from repro.exec.executor import WorkflowExecutor
+from repro.exec.state import (
+    ExecReport,
+    ExecutorConfig,
+    ExecutorKilled,
+    KillSpec,
+    StageExecReport,
+    StagePaths,
+    stage_paths,
+)
+from repro.exec.superstep import run_stage
+from repro.exec.tasks import MixTask, PowerIterTask, StageTask
+
+__all__ = [
+    "ExecReport",
+    "ExecutorConfig",
+    "ExecutorKilled",
+    "KillSpec",
+    "MixTask",
+    "PowerIterTask",
+    "StageExecReport",
+    "StagePaths",
+    "StageTask",
+    "WorkflowExecutor",
+    "run_stage",
+    "stage_paths",
+]

@@ -1,0 +1,195 @@
+"""The checkpointable superstep loop of one stage (digital-twin mirror).
+
+This loop is the executor-side image of :func:`repro.sim.job.simulate_job`
+— same cycle semantics, same waste accounting — with the simulated state
+replaced by a real :class:`~repro.exec.tasks.StageTask` payload and the
+simulated storage by a real :class:`~repro.ckpt.async_ckpt.AsyncCheckpointer`:
+
+* time advances on the injector's virtual clock; a stage's fault-free work
+  is quantized into supersteps of ``cfg.seconds_per_superstep``;
+* before computing, each dependency's output is fetched (``stage.handoff``
+  churn-exposed virtual seconds per edge, retried on failure — retry time
+  is hand-off waste, exactly the sim's `_handoff_times` law);
+* a checkpoint is taken when the time since the last commit reaches the
+  controller's live interval: ``V`` churn-exposed virtual seconds plus a
+  real save (step number == superstep) replicated via HRW placement;
+* a job failure rolls back: everything since the last commit is recompute
+  waste, ``T_d`` virtual seconds of restore are paid (retried under
+  churn), and the payload is reloaded from the newest *surviving* replica
+  — a corrupt primary falls through to the neighbours;
+* the final payload is persisted at step ``n_supersteps`` with no virtual
+  cost (the sim's final cycle has no V either — the output transfer is
+  billed on the consuming edge), marking the stage complete for the
+  resume protocol.
+
+Censoring mirrors the sim too: a stage that exceeds ``max_wall_factor``
+times its fault-free wall time (hand-off and compute horizons separately)
+is reported incomplete rather than spun on.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Optional, Tuple
+
+from repro.ckpt.async_ckpt import AsyncCheckpointer
+from repro.core.adaptive import AdaptiveCheckpointController
+from repro.exec.state import ExecutorConfig, ExecutorKilled, KillSpec, StageExecReport
+from repro.exec.tasks import StageTask
+from repro.runtime.failures import FailureInjector, SimulatedFailure, StageSchedule
+from repro.sim.workflow import Stage
+
+
+def run_stage(
+    stage: Stage,
+    task: StageTask,
+    dep_payloads: Dict[str, Any],
+    schedule: StageSchedule,
+    ckpt: AsyncCheckpointer,
+    cfg: ExecutorConfig,
+    *,
+    resume: bool = False,
+    kill: Optional[KillSpec] = None,
+    real_t0: Optional[float] = None,
+) -> Tuple[StageExecReport, Optional[Any]]:
+    """Run (or resume) one stage to completion under the pinned schedule.
+
+    Returns ``(report, payload)``; ``payload`` is None when the stage was
+    censored.  ``report.finish`` holds the stage-relative elapsed virtual
+    time (the caller rebases it onto the workflow clock).  An injected
+    :class:`KillSpec` raises :class:`ExecutorKilled` mid-superstep.
+    """
+    n_super = max(int(round(stage.work / cfg.seconds_per_superstep)), 1)
+    sps = stage.work / n_super  # exact: n_super supersteps == stage.work
+    V = stage.V if stage.V is not None else cfg.V
+    T_d = stage.T_d if stage.T_d is not None else cfg.T_d
+    inj = FailureInjector.from_schedule(schedule, seconds_per_step=sps)
+    ctl = AdaptiveCheckpointController(
+        k=stage.k, prior_mu=cfg.prior_mu, prior_v=V,
+        mu_window=cfg.mu_window, min_interval=cfg.min_interval,
+        max_interval=cfg.max_interval)
+    rep = StageExecReport(name=stage.name, n_supersteps=n_super)
+
+    def interval() -> float:
+        if cfg.policy == "fixed":
+            return cfg.fixed_interval
+        return ctl.checkpoint_interval()
+
+    def feed() -> None:
+        # Watched-neighbourhood deaths -> the live estimator, the same
+        # observation stream the sim's AdaptivePolicy consumes (the job's
+        # own failure event is part of it: slot < k implies slot < watch).
+        for lifetime in inj.drain_observations():
+            ctl.observe_failure(lifetime)
+
+    def censored() -> Tuple[StageExecReport, None]:
+        rep.completed = False
+        rep.final_interval = interval()
+        rep.finish = inj.virtual_time
+        return rep, None
+
+    like = task.init(dep_payloads)
+    got = ckpt.restore_latest(like) if resume else None
+    if got is not None and got[0] >= n_super:
+        # A previous incarnation already committed the stage output.
+        rep.start_superstep = rep.committed_superstep = n_super
+        rep.completed = rep.resumed = True
+        return rep, got[1]
+
+    # ------------------------------------------------------------------ #
+    # Hand-off: fetch each dependency's output under churn.  Skipped on a #
+    # mid-stage resume — the restored payload already folds the deps in.  #
+    # ------------------------------------------------------------------ #
+    if got is None:
+        total_handoff = stage.handoff * len(stage.deps)
+        handoff_censor = cfg.max_wall_factor * max(total_handoff, stage.work)
+        for _dep in stage.deps:
+            while stage.handoff > 0.0:
+                if inj.virtual_time > handoff_censor:
+                    return censored()
+                attempt_start = inj.virtual_time
+                try:
+                    inj.advance_exposed(stage.handoff)
+                    feed()
+                    break
+                except SimulatedFailure as f:
+                    rep.handoff_waste += f.at_virtual_time - attempt_start
+                    feed()
+        rep.handoff_time = inj.virtual_time
+        superstep = 0
+        payload = like
+    else:
+        superstep, payload = got
+        rep.resumed = True
+    rep.start_superstep = rep.committed_superstep = superstep
+
+    # ------------------------------------------------------------------ #
+    # Superstep loop: compute, checkpoint at the live cadence, roll back  #
+    # to the newest surviving replica on failure.                         #
+    # ------------------------------------------------------------------ #
+    v0 = inj.virtual_time
+    stage_censor = cfg.max_wall_factor * stage.work
+    last_commit_v = inj.virtual_time
+    while superstep < n_super:
+        if inj.virtual_time - v0 > stage_censor:
+            return censored()
+        try:
+            inj.advance_step()
+            payload = task.step(payload, superstep)
+            superstep += 1
+            rep.executed_supersteps += 1
+            if rep.first_step_real_s is None and real_t0 is not None:
+                rep.first_step_real_s = time.monotonic() - real_t0
+            if kill is not None and \
+                    rep.executed_supersteps >= kill.after_supersteps:
+                raise ExecutorKilled(stage.name, superstep)
+            feed()
+            ctl.tick(inj.virtual_time, exposure_peers=schedule.watch)
+            if superstep < n_super and \
+                    inj.virtual_time - last_commit_v >= interval():
+                inj.advance_exposed(V)  # checkpoint stall, churn-exposed
+                ckpt.save(superstep, payload)
+                ckpt.wait()
+                rep.committed_superstep = superstep
+                rep.n_checkpoints += 1
+                rep.checkpoint_time += V
+                ctl.observe_checkpoint_overhead(V)
+                feed()
+                last_commit_v = inj.virtual_time
+        except SimulatedFailure as f:
+            # Everything since the last commit — uncommitted supersteps,
+            # the partial one, any in-flight checkpoint — is waste.
+            rep.n_failures += 1
+            rep.recompute_waste += f.at_virtual_time - last_commit_v
+            feed()
+            while True:  # restore, retried under churn (sim's retry loop)
+                if inj.virtual_time - v0 > stage_censor:
+                    return censored()
+                attempt_start = inj.virtual_time
+                try:
+                    inj.advance_exposed(T_d)
+                    feed()
+                    rep.restore_time += T_d
+                    break
+                except SimulatedFailure:
+                    rep.restore_time += inj.virtual_time - attempt_start
+                    feed()
+            ctl.observe_restore(T_d)
+            rep.n_restores += 1
+            restored = ckpt.restore_latest(like)
+            if restored is not None:
+                superstep, payload = restored
+            else:  # nothing durable yet: roll back to stage start
+                superstep, payload = 0, task.init(dep_payloads)
+            rep.committed_superstep = superstep
+            last_commit_v = inj.virtual_time
+
+    # Persist the stage output (the image dependents fetch; also the resume
+    # marker: committed step == n_super means complete).  No virtual cost —
+    # the sim's final cycle omits V and bills the transfer on the edge.
+    ckpt.save(n_super, payload)
+    ckpt.wait()
+    rep.committed_superstep = n_super
+    rep.completed = True
+    rep.final_interval = interval()
+    rep.finish = inj.virtual_time
+    return rep, payload

@@ -1,0 +1,127 @@
+"""Work units the executor runs — the "real Python/JAX work" of a stage.
+
+A :class:`StageTask` is the executor's unit of computation, quantized into
+*supersteps* (the agent-workflow checkpoint-at-superstep idiom): the
+executor calls :meth:`StageTask.step` once per superstep and may persist
+the returned payload at any superstep boundary.  The contract that makes
+crash-and-resume testable end-to-end:
+
+* **Determinism** — ``step`` is a pure function of ``(payload, superstep)``
+  and ``init`` of the dependency payloads, so a run killed at superstep s
+  and resumed from the last committed checkpoint produces a final payload
+  bit-identical to an uninterrupted run (tests/test_exec.py asserts this).
+* **Serializability** — payloads are pytrees of arrays, exactly what
+  :mod:`repro.ckpt.store` persists with integrity hashes.
+
+Two reference tasks are provided: :class:`MixTask`, a cheap deterministic
+NumPy recurrence for tests and benchmarks, and :class:`PowerIterTask`, a
+jitted JAX power iteration whose matrix rides inside the checkpoint — the
+"real JAX work unit" the examples execute.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Protocol, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class StageTask(Protocol):
+    """One stage's work unit, advanced one superstep at a time."""
+
+    def init(self, deps: Dict[str, Any]) -> Any:
+        """The superstep-0 payload, folding in dependency outputs."""
+        ...
+
+    def step(self, payload: Any, superstep: int) -> Any:
+        """The payload after executing ``superstep`` (pure, deterministic)."""
+        ...
+
+
+def _fold_scalar(payload: Any) -> float:
+    """A deterministic scalar digest of a dependency payload, so DAG edges
+    are load-bearing: corrupting or dropping a dependency changes every
+    downstream payload."""
+    leaves = []
+    if isinstance(payload, dict):
+        for key in sorted(payload):
+            leaves.append(np.asarray(payload[key], dtype=np.float64))
+    else:
+        leaves.append(np.asarray(payload, dtype=np.float64))
+    return float(sum(float(np.sum(np.cos(leaf))) for leaf in leaves))
+
+
+@dataclass(frozen=True)
+class MixTask:
+    """Cheap deterministic NumPy recurrence (tests, benchmarks).
+
+    ``x`` evolves by a contractive cosine map salted per superstep, and
+    ``checksum`` accumulates a running digest — any lost or repeated
+    superstep changes the final checksum, which is how the resume tests
+    detect silently dropped work.
+    """
+
+    dim: int = 64
+    salt: int = 0
+
+    def init(self, deps: Dict[str, Any]) -> Dict[str, np.ndarray]:
+        x = (np.arange(self.dim, dtype=np.float64) + 1.0) / self.dim \
+            + float(self.salt)
+        for name in sorted(deps):
+            x = x + 1e-3 * _fold_scalar(deps[name])
+        return {"x": x, "checksum": np.zeros((), dtype=np.float64)}
+
+    def step(self, payload: Dict[str, Any], superstep: int) -> Dict[str, Any]:
+        x = np.asarray(payload["x"], dtype=np.float64)
+        x = np.cos(x * 1.0001) + 1e-6 * (superstep + self.salt)
+        checksum = np.asarray(payload["checksum"], dtype=np.float64) \
+            + np.float64(np.sum(x))
+        return {"x": x, "checksum": checksum}
+
+
+@functools.lru_cache(maxsize=None)
+def _power_step_fn():
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def step(mat, v):
+        w = mat @ v
+        nv = w / jnp.linalg.norm(w)
+        return nv, jnp.vdot(v, w)
+
+    return step
+
+
+@dataclass(frozen=True)
+class PowerIterTask:
+    """A real JAX work unit: jitted power iteration on a PSD matrix.
+
+    The matrix is derived deterministically from ``seed`` and carried in
+    the payload (so it is checkpointed with the state, like optimizer
+    state rides a training checkpoint); each superstep is one jitted
+    matvec + normalize, converging ``eig`` to the dominant eigenvalue.
+    """
+
+    dim: int = 128
+    seed: int = 0
+
+    def init(self, deps: Dict[str, Any]) -> Dict[str, Any]:
+        import jax
+        import jax.numpy as jnp
+        key = jax.random.PRNGKey(self.seed)
+        a = jax.random.normal(key, (self.dim, self.dim), dtype=jnp.float32)
+        mat = a @ a.T / self.dim + jnp.eye(self.dim, dtype=jnp.float32)
+        v = jnp.ones((self.dim,), jnp.float32)
+        for name in sorted(deps):
+            v = v + jnp.float32(1e-3 * _fold_scalar(deps[name]))
+        return {"mat": np.asarray(mat),
+                "v": np.asarray(v / jnp.linalg.norm(v)),
+                "eig": np.zeros((), dtype=np.float32)}
+
+    def step(self, payload: Dict[str, Any], superstep: int) -> Dict[str, Any]:
+        v, eig = _power_step_fn()(payload["mat"], payload["v"])
+        return {"mat": payload["mat"], "v": np.asarray(v),
+                "eig": np.asarray(eig, dtype=np.float32)}

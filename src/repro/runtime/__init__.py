@@ -1,4 +1,13 @@
-from repro.runtime.failures import FailureInjector, SimulatedFailure, StragglerMonitor
+from repro.runtime.failures import (
+    FailureEvent,
+    FailureInjector,
+    ScheduleExhausted,
+    SimulatedFailure,
+    StageSchedule,
+    StragglerMonitor,
+    WorkflowSchedule,
+    build_stage_schedule,
+)
 from repro.runtime.trainer import (
     CheckpointPolicyConfig,
     FaultTolerantTrainer,
@@ -6,6 +15,8 @@ from repro.runtime.trainer import (
 )
 
 __all__ = [
-    "CheckpointPolicyConfig", "FailureInjector", "FaultTolerantTrainer",
-    "SimulatedFailure", "StragglerMonitor", "TrainerReport",
+    "CheckpointPolicyConfig", "FailureEvent", "FailureInjector",
+    "FaultTolerantTrainer", "ScheduleExhausted", "SimulatedFailure",
+    "StageSchedule", "StragglerMonitor", "TrainerReport",
+    "WorkflowSchedule", "build_stage_schedule",
 ]

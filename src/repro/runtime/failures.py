@@ -1,13 +1,31 @@
-"""Failure injection & detection for the fault-tolerant trainer.
+"""Failure injection, serialized schedules & detection for real runtimes.
 
-Training steps on this CPU container take ~10-100 ms while realistic node
-MTBFs are hours, so the injector runs on a *virtual clock*: every training
-step advances virtual time by a configurable ``seconds_per_step`` (the
-modeled production step time).  Churn is produced by the same
+Training/executor steps on this CPU container take ~10-100 ms while
+realistic node MTBFs are hours, so the injector runs on a *virtual clock*:
+every step advances virtual time by a configurable ``seconds_per_step``
+(the modeled production step time).  Churn is produced by the same
 :class:`repro.sim.network.ChurnNetwork` used in the paper-reproduction
-simulator — the trainer occupies slots [0, k) and a death among them is a
+simulator — the runtime occupies slots [0, k) and a death among them is a
 job failure, giving the injected process exactly the exponential k*mu
-statistics of the paper's model (Eq. 7).
+statistics of the paper's model (Eq. 7).  Correlated shocks (DESIGN.md
+Sec 8) ride along: a :class:`~repro.sim.scenarios.ShockSpec` adds the same
+mass-kill epochs the simulators draw, from a shareable
+:class:`~repro.sim.scenarios.ShockClock`.
+
+**Serialized schedules** (DESIGN.md Sec 10): the whole churn realization of
+a stage — every death event plus the shock epochs that produced the bursts
+— can be materialized up to a horizon into a :class:`StageSchedule`
+(JSON-round-trippable, seed-pinned) and replayed bit-exactly by a
+:class:`FailureInjector` in *replay* mode.  One schedule can therefore
+feed both the digital twin (:func:`repro.sim.workflow.simulate_workflow`)
+and the real executor (:mod:`repro.exec`): the sim predicts the waste of a
+churn realization, the executor measures it.  Replay is exact because the
+death-event stream is autonomous — deaths never depend on what the job
+does — so a pinned event list IS the process.  Schedules for time-varying
+scenarios are generated from wall time 0; stages that start later in the
+workflow see the stage-relative realization, which is exact for
+time-homogeneous churn (constant/Weibull hazards + Poisson shocks, the
+parity configurations) and a declared t0=0 approximation otherwise.
 
 Detection is modeled as immediate (the SPMD runtime notices a dead host at
 the next collective); the detected event carries the failed node's observed
@@ -15,12 +33,25 @@ lifetime, which is what the MLE estimator consumes.
 """
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
 from repro.sim.network import ChurnNetwork, MtbfFn, constant_mtbf
+from repro.sim.scenarios import (
+    PeerClassMix,
+    Scenario,
+    ShockClock,
+    ShockSpec,
+    resolve_shock,
+)
+
+# Seed-stream tag for serialized failure schedules ("exec"); distinct from
+# the sim's hand-off ("hoff"), shock ("shck"), and engine observation
+# streams so a schedule never aliases the draws of the twin that predicts it.
+SCHEDULE_STREAM = 0x65786563
 
 
 class SimulatedFailure(Exception):
@@ -33,23 +64,230 @@ class SimulatedFailure(Exception):
         self.at_virtual_time = at_virtual_time
 
 
+class ScheduleExhausted(RuntimeError):
+    """A replayed schedule was advanced past its recorded horizon.
+
+    Beyond the horizon the schedule contains no information (absence of
+    events there means "not generated", not "no churn"), so replay must
+    fail loudly instead of silently simulating a churn-free tail."""
+
+
+@dataclass(frozen=True)
+class FailureEvent:
+    """One death in a serialized schedule (stage-relative wall time)."""
+
+    time: float
+    slot: int
+    lifetime: float
+
+
+@dataclass(frozen=True)
+class StageSchedule:
+    """A pinned churn realization for one stage, replayable bit-exactly.
+
+    ``events`` is the complete time-ordered death stream of the stage's
+    peer population over [0, horizon] — job-slot deaths (slot < k), watch
+    neighbours (slot < watch), and background slots alike, shock-epoch
+    bursts included as simultaneous-timestamp runs.  ``shock_epochs``
+    records the exact :class:`ShockClock` schedule that produced those
+    bursts so the serialized form is self-describing.
+    """
+
+    k: int
+    watch: int
+    n_slots: int
+    seed: int
+    horizon: float
+    events: Tuple[FailureEvent, ...]
+    shock_epochs: Tuple[float, ...] = ()
+    shock_rate: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.k <= 0 or not 0 < self.watch <= self.n_slots:
+            raise ValueError("need k > 0 and 0 < watch <= n_slots")
+        if self.horizon <= 0:
+            raise ValueError("horizon must be positive")
+        times = [e.time for e in self.events]
+        if any(b < a for a, b in zip(times, times[1:])):
+            raise ValueError("schedule events must be time-ordered")
+
+    def job_failures(self) -> Tuple[FailureEvent, ...]:
+        """The events that kill the job itself (slot < k)."""
+        return tuple(e for e in self.events if e.slot < self.k)
+
+    # ------------------------------------------------------------------ #
+    # JSON round trip.                                                   #
+    # ------------------------------------------------------------------ #
+    def to_dict(self) -> dict:
+        return {
+            "k": self.k, "watch": self.watch, "n_slots": self.n_slots,
+            "seed": self.seed, "horizon": self.horizon,
+            "shock_rate": self.shock_rate,
+            "shock_epochs": list(self.shock_epochs),
+            "events": [[e.time, e.slot, e.lifetime] for e in self.events],
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "StageSchedule":
+        return cls(
+            k=int(d["k"]), watch=int(d["watch"]), n_slots=int(d["n_slots"]),
+            seed=int(d["seed"]), horizon=float(d["horizon"]),
+            shock_rate=float(d.get("shock_rate", 0.0)),
+            shock_epochs=tuple(float(e) for e in d.get("shock_epochs", ())),
+            events=tuple(FailureEvent(float(t), int(s), float(life))
+                         for t, s, life in d["events"]),
+        )
+
+
+@dataclass(frozen=True)
+class WorkflowSchedule:
+    """Per-stage pinned schedules for a whole DAG (one seed, serializable)."""
+
+    stages: Dict[str, StageSchedule]
+    seed: int
+    scenario: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "seed": self.seed, "scenario": self.scenario,
+            "stages": {name: s.to_dict() for name, s in self.stages.items()},
+        })
+
+    @classmethod
+    def from_json(cls, s: str) -> "WorkflowSchedule":
+        d = json.loads(s)
+        return cls(stages={name: StageSchedule.from_dict(sd)
+                           for name, sd in d["stages"].items()},
+                   seed=int(d["seed"]), scenario=d.get("scenario", ""))
+
+
+def build_stage_schedule(
+    scen: Scenario,
+    *,
+    k: int,
+    seed: int,
+    horizon: float,
+    n_slots: int = 128,
+    watch: Optional[int] = None,
+    mix: Optional[PeerClassMix] = None,
+    shock: Optional[ShockSpec] = None,
+    stage_index: int = 0,
+) -> StageSchedule:
+    """Materialize one stage's churn realization up to ``horizon``.
+
+    The event stream comes from a :class:`ChurnNetwork` seeded on the
+    dedicated ``SCHEDULE_STREAM`` child of ``(seed, stage_index)``; when a
+    shock applies, its epochs are drawn first, recorded, and fed back
+    through :meth:`ShockClock.pinned` so the serialized epochs are exactly
+    the ones the event stream consumed.
+    """
+    if horizon <= 0:
+        raise ValueError("horizon must be positive")
+    watch = min(4 * k, n_slots) if watch is None else min(watch, n_slots)
+    if shock is None:
+        shock = resolve_shock(scen, mix)
+    entropy = [int(seed), SCHEDULE_STREAM, int(stage_index)]
+    epochs: Tuple[float, ...] = ()
+    rate = 0.0
+    clock = None
+    if shock is not None:
+        rate = shock.rate
+        gen = ShockClock(shock.rate, np.random.default_rng(
+            np.random.SeedSequence(entropy + [1])))
+        epochs = tuple(gen.epochs_until(horizon))
+        clock = ShockClock.pinned(shock.rate, epochs)
+    rng = np.random.default_rng(np.random.SeedSequence(entropy))
+    net = ChurnNetwork.from_scenario(scen, n_slots, rng, mix=mix,
+                                     shock=shock, shock_clock=clock)
+    events = tuple(FailureEvent(float(ev.time), int(ev.slot), float(ev.lifetime))
+                   for ev in net.deaths_until(horizon))
+    return StageSchedule(k=k, watch=watch, n_slots=n_slots, seed=int(seed),
+                         horizon=float(horizon), events=events,
+                         shock_epochs=epochs, shock_rate=rate)
+
+
 @dataclass
 class FailureInjector:
-    """Virtual-clock churn injector wrapping a ChurnNetwork."""
+    """Virtual-clock churn injector: live ChurnNetwork or schedule replay.
+
+    Three construction modes:
+
+    * legacy live — ``mtbf_fn`` (+ optional ``shock``/``shock_clock``):
+      exponential churn from a private network, as the trainer uses it.
+    * scenario live — ``scenario=`` (+ ``mix``/``shock``): the full
+      registry semantics (Weibull lifetimes, class hazards, shared shock
+      clocks), matching :meth:`ChurnNetwork.from_scenario`.
+    * replay — ``schedule=`` (or :meth:`from_schedule`): no RNG at all;
+      the pinned event stream of a :class:`StageSchedule` is replayed
+      bit-exactly, raising :class:`ScheduleExhausted` past its horizon.
+    """
 
     k: int
     mtbf_fn: MtbfFn = field(default_factory=lambda: constant_mtbf(4 * 3600.0))
     seconds_per_step: float = 10.0
     n_slots: Optional[int] = None
     seed: int = 0
+    scenario: Optional[Scenario] = None
+    mix: Optional[PeerClassMix] = None
+    shock: Optional[ShockSpec] = None
+    shock_clock: Optional[ShockClock] = None
+    schedule: Optional[StageSchedule] = None
     virtual_time: float = field(default=0.0, init=False)
     observed_lifetimes: List[float] = field(default_factory=list, init=False)
 
     def __post_init__(self):
+        if self.schedule is not None:
+            if self.k != self.schedule.k:
+                raise ValueError(
+                    f"injector k={self.k} != schedule k={self.schedule.k}")
+            self._net = None
+            self._cursor = 0
+            self._watch = self.schedule.watch
+            return
         slots = self.n_slots or max(4 * self.k, 16)
-        self._net = ChurnNetwork(slots, self.mtbf_fn,
-                                 np.random.default_rng(self.seed))
+        rng = np.random.default_rng(self.seed)
+        if self.scenario is not None:
+            self._net = ChurnNetwork.from_scenario(
+                self.scenario, slots, rng, mix=self.mix, shock=self.shock,
+                shock_clock=self.shock_clock)
+        else:
+            self._net = ChurnNetwork(slots, self.mtbf_fn, rng,
+                                     shock=self.shock,
+                                     shock_clock=self.shock_clock)
         self._watch = min(4 * self.k, slots)
+
+    @classmethod
+    def from_schedule(cls, schedule: StageSchedule,
+                      seconds_per_step: float = 10.0) -> "FailureInjector":
+        """A replay injector for a pinned schedule."""
+        return cls(k=schedule.k, seconds_per_step=seconds_per_step,
+                   n_slots=schedule.n_slots, seed=schedule.seed,
+                   schedule=schedule)
+
+    # ------------------------------------------------------------------ #
+    def _deaths_until(self, t_end: float) -> Iterator:
+        if self._net is not None:
+            yield from self._net.deaths_until(t_end)
+            return
+        if t_end > self.schedule.horizon:
+            raise ScheduleExhausted(
+                f"replay advanced to t={t_end:.1f}s past the schedule "
+                f"horizon {self.schedule.horizon:.1f}s")
+        events = self.schedule.events
+        while self._cursor < len(events) and events[self._cursor].time <= t_end:
+            ev = events[self._cursor]
+            self._cursor += 1
+            yield ev
+
+    def _advance(self, seconds: float, exposed: bool) -> None:
+        t_end = self.virtual_time + seconds
+        for ev in self._deaths_until(t_end):
+            if ev.slot < self._watch:
+                self.observed_lifetimes.append(ev.lifetime)
+            if exposed and ev.slot < self.k:
+                self.virtual_time = ev.time
+                raise SimulatedFailure(ev.lifetime, ev.slot, ev.time)
+        self.virtual_time = t_end
 
     def advance_step(self, real_step_seconds: Optional[float] = None) -> None:
         """Advance one training step of virtual time.
@@ -57,23 +295,18 @@ class FailureInjector:
         Non-job (neighbour) deaths are recorded as observations; a death in
         a job slot raises :class:`SimulatedFailure` at its virtual time.
         """
-        t_end = self.virtual_time + self.seconds_per_step
-        for ev in self._net.deaths_until(t_end):
-            if ev.slot < self._watch:
-                self.observed_lifetimes.append(ev.lifetime)
-            if ev.slot < self.k:
-                self.virtual_time = ev.time
-                raise SimulatedFailure(ev.lifetime, ev.slot, ev.time)
-        self.virtual_time = t_end
+        self._advance(self.seconds_per_step, exposed=True)
+
+    def advance_exposed(self, seconds: float) -> None:
+        """Advance arbitrary churn-exposed virtual time (hand-off fetches,
+        checkpoint stalls): a job-slot death interrupts it exactly like a
+        step, raising :class:`SimulatedFailure`."""
+        self._advance(seconds, exposed=True)
 
     def advance_seconds(self, seconds: float) -> None:
-        """Advance arbitrary virtual time (restore downtime, etc.)."""
-        t_end = self.virtual_time + seconds
-        for ev in self._net.deaths_until(t_end):
-            if ev.slot < self._watch:
-                self.observed_lifetimes.append(ev.lifetime)
-            # failures during restore are handled by the trainer retry loop
-        self.virtual_time = t_end
+        """Advance arbitrary *unexposed* virtual time (restore downtime in
+        the trainer's own retry loop): deaths are observed, never raised."""
+        self._advance(seconds, exposed=False)
 
     def drain_observations(self) -> List[float]:
         out, self.observed_lifetimes = self.observed_lifetimes, []

@@ -120,13 +120,25 @@ class FaultTolerantTrainer:
             self.controller.observe_failure(lt)
 
     # ------------------------------------------------------------------ #
-    def run(self, n_steps: int, max_restarts: int = 1000) -> TrainerReport:
+    def run(self, n_steps: int, max_restarts: int = 1000,
+            *, resume: bool = False) -> TrainerReport:
+        """Train to ``n_steps``.  With ``resume=True`` the loop first
+        restores the newest committed checkpoint (primary or any surviving
+        replica) and continues from it — the process-death recovery path: a
+        killed trainer re-run with ``resume=True`` loses nothing beyond the
+        last committed checkpoint (deterministic data stream makes the
+        replayed tail exact)."""
         state = init_train_state(jax.random.key(self._seed), self.cfg)
         step = 0
         losses: List[float] = []
         n_fail = n_ckpt = n_restart = wasted = 0
         last_ckpt_vtime = 0.0
         committed_step = 0
+        if resume:
+            restored = self.ckpt.restore_latest(state)
+            if restored is not None:
+                committed_step, state = restored
+                step = committed_step
 
         vclock = lambda: (self.injector.virtual_time if self.injector else
                           float(step) * 1.0)

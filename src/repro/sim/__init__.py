@@ -71,7 +71,10 @@ from repro.sim.workflow import (
     StageResult,
     WorkflowResult,
     WorkflowSpec,
+    export_failure_schedule,
+    predicted_waste,
     simulate_workflow,
+    waste_band,
 )
 
 __all__ = [
@@ -108,6 +111,7 @@ __all__ = [
     "constant_mtbf",
     "correlated_churn_sweep",
     "doubling_mtbf",
+    "export_failure_schedule",
     "fig4_dynamic",
     "fig4_static",
     "fig5_td_sweep",
@@ -118,6 +122,7 @@ __all__ = [
     "heterogeneity_sweep",
     "offload_csv",
     "peer_class_mix",
+    "predicted_waste",
     "register_mix",
     "register_scenario",
     "resolve_shock",
@@ -129,4 +134,5 @@ __all__ = [
     "simulate_job",
     "simulate_workflow",
     "summarize",
+    "waste_band",
 ]

@@ -157,17 +157,46 @@ class ShockClock:
         if rate < 0:
             raise ValueError("shock rate must be >= 0")
         self.rate = float(rate)
-        self.rng = rng
+        self.rng: Optional[np.random.Generator] = rng
         self._epochs: list = []
+
+    @classmethod
+    def pinned(cls, rate: float, epochs: Sequence[float]) -> "ShockClock":
+        """A clock replaying a pre-materialized epoch schedule, no RNG.
+
+        Serialized failure schedules (:mod:`repro.runtime.failures`) record
+        the exact epochs a simulation consumed; a pinned clock feeds them
+        back so the executor's injected shocks land at the same instants.
+        Asking past the recorded schedule returns inf (no further epochs
+        within the schedule's horizon — by construction none exist there).
+        """
+        if rate < 0:
+            raise ValueError("shock rate must be >= 0")
+        clock = cls.__new__(cls)
+        clock.rate = float(rate)
+        clock.rng = None
+        clock._epochs = [float(e) for e in epochs]
+        return clock
 
     def epoch(self, i: int) -> float:
         """Wall time of the i-th shock epoch (inf when rate is 0)."""
         if self.rate <= 0.0:
             return math.inf
         while len(self._epochs) <= i:
+            if self.rng is None:
+                return math.inf  # pinned schedule exhausted
             prev = self._epochs[-1] if self._epochs else 0.0
             self._epochs.append(prev + self.rng.exponential(1.0 / self.rate))
         return self._epochs[i]
+
+    def epochs_until(self, t: float) -> list:
+        """Materialize (and return) every epoch <= ``t``, in order."""
+        out = []
+        i = 0
+        while self.epoch(i) <= t:
+            out.append(self._epochs[i])
+            i += 1
+        return out
 
 
 def resolve_shock(scenario: Optional["Scenario"] = None,

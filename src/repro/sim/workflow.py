@@ -38,7 +38,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -55,6 +55,9 @@ from repro.sim.scenarios import (
 # Tag of the per-seed child stream feeding hand-off fetch randomness;
 # distinct from the engine's observation stream so the two never alias.
 _HANDOFF_STREAM = 0x686F6666
+
+if TYPE_CHECKING:  # pragma: no cover - annotation only (avoids import cycle)
+    from repro.runtime.failures import WorkflowSchedule
 
 
 @dataclass(frozen=True)
@@ -422,3 +425,77 @@ def simulate_workflow(
         path.append(cur)
     return WorkflowResult(stages=results, makespan=makespan, completed=all_ok,
                           critical_path=tuple(reversed(path)))
+
+
+# --------------------------------------------------------------------------- #
+# Digital-twin bridge (DESIGN.md Sec 10): pinned schedules + predicted waste.  #
+# --------------------------------------------------------------------------- #
+
+def export_failure_schedule(
+    spec: WorkflowSpec,
+    scen: Scenario,
+    *,
+    seed: int = 0,
+    n_slots: int = 128,
+    horizon_factor: float = 120.0,
+    mix: Optional[PeerClassMix] = None,
+) -> "WorkflowSchedule":
+    """Materialize one seed's churn realization for every stage of the DAG.
+
+    The serialized, seed-pinned schedule (death events + exact ShockClock
+    epochs, stage-relative times) is what the real executor
+    (:mod:`repro.exec`) replays while this module's sim predicts the same
+    workflow's waste — the digital-twin contract.  Each stage draws from
+    its own ``(seed, SCHEDULE_STREAM, stage_index)`` child stream, so the
+    realization of one stage never depends on the DAG shape upstream.
+
+    ``horizon_factor`` scales each stage's horizon off its fault-free wall
+    time + hand-off budget; the default comfortably covers the executor's
+    ``max_wall_factor=50`` censor horizons (hand-off + compute), so a
+    well-formed run exhausts its censor budget before its schedule.
+    """
+    from repro.runtime.failures import WorkflowSchedule, build_stage_schedule
+
+    stages = {}
+    for idx, stage in enumerate(spec.topo_order()):
+        stage_mix = stage.mix if stage.mix is not None else mix
+        stage_shock = (stage.shock if stage.shock is not None
+                       else resolve_shock(scen, stage_mix))
+        speed = (stage_mix.mean_speed(stage.k)
+                 if stage_mix is not None else 1.0)
+        stage_wall = stage.work / speed
+        total_handoff = stage.handoff * len(stage.deps)
+        horizon = horizon_factor * (stage_wall
+                                    + max(total_handoff, stage_wall) + 1.0)
+        stages[stage.name] = build_stage_schedule(
+            scen, k=stage.k, seed=seed, horizon=horizon, n_slots=n_slots,
+            mix=stage_mix, shock=stage_shock, stage_index=idx)
+    return WorkflowSchedule(stages=stages, seed=int(seed), scenario=scen.name)
+
+
+def predicted_waste(result: WorkflowResult) -> np.ndarray:
+    """Per-seed total waste the sim predicts for its real-executor twin:
+    recompute lost to rolled-back cycles plus churn-interrupted hand-off
+    retries, summed over every stage (shape [n_seeds])."""
+    total: Optional[np.ndarray] = None
+    for sr in result.stages.values():
+        w = np.asarray(sr.sim.wasted_work, dtype=float) \
+            + np.asarray(sr.handoff_waste, dtype=float)
+        total = w if total is None else total + w
+    if total is None:
+        raise ValueError("workflow result has no stages")
+    return total
+
+
+def waste_band(result: WorkflowResult,
+               n_sigma: float = 3.0) -> Tuple[float, float, float]:
+    """(lo, mean, hi): the sim's ``n_sigma`` predicted-waste band.
+
+    The band is over the per-seed realization distribution (sample sd, not
+    the standard error), floored at 0 — an executor measurement landing
+    inside it is consistent with the twin's prediction.
+    """
+    w = predicted_waste(result)
+    mean = float(np.mean(w))
+    sd = float(np.std(w, ddof=1)) if w.size > 1 else 0.0
+    return max(mean - n_sigma * sd, 0.0), mean, mean + n_sigma * sd

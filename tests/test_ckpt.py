@@ -122,6 +122,55 @@ def test_restore_falls_back_when_primary_corrupt(tmp_path, tree):
     ck.close()
 
 
+def test_truncated_primary_falls_through_to_replica(tmp_path, tree):
+    """Torn-write hardening: a TRUNCATED shard (partial write, not garbage)
+    must fail the load — bad zip or integrity hash — and restore must fall
+    through to a surviving replica."""
+    primary = str(tmp_path / "primary")
+    replicas = [str(tmp_path / "rep0")]
+    ck = AsyncCheckpointer(primary, replicas=replicas, n_shards=2)
+    ck.save(5, tree)
+    ck.wait()
+    _, path = latest_checkpoint(primary)
+    for name in sorted(os.listdir(path)):
+        if name.startswith("shard_"):
+            shard = os.path.join(path, name)
+            with open(shard, "r+b") as f:
+                f.truncate(os.path.getsize(shard) // 2)
+            break
+    with pytest.raises(Exception):
+        load_pytree(path, tree)
+    step, out = ck.restore_latest(tree)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(out["opt"]["step"]), 7)
+    ck.close()
+
+
+def test_no_part_files_survive_a_save(tmp_path, tree):
+    """Every file inside a committed image is written via .part + rename;
+    none of the intermediates may leak into the final directory."""
+    path = save_pytree(str(tmp_path), 1, tree, n_shards=3)
+    assert not [n for n in os.listdir(path) if n.endswith(".part")]
+    assert sorted(n for n in os.listdir(path)) == \
+        ["COMMITTED", "manifest.json", "shard_0.npz", "shard_1.npz",
+         "shard_2.npz"]
+
+
+def test_replica_tmp_dirs_invisible_to_listing(tmp_path, tree):
+    """A crash mid-replication leaves only a ``.tmp`` sibling, which
+    list_checkpoints must skip (it would otherwise look committed, since
+    the COMMITTED marker is copied with the tree)."""
+    ck = AsyncCheckpointer(str(tmp_path / "p"), n_shards=1)
+    ck.save(1, tree)
+    ck.wait()
+    rep = str(tmp_path / "rep0")
+    os.makedirs(rep)
+    _, path = latest_checkpoint(str(tmp_path / "p"))
+    shutil.copytree(path, os.path.join(rep, "step_00000001.tmp"))
+    assert list_checkpoints(rep) == []
+    ck.close()
+
+
 def test_replication_factor_places_on_hrw_chosen_neighbours(tmp_path, tree):
     """R-way placement: each step's image lands on exactly the R replica
     dirs the rendezvous hash picks — deterministic, so restore (and any

@@ -1,0 +1,218 @@
+"""Resumable workflow executor: fault-free determinism, crash-and-resume
+from a surviving replica with the primary corrupted, and the digital-twin
+parity headline (sim-predicted waste vs executor-measured waste)."""
+import glob
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.exec import (
+    ExecutorConfig,
+    ExecutorKilled,
+    KillSpec,
+    MixTask,
+    PowerIterTask,
+    WorkflowExecutor,
+    stage_paths,
+)
+from repro.sim.engine import PolicyConfig
+from repro.sim.scenarios import ShockSpec, scenario
+from repro.sim.workflow import (
+    Stage,
+    WorkflowSpec,
+    export_failure_schedule,
+    predicted_waste,
+    simulate_workflow,
+    waste_band,
+)
+
+CALM = scenario("constant", mtbf=1e9)   # effectively churn-free
+SPEC2 = WorkflowSpec(stages=(
+    Stage(name="a", work=300.0, k=8),
+    Stage(name="b", work=600.0, k=8, deps=("a",), handoff=30.0),
+))
+TASKS2 = {"a": MixTask(dim=16, salt=1), "b": MixTask(dim=16, salt=2)}
+
+
+def _cfg(root, **kw):
+    kw.setdefault("seconds_per_superstep", 10.0)
+    kw.setdefault("prior_mu", 1 / 5400.0)
+    return ExecutorConfig(root=str(root), **kw)
+
+
+def _payloads_equal(a, b):
+    return set(a) == set(b) and \
+        all(np.array_equal(np.asarray(a[k]), np.asarray(b[k])) for k in a)
+
+
+# --------------------------------------------------------------------------- #
+# Fault-free semantics.                                                       #
+# --------------------------------------------------------------------------- #
+
+def test_fault_free_run_executes_every_superstep_once(tmp_path):
+    sched = export_failure_schedule(SPEC2, CALM, seed=0, horizon_factor=60.0)
+    rep = WorkflowExecutor(SPEC2, TASKS2, sched, _cfg(tmp_path / "r")).run()
+    assert rep.completed
+    assert rep.stages["a"].executed_supersteps == 30   # 300s / 10s
+    assert rep.stages["b"].executed_supersteps == 60
+    assert rep.stages["a"].n_failures == 0
+    assert rep.total_waste == 0.0
+    # Virtual accounting: b starts after a finishes + its hand-off fetch.
+    assert rep.stages["b"].ready == pytest.approx(rep.stages["a"].finish)
+    assert rep.stages["b"].handoff_time == pytest.approx(30.0)
+    assert rep.makespan == pytest.approx(max(s.finish
+                                             for s in rep.stages.values()))
+
+
+def test_fault_free_payload_is_deterministic(tmp_path):
+    sched = export_failure_schedule(SPEC2, CALM, seed=0, horizon_factor=60.0)
+    like = TASKS2["b"].init({"a": TASKS2["a"].init({})})
+    outs = []
+    for sub in ("r1", "r2"):
+        ex = WorkflowExecutor(SPEC2, TASKS2, sched, _cfg(tmp_path / sub))
+        assert ex.run().completed
+        outs.append(ex.output("b", like))
+    assert _payloads_equal(outs[0], outs[1])
+
+
+def test_power_iteration_task_runs_for_real(tmp_path):
+    spec = WorkflowSpec(stages=(Stage(name="p", work=600.0, k=8),))
+    task = PowerIterTask(dim=32, seed=0)
+    sched = export_failure_schedule(spec, CALM, seed=0, horizon_factor=60.0)
+    ex = WorkflowExecutor(spec, {"p": task}, sched, _cfg(tmp_path / "r"))
+    assert ex.run().completed
+    out = ex.output("p", task.init({}))
+    # 60 jitted matvecs converge to the dominant eigenvalue of the PSD matrix.
+    eigs = np.linalg.eigvalsh(np.asarray(out["mat"], dtype=np.float64))
+    assert float(out["eig"]) == pytest.approx(float(eigs[-1]), rel=1e-3)
+
+
+def test_executor_validates_tasks_and_schedules(tmp_path):
+    sched = export_failure_schedule(SPEC2, CALM, seed=0, horizon_factor=60.0)
+    with pytest.raises(ValueError, match="no task bound"):
+        WorkflowExecutor(SPEC2, {"a": TASKS2["a"]}, sched, _cfg(tmp_path))
+    bad_spec = WorkflowSpec(stages=(
+        Stage(name="a", work=300.0, k=4),       # schedule was built for k=8
+        Stage(name="b", work=600.0, k=8, deps=("a",), handoff=30.0),
+    ))
+    with pytest.raises(ValueError, match="k="):
+        WorkflowExecutor(bad_spec, TASKS2, sched, _cfg(tmp_path))
+
+
+# --------------------------------------------------------------------------- #
+# Crash-and-resume e2e (the acceptance headline): a stage killed              #
+# mid-superstep resumes from a P2P replica with the primary deliberately     #
+# corrupted, losing nothing beyond the last checkpoint.                       #
+# --------------------------------------------------------------------------- #
+
+def test_crash_and_resume_from_replica_with_corrupt_primary(tmp_path):
+    sched = export_failure_schedule(SPEC2, CALM, seed=0, horizon_factor=60.0)
+    cfg = _cfg(tmp_path / "r", policy="fixed", fixed_interval=120.0)
+    # Fixed 120s cadence at 10s/superstep: stage b commits at 12, 24, 36, 48.
+    with pytest.raises(ExecutorKilled) as ei:
+        WorkflowExecutor(SPEC2, TASKS2, sched, cfg).run(
+            kill=KillSpec("b", after_supersteps=25))
+    assert ei.value.stage == "b" and ei.value.superstep == 25
+
+    # Corrupt the newest PRIMARY image of stage b (truncate one shard): the
+    # resume must fall through to a surviving HRW replica.
+    paths = stage_paths(cfg.root, "b", cfg.n_replica_dirs)
+    newest = sorted(glob.glob(os.path.join(paths.primary, "step_*")))[-1]
+    assert newest.endswith("step_00000024")
+    shard = sorted(glob.glob(os.path.join(newest, "shard_*.npz")))[0]
+    size = os.path.getsize(shard)
+    with open(shard, "r+b") as f:
+        f.truncate(size // 2)
+
+    rep = WorkflowExecutor(SPEC2, TASKS2, sched, cfg).run(resume=True)
+    assert rep.completed
+    # Stage a was already complete; its image is reused, nothing re-executed.
+    assert rep.stages["a"].resumed
+    assert rep.stages["a"].executed_supersteps == 0
+    # Stage b resumed from the last committed superstep — nothing lost
+    # beyond the checkpoint, nothing repeated before it.
+    b = rep.stages["b"]
+    assert b.resumed
+    assert b.start_superstep == 24
+    assert b.executed_supersteps == 60 - 24
+    assert rep.resume_latency_s is not None and rep.resume_latency_s < 60.0
+
+    # Final payload is bit-identical to an uninterrupted reference run.
+    like = TASKS2["b"].init({"a": TASKS2["a"].init({})})
+    ref_cfg = _cfg(tmp_path / "ref", policy="fixed", fixed_interval=120.0)
+    ref = WorkflowExecutor(SPEC2, TASKS2, sched, ref_cfg)
+    assert ref.run().completed
+    assert _payloads_equal(ref.output("b", like),
+                           WorkflowExecutor(SPEC2, TASKS2, sched, cfg)
+                           .output("b", like))
+
+
+def test_resume_of_a_finished_workflow_is_a_noop(tmp_path):
+    sched = export_failure_schedule(SPEC2, CALM, seed=0, horizon_factor=60.0)
+    cfg = _cfg(tmp_path / "r")
+    assert WorkflowExecutor(SPEC2, TASKS2, sched, cfg).run().completed
+    rep = WorkflowExecutor(SPEC2, TASKS2, sched, cfg).run(resume=True)
+    assert rep.completed
+    assert rep.executed_supersteps == 0
+    assert all(s.resumed for s in rep.stages.values())
+
+
+def test_censored_stage_marks_dependents_incomplete(tmp_path):
+    # Churn so hot the stage can never finish: the executor must censor it
+    # (waste budget exhausted) and skip its dependents, like the sim does.
+    hot = scenario("constant", mtbf=8.0)
+    spec = WorkflowSpec(stages=(
+        Stage(name="a", work=300.0, k=8),
+        Stage(name="b", work=300.0, k=8, deps=("a",)),
+    ))
+    sched = export_failure_schedule(spec, hot, seed=0, n_slots=16,
+                                    horizon_factor=120.0)
+    cfg = _cfg(tmp_path / "r", max_wall_factor=10.0, T_d=5.0, V=2.0)
+    rep = WorkflowExecutor(spec, TASKS2, sched, cfg).run()
+    assert not rep.completed
+    assert not rep.stages["a"].completed
+    assert "b" not in rep.stages          # dependent never started
+
+
+# --------------------------------------------------------------------------- #
+# Digital-twin parity (the acceptance headline): executor-measured waste      #
+# within the sim's predicted band under pinned shock schedules.               #
+# --------------------------------------------------------------------------- #
+
+def test_digital_twin_parity_on_3stage_dag(tmp_path):
+    scen = scenario("constant", mtbf=5400.0).with_shock(
+        ShockSpec(rate=1 / 3600.0, kill_frac=0.3))
+    spec = WorkflowSpec(stages=(
+        Stage(name="prep", work=1800.0, k=8),
+        Stage(name="train", work=2400.0, k=8, deps=("prep",), handoff=120.0),
+        Stage(name="eval", work=900.0, k=8, deps=("train",), handoff=60.0),
+    ))
+    pol = PolicyConfig(kind="adaptive", prior_mu=1 / 5400.0, prior_v=20.0)
+    res = simulate_workflow(spec, scen, policy=pol, seeds=range(24),
+                            V=20.0, T_d=50.0)
+    assert res.all_completed
+    pw = predicted_waste(res)
+    lo, mean, hi = waste_band(res)
+
+    tasks = {"prep": MixTask(dim=16, salt=1), "train": MixTask(dim=16, salt=2),
+             "eval": MixTask(dim=16, salt=3)}
+    measured = []
+    for seed in range(6):
+        sched = export_failure_schedule(spec, scen, seed=seed,
+                                        horizon_factor=60.0)
+        cfg = _cfg(tmp_path / f"s{seed}", seconds_per_superstep=15.0,
+                   V=20.0, T_d=50.0)
+        rep = WorkflowExecutor(spec, tasks, sched, cfg).run()
+        assert rep.completed, f"seed {seed} censored"
+        measured.append(rep.total_waste)
+    m = np.asarray(measured)
+
+    # Mean equivalence at 3 sigma of the two-sample standard error...
+    tol = 3.0 * math.sqrt(np.var(pw, ddof=1) / pw.size
+                          + np.var(m, ddof=1) / m.size)
+    assert abs(float(m.mean()) - mean) <= tol, \
+        f"executor mean {m.mean():.1f} vs sim mean {mean:.1f} (tol {tol:.1f})"
+    # ...and the measurement lands inside the sim's per-seed 3-sigma band.
+    assert lo <= float(m.mean()) <= hi, (lo, float(m.mean()), hi)
