@@ -12,6 +12,15 @@ backend-independent, it replays pinned schedules in plain Python/NumPy):
   protocol itself: the resumed incarnation must start exactly at the
   newest committed superstep (0 lost, absolute-zero baseline);
   ``resume_latency_s`` tracks start-to-first-step wall latency.
+* ``exec_hetero`` — the same DAG on a two-class schedule
+  (``fast_core_volunteer_tail``): supersteps run at the recorded class
+  speed and the estimator folds hazard-weighted exposure.  The virtual
+  makespan gates the heterogeneous cycle accounting.
+* ``exec_endo_restore`` — the two-class DAG with a pinned replica-holder
+  realization (R=3): every restore and hand-off fetch latency is derived
+  endogenously from the holders alive at that virtual instant, server
+  fallbacks billed per attempt.  Gates the endogenous-restore data path
+  end to end (restore seconds, server I/O accounting).
 """
 from __future__ import annotations
 
@@ -20,6 +29,8 @@ import time
 from typing import List
 
 from repro.exec import ExecutorConfig, ExecutorKilled, KillSpec, MixTask, WorkflowExecutor
+from repro.p2p import StoreSpec
+from repro.sim import peer_class_mix
 from repro.sim.scenarios import scenario
 from repro.sim.workflow import Stage, WorkflowSpec, export_failure_schedule
 
@@ -34,12 +45,12 @@ def _build(fast: bool):
     scen = scenario("constant", mtbf=1800.0)
     sched = export_failure_schedule(spec, scen, seed=0, horizon_factor=60.0)
     tasks = {"prep": MixTask(dim=32, salt=1), "train": MixTask(dim=32, salt=2)}
-    return spec, sched, tasks
+    return spec, scen, sched, tasks
 
 
 def run_all(fast: bool = False) -> List[str]:
     rows = ["name,us_per_call,derived"]
-    spec, sched, tasks = _build(fast)
+    spec, scen, sched, tasks = _build(fast)
 
     with tempfile.TemporaryDirectory(prefix="exec_bench_") as root:
         cfg = ExecutorConfig(root=root, seconds_per_superstep=10.0,
@@ -92,6 +103,44 @@ def run_all(fast: bool = False) -> List[str]:
             f"lost_supersteps={lost};"
             f"steps_per_s={rep.steps_per_second:.0f};"
             f"resumed_from={rep.stages['train'].start_superstep}")
+
+    # ------------------------------------------------------------------ #
+    # Heterogeneous class speeds + endogenous P2P restores (PR 8): the   #
+    # same DAG replayed on two-class schedules, without and with a       #
+    # pinned replica-holder realization.                                 #
+    # ------------------------------------------------------------------ #
+    mix = peer_class_mix("fast_core_volunteer_tail")
+    hsched = export_failure_schedule(spec, scen, seed=0,
+                                     horizon_factor=60.0, mix=mix)
+    with tempfile.TemporaryDirectory(prefix="exec_bench_") as root:
+        cfg = ExecutorConfig(root=root, seconds_per_superstep=10.0,
+                             prior_mu=1 / 1800.0, V=20.0, T_d=50.0)
+        rep = WorkflowExecutor(spec, tasks, hsched, cfg).run()
+        assert rep.completed, "hetero bench DAG censored"
+        rows.append(
+            f"exec_hetero,{rep.makespan * 1e6:.0f},"
+            f"steps_per_s={rep.steps_per_second:.0f};"
+            f"waste_s={rep.total_waste:.1f};"
+            f"n_failures={sum(s.n_failures for s in rep.stages.values())};"
+            f"supersteps={rep.executed_supersteps};"
+            f"job_speed={hsched.stages['train'].job_speed():.4f}")
+
+    esched = export_failure_schedule(spec, scen, seed=0,
+                                     horizon_factor=60.0, mix=mix,
+                                     store=StoreSpec(R=3))
+    with tempfile.TemporaryDirectory(prefix="exec_bench_") as root:
+        cfg = ExecutorConfig(root=root, seconds_per_superstep=10.0,
+                             prior_mu=1 / 1800.0, V=20.0, T_d=50.0)
+        rep = WorkflowExecutor(spec, tasks, esched, cfg).run()
+        assert rep.completed, "endogenous-restore bench DAG censored"
+        rows.append(
+            f"exec_endo_restore,{rep.makespan * 1e6:.0f},"
+            f"waste_s={rep.total_waste:.1f};"
+            f"n_restores={sum(s.n_restores for s in rep.stages.values())};"
+            f"n_server_restores="
+            f"{sum(s.n_server_restores for s in rep.stages.values())};"
+            f"server_MB={rep.server_bytes / 1e6:.1f};"
+            f"restore_s={sum(s.restore_time for s in rep.stages.values()):.1f}")
     return rows
 
 

@@ -31,8 +31,14 @@ executor (:mod:`repro.exec`, DESIGN.md Sec 10): the sim predicts the
 workflow's waste, then the executor replays the same seed-pinned failure
 schedules against real superstep-checkpointed work units and the script
 prints predicted vs measured waste side by side — the digital-twin
-contract.  (Executor runs are homogeneous: ``--execute`` excludes
-``--p2p`` and ``--mix``.)
+contract.  ``--execute`` composes with ``--mix`` (supersteps run at the
+recorded class speeds) and with ``--p2p`` (the schedules pin each stage's
+replica-holder realization and the executor derives every restore and
+hand-off fetch endogenously from it, billing server fallbacks), so the
+executed run matches the predicted one::
+
+    PYTHONPATH=src python examples/workflow_dag.py --execute \\
+        --mix fast_core_volunteer_tail --p2p --replicas 3
 """
 import argparse
 import tempfile
@@ -79,13 +85,19 @@ def report(name: str, res, show_server: bool = False) -> None:
 
 
 def execute_for_real(spec: WorkflowSpec, scen, policy: PolicyConfig,
-                     sim_seeds: int, exec_seeds: int) -> None:
+                     sim_seeds: int, exec_seeds: int,
+                     mix=None, store=None) -> None:
     """Digital-twin demo: sim predicts the DAG's waste, the executor
-    measures it on real work units replaying the same churn schedules."""
+    measures it on real work units replaying the same churn schedules.
+
+    With ``mix``/``store`` the schedules pin class maps and replica-holder
+    realizations, and the executor runs the heterogeneous endogenous-
+    restore path — the same laws the sim applies in closed form."""
     from repro.exec import ExecutorConfig, MixTask, WorkflowExecutor
 
     res = simulate_workflow(spec, scen, policy=policy,
-                            seeds=range(sim_seeds), V=V, T_d=TD)
+                            seeds=range(sim_seeds), V=V, T_d=TD,
+                            mix=mix, store=store)
     lo, mean, hi = waste_band(res)
     print(f"\n== digital twin: sim prediction ({sim_seeds} seeds) ==")
     print(f"predicted waste {mean:.0f}s  (3-sigma band [{lo:.0f}, {hi:.0f}]s, "
@@ -97,15 +109,19 @@ def execute_for_real(spec: WorkflowSpec, scen, policy: PolicyConfig,
     measured = []
     for seed in range(exec_seeds):
         sched = export_failure_schedule(spec, scen, seed=seed,
-                                        horizon_factor=60.0)
+                                        horizon_factor=60.0,
+                                        mix=mix, store=store)
         with tempfile.TemporaryDirectory(prefix="wf_exec_") as root:
             cfg = ExecutorConfig(root=root, prior_mu=policy.prior_mu,
                                  V=V, T_d=TD)
             rep = WorkflowExecutor(spec, tasks, sched, cfg).run()
-        print(f"  seed {seed}: measured waste {rep.total_waste:8.1f}s  "
-              f"supersteps {rep.executed_supersteps:5d}  "
-              f"completed={rep.completed}  "
-              f"({rep.steps_per_second:.0f} steps/s real)")
+        line = (f"  seed {seed}: measured waste {rep.total_waste:8.1f}s  "
+                f"supersteps {rep.executed_supersteps:5d}  "
+                f"completed={rep.completed}  "
+                f"({rep.steps_per_second:.0f} steps/s real)")
+        if store is not None:
+            line += f"  server_IO={rep.server_bytes / 1e9:.2f}GB"
+        print(line)
         measured.append(rep.total_waste)
     m = float(np.mean(measured))
     verdict = "INSIDE" if lo <= m <= hi else "OUTSIDE"
@@ -146,9 +162,6 @@ def main():
     ap.add_argument("--exec-seeds", type=int, default=4,
                     help="pinned schedule seeds to execute (--execute)")
     args = ap.parse_args()
-    if args.execute and (args.p2p or args.mix):
-        ap.error("--execute runs the homogeneous flat-cost path; "
-                 "drop --p2p/--mix")
 
     scen_kw = {"mtbf0" if args.scenario == "doubling" else
                "scale" if args.scenario == "weibull" else "mtbf": args.mtbf}
@@ -165,11 +178,12 @@ def main():
     kw = dict(seeds=range(args.seeds), V=V, T_d=TD, backend=args.backend,
               mix=mix)
 
+    exec_store = None
     if args.p2p:
         transfer = TransferModel(img_bytes=args.img_mb * 1e6)
+        exec_store = StoreSpec(R=args.replicas, transfer=transfer)
         p2p = simulate_workflow(
-            spec, scen, policy=adaptive_pol,
-            store=StoreSpec(R=args.replicas, transfer=transfer), **kw)
+            spec, scen, policy=adaptive_pol, store=exec_store, **kw)
         report(f"P2P store (R={args.replicas})", p2p, show_server=True)
 
         server_only = simulate_workflow(
@@ -182,23 +196,25 @@ def main():
         pct = 100.0 * p2p.mean_makespan / server_only.mean_makespan
         print(f"\nP2P offload: {100 * saved:.1f}% of server I/O eliminated; "
               f"makespan {pct:.1f}% of the server-only baseline")
-        return
+    else:
+        adaptive = simulate_workflow(spec, scen, policy=adaptive_pol, **kw)
+        report("adaptive checkpointing", adaptive)
 
-    adaptive = simulate_workflow(spec, scen, policy=adaptive_pol, **kw)
-    report("adaptive checkpointing", adaptive)
+        fixed = simulate_workflow(
+            spec, scen, policy=PolicyConfig(kind="fixed", fixed_T=3600.0),
+            **kw)
+        report("fixed 1h checkpointing", fixed)
 
-    fixed = simulate_workflow(
-        spec, scen, policy=PolicyConfig(kind="fixed", fixed_T=3600.0), **kw)
-    report("fixed 1h checkpointing", fixed)
-
-    rel = 100.0 * fixed.mean_makespan / adaptive.mean_makespan
-    print(f"\nworkflow relative runtime (Eq. 11 on makespan): {rel:.1f}% "
-          f"({'adaptive wins' if rel > 100 else 'fixed wins'})")
+        rel = 100.0 * fixed.mean_makespan / adaptive.mean_makespan
+        print(f"\nworkflow relative runtime (Eq. 11 on makespan): {rel:.1f}% "
+              f"({'adaptive wins' if rel > 100 else 'fixed wins'})")
 
     if args.execute:
+        # The executed run matches the predicted one: same mix, same store.
         execute_for_real(spec, scen, adaptive_pol,
                          sim_seeds=max(args.seeds, 8),
-                         exec_seeds=args.exec_seeds)
+                         exec_seeds=args.exec_seeds,
+                         mix=mix, store=exec_store)
 
 
 if __name__ == "__main__":

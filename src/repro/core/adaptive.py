@@ -110,7 +110,7 @@ class AdaptiveCheckpointController:
     form of the paper's decentralization (DESIGN.md Sec 2).
     """
 
-    k: int
+    k: float  # node count; may be a hazard-weighted host-equivalent sum
     prior_mu: float = 1.0 / (4 * 3600.0)  # 4h node MTBF default
     prior_v: float = 10.0
     mu_window: int = 32
@@ -165,7 +165,7 @@ class AdaptiveCheckpointController:
         self._anchor_dirty = True
         self._invalidate()
 
-    def tick(self, now: float, exposure_peers: Optional[int] = None) -> None:
+    def tick(self, now: float, exposure_peers: Optional[float] = None) -> None:
         """Live-tick path (workflow executor, DESIGN.md Sec 10).
 
         Between observed failures, ``exposure_peers`` hosts (default: the
@@ -178,8 +178,14 @@ class AdaptiveCheckpointController:
         The estimate therefore *decays* toward lower mu while the fleet is
         quiet and snaps back on the next observed inter-arrival — ticking
         on observed failure inter-arrivals rather than on a modeled rate.
+
+        ``exposure_peers`` may be fractional: a heterogeneous fleet folds
+        hazard-weighted *host-equivalents* (sum of class hazard mults over
+        the watched slots) so the censored mass pairs with observations
+        emitted in baseline-hazard-equivalent seconds.  A whole-number
+        float is bit-identical to the old integer path.
         """
-        n = self.k if exposure_peers is None else int(exposure_peers)
+        n = float(self.k) if exposure_peers is None else float(exposure_peers)
         if n <= 0:
             raise ValueError("exposure_peers must be positive")
         if self._anchor_dirty or now < self._exposure_anchor:

@@ -4,13 +4,18 @@
 DAG the simulator runs, binds each stage to a real
 :class:`~repro.exec.tasks.StageTask`, and executes stages in topological
 order under a pinned :class:`~repro.runtime.failures.WorkflowSchedule` —
-the serialized churn realization the sim predicts against.  Every stage
-persists through its own :class:`~repro.ckpt.async_ckpt.AsyncCheckpointer`
-over per-stage primary + neighbour directories (HRW placement, corrupt-
-primary fallback), and the resume protocol is just "reopen the executor
-with ``resume=True``": each stage restores from the newest surviving
-replica, a stage whose committed step already covers its supersteps is
-skipped, and execution continues from exactly the last durable superstep.
+the serialized churn realization the sim predicts against.  A schedule
+built with a ``mix``/``store`` carries each stage's class map and replica-
+holder realization, and the stages then run heterogeneous (supersteps at
+class speed, hazard-weighted estimator exposure) with endogenous restore
+and hand-off latency read off the pinned holders — one cycle-accounting
+core shared with the sim's closed-form law.  Every stage persists through
+its own :class:`~repro.ckpt.async_ckpt.AsyncCheckpointer` over per-stage
+primary + neighbour directories (HRW placement, corrupt-primary fallback),
+and the resume protocol is just "reopen the executor with
+``resume=True``": each stage restores from the newest surviving replica, a
+stage whose committed step already covers its supersteps is skipped, and
+execution continues from exactly the last durable superstep.
 
 Typical crash-and-resume round trip::
 

@@ -127,9 +127,15 @@ class StageExecReport:
     n_failures: int = 0
     n_checkpoints: int = 0
     n_restores: int = 0
+    n_server_restores: int = 0     # endogenous restores that fell back to
+                                   # the server (all replicas down)
+    server_bytes: float = 0.0      # server I/O billed per attempt, the
+                                   # engine's accounting (0 without store)
     final_interval: float = 0.0    # controller cadence at stage end
     completed: bool = False
     resumed: bool = False          # started from a prior incarnation's image
+    schedule_exhausted: bool = False  # censored by running off the recorded
+                                      # horizon, not by the wall budget
     first_step_real_s: Optional[float] = None
 
     @property
@@ -156,6 +162,12 @@ class ExecReport:
     @property
     def total_waste(self) -> float:
         return sum(s.waste for s in self.stages.values())
+
+    @property
+    def server_bytes(self) -> float:
+        """Aggregate work-pool server I/O across every stage (restores and
+        hand-off fetches that fell back to the contended server path)."""
+        return sum(s.server_bytes for s in self.stages.values())
 
     @property
     def executed_supersteps(self) -> int:

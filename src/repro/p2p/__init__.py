@@ -15,6 +15,7 @@ layer imports it, not the reverse) so the same placement/transfer laws
 also drive the real checkpointer (:mod:`repro.ckpt.async_ckpt`).
 """
 from repro.p2p.overlay import (
+    HolderTrack,
     ReplicaSetProcess,
     availability,
     rendezvous_placement,
@@ -26,6 +27,7 @@ from repro.p2p.store import R_MAX, P2PCheckpointStore, StoreSpec
 from repro.p2p.transfer import TransferModel
 
 __all__ = [
+    "HolderTrack",
     "P2PCheckpointStore",
     "R_MAX",
     "ReplicaSetProcess",

@@ -33,7 +33,8 @@ from __future__ import annotations
 
 import hashlib
 import math
-from typing import TYPE_CHECKING, Callable, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -130,6 +131,27 @@ def stationary_loss_rate(mu: float, R: int, t_repair: float) -> float:
     return R * A * (1.0 - A) ** (R - 1) * mu
 
 
+@dataclass(frozen=True)
+class HolderTrack:
+    """One holder slot's pinned up/down realization (DESIGN.md Sec 10).
+
+    ``toggles`` are the ascending wall times at which the slot flips state,
+    starting from ``init_up``: an even number of toggles before t leaves the
+    slot in its initial state at t.  A tuple of tracks IS the replica-set
+    realization — serialized into :class:`repro.runtime.failures.
+    StageSchedule` so the sim's prediction and the executor's measurement
+    answer "who is alive at t?" from the same data.
+    """
+
+    init_up: bool
+    toggles: Tuple[float, ...] = ()
+
+    def __post_init__(self) -> None:
+        ts = self.toggles
+        if any(b < a for a, b in zip(ts, ts[1:])):
+            raise ValueError("holder toggles must be time-ordered")
+
+
 class ReplicaSetProcess:
     """Event-driven alternating-renewal process of R holder slots.
 
@@ -212,6 +234,7 @@ class ReplicaSetProcess:
             while self._clock.epoch(self._shock_i) <= t0:
                 self._shock_i += 1
         mtbf0 = mtbf_fn(t0)
+        self._replay = None  # live process; set by from_lifetimes
         self._up = np.zeros(R, dtype=bool)
         self._next = np.full(R, np.inf)
         for i in range(R):
@@ -229,6 +252,76 @@ class ReplicaSetProcess:
             self._up[i] = rng.random() < A
             hold = mtbf0 / mult if self._up[i] else t_repair
             self._next[i] = t0 + rng.exponential(hold)
+        # Transition log: every state flip of every slot, so the advanced
+        # prefix of the process can be serialized (lifetimes_until) and
+        # replayed bit-exactly by a from_lifetimes view.  R <= 8, cheap.
+        self._init_up = tuple(bool(u) for u in self._up)
+        self._toggles: List[List[float]] = [[] for _ in range(R)]
+
+    # ------------------------------------------------------------------ #
+    # Pinned-realization (replay) view.                                   #
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_lifetimes(cls, tracks: Sequence[HolderTrack], t0: float = 0.0,
+                       horizon: float = math.inf) -> "ReplicaSetProcess":
+        """A replayable view over pinned holder realizations — no RNG.
+
+        ``tracks`` come from :meth:`lifetimes_until` (directly or via a
+        serialized :class:`repro.runtime.failures.StageSchedule`); the view
+        answers :meth:`n_alive` / :meth:`alive_slots` by walking the pinned
+        toggle lists, so the heap oracle, the engine's closed-form law, and
+        the executor all consult the same realization.  Advancing past
+        ``horizon`` raises :class:`repro.runtime.failures.ScheduleExhausted`
+        — beyond it the tracks carry no information (absence of toggles
+        there means "not generated", not "still up").
+        """
+        self = cls.__new__(cls)
+        self.R = len(tracks)
+        self.mtbf_fn = None
+        self.t_repair = 0.0
+        self.rng = None
+        self.slot_mults = None
+        self.shock = None
+        self.t0 = float(t0)
+        self.t = float(t0)
+        self.n_losses = 0
+        self._replay = tuple(tuple(tr.toggles) for tr in tracks)
+        self._replay_horizon = float(horizon)
+        self._cursor = [0] * self.R
+        self._up = np.array([tr.init_up for tr in tracks], dtype=bool)
+        self._init_up = tuple(tr.init_up for tr in tracks)
+        self._toggles = [list(tr.toggles) for tr in tracks]
+        return self
+
+    def lifetimes_until(self, horizon: float) -> Tuple[HolderTrack, ...]:
+        """Advance to ``horizon`` and serialize the realization so far."""
+        self.advance(horizon)
+        return tuple(HolderTrack(init_up=self._init_up[i],
+                                 toggles=tuple(self._toggles[i]))
+                     for i in range(self.R))
+
+    def _advance_replay(self, t: float) -> None:
+        if t > self._replay_horizon:
+            from repro.runtime.failures import ScheduleExhausted
+            raise ScheduleExhausted(
+                f"holder replay advanced to t={t:.1f}s past the recorded "
+                f"horizon {self._replay_horizon:.1f}s")
+        due: List[Tuple[float, int]] = []
+        for i in range(self.R):
+            toggles = self._replay[i]
+            c = self._cursor[i]
+            while c < len(toggles) and toggles[c] <= t:
+                due.append((toggles[c], i))
+                c += 1
+            self._cursor[i] = c
+        # Time-ordered across slots so the all-dead transition count is
+        # exact even when toggles of different slots interleave.
+        for _, i in sorted(due):
+            was_any = bool(self._up.any())
+            self._up[i] = not self._up[i]
+            if was_any and not self._up.any():
+                self.n_losses += 1
+        self.t = max(self.t, float(t))
 
     def _slot_mtbf(self, i: int, t: float) -> float:
         m = self.mtbf_fn(t)
@@ -240,6 +333,9 @@ class ReplicaSetProcess:
 
     def advance(self, t: float) -> None:
         """Process holder deaths/repairs/shock epochs up to ``t``, in order."""
+        if self._replay is not None:
+            self._advance_replay(t)
+            return
         while self.R:
             i = int(np.argmin(self._next))
             te = float(self._next[i])
@@ -257,17 +353,20 @@ class ReplicaSetProcess:
                     if self._up[j] and self._scope[j] \
                             and self._shock_rng.random() < f:
                         self._up[j] = False
+                        self._toggles[j].append(ts)
                         self._next[j] = ts + self.rng.exponential(self.t_repair)
                 if was_up and not self._up.any():
                     self.n_losses += 1
                 continue
             if self._up[i]:
                 self._up[i] = False
+                self._toggles[i].append(te)
                 self._next[i] = te + self.rng.exponential(self.t_repair)
                 if not self._up.any():
                     self.n_losses += 1
             else:
                 self._up[i] = True
+                self._toggles[i].append(te)
                 self._next[i] = te + self.rng.exponential(self._slot_mtbf(i, te))
         self.t = max(self.t, float(t))
 

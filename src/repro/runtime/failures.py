@@ -27,6 +27,20 @@ workflow see the stage-relative realization, which is exact for
 time-homogeneous churn (constant/Weibull hazards + Poisson shocks, the
 parity configurations) and a declared t0=0 approximation otherwise.
 
+**Heterogeneous + endogenous-restore schedules** (DESIGN.md Sec 10): a
+schedule can additionally pin (a) the per-slot *class map* of a
+:class:`~repro.sim.scenarios.PeerClassMix` — name/hazard/speed/uplink per
+population slot, from the mix's deterministic prefix-proportional
+assignment — and (b) the *replica-holder realization* of a
+:class:`~repro.p2p.StoreSpec`: per holder slot, the full alternating-
+renewal up/down track (:class:`~repro.p2p.HolderTrack`), drawn on a
+dedicated child stream and shock-correlated through the SAME pinned
+:class:`~repro.sim.scenarios.ShockClock` as the job events.  The executor
+then runs supersteps at the recorded class speed and derives every restore
+and hand-off fetch time from the holders alive at that virtual instant —
+the same data the sim's closed-form law models — instead of paying an
+exogenous ``T_d``.
+
 Detection is modeled as immediate (the SPMD runtime notices a dead host at
 the next collective); the detected event carries the failed node's observed
 lifetime, which is what the MLE estimator consumes.
@@ -34,13 +48,18 @@ lifetime, which is what the MLE estimator consumes.
 from __future__ import annotations
 
 import json
+import math
 from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from repro.p2p.overlay import HolderTrack, ReplicaSetProcess
+from repro.p2p.store import StoreSpec
+from repro.p2p.transfer import TransferModel
 from repro.sim.network import ChurnNetwork, MtbfFn, constant_mtbf
 from repro.sim.scenarios import (
+    PeerClass,
     PeerClassMix,
     Scenario,
     ShockClock,
@@ -91,6 +110,20 @@ class StageSchedule:
     bursts included as simultaneous-timestamp runs.  ``shock_epochs``
     records the exact :class:`ShockClock` schedule that produced those
     bursts so the serialized form is self-describing.
+
+    A *heterogeneous* schedule additionally records ``classes`` (the mix's
+    canonical class table) and ``slot_class`` (class index per population
+    slot, the mix's deterministic prefix-proportional assignment) — the
+    executor derives job speed, hazard-weighted estimator exposure, and
+    holder uplinks from these, never from a live mix object.
+
+    An *endogenous-restore* schedule carries ``store`` (replication factor
+    + transfer capacities) plus the pinned ``holders`` realization: one
+    :class:`~repro.p2p.HolderTrack` per holder slot, drawn on a dedicated
+    stream and shock-correlated with the job events through the shared
+    pinned clock.  ``holder_class`` maps holder slots onto ``classes`` for
+    uplink striping.  With ``store=None`` the executor pays its exogenous
+    ``T_d`` exactly as before.
     """
 
     k: int
@@ -101,6 +134,11 @@ class StageSchedule:
     events: Tuple[FailureEvent, ...]
     shock_epochs: Tuple[float, ...] = ()
     shock_rate: float = 0.0
+    classes: Tuple[PeerClass, ...] = ()
+    slot_class: Tuple[int, ...] = ()
+    store: Optional[StoreSpec] = None
+    holders: Tuple[HolderTrack, ...] = ()
+    holder_class: Tuple[int, ...] = ()
 
     def __post_init__(self) -> None:
         if self.k <= 0 or not 0 < self.watch <= self.n_slots:
@@ -110,25 +148,130 @@ class StageSchedule:
         times = [e.time for e in self.events]
         if any(b < a for a, b in zip(times, times[1:])):
             raise ValueError("schedule events must be time-ordered")
+        if self.classes:
+            if len(self.slot_class) != self.n_slots:
+                raise ValueError("need one class index per population slot")
+            if self.slot_class and not (
+                    0 <= min(self.slot_class)
+                    and max(self.slot_class) < len(self.classes)):
+                raise ValueError("slot_class index out of range")
+        elif self.slot_class:
+            raise ValueError("slot_class without a class table")
+        if self.holders and self.store is None:
+            raise ValueError("holder realizations need their store params")
+        if self.store is not None and len(self.holders) != self.store.R:
+            raise ValueError(
+                f"need one holder track per replica slot: "
+                f"{len(self.holders)} != R={self.store.R}")
+        if self.holder_class:
+            if not self.classes or len(self.holder_class) != len(self.holders):
+                raise ValueError("holder_class needs classes and one index "
+                                 "per holder slot")
+            if not (0 <= min(self.holder_class)
+                    and max(self.holder_class) < len(self.classes)):
+                raise ValueError("holder_class index out of range")
 
     def job_failures(self) -> Tuple[FailureEvent, ...]:
         """The events that kill the job itself (slot < k)."""
         return tuple(e for e in self.events if e.slot < self.k)
 
     # ------------------------------------------------------------------ #
+    # Class-map views (all exactly the homogeneous constants when the     #
+    # schedule carries no class table — the bit-identity contract).       #
+    # ------------------------------------------------------------------ #
+    def hazard_mult(self, slot: int) -> float:
+        """Hazard multiplier of one population slot (1.0 homogeneous)."""
+        if not self.classes:
+            return 1.0
+        return self.classes[self.slot_class[slot]].hazard_mult
+
+    def job_speed(self) -> float:
+        """Aggregate compute speed of the k job slots — the mean class
+        speed, matching :meth:`PeerClassMix.mean_speed` on the same
+        prefix.  Exactly 1.0 for a homogeneous schedule."""
+        if not self.classes:
+            return 1.0
+        return math.fsum(self.classes[self.slot_class[i]].speed
+                         for i in range(self.k)) / self.k
+
+    def job_hazard_sum(self) -> float:
+        """Sum of hazard multipliers over the k job slots — the controller
+        solves Eq. 11 with this as its hazard-weighted ``k`` (exactly
+        ``float(k)`` homogeneous: fsum of ones)."""
+        if not self.classes:
+            return float(self.k)
+        return math.fsum(self.classes[self.slot_class[i]].hazard_mult
+                         for i in range(self.k))
+
+    def watch_hazard_sum(self) -> float:
+        """Hazard-weighted estimator exposure of the watch neighbourhood
+        (exactly ``float(watch)`` homogeneous)."""
+        if not self.classes:
+            return float(self.watch)
+        return math.fsum(self.classes[self.slot_class[i]].hazard_mult
+                         for i in range(self.watch))
+
+    def holder_uplinks(self) -> Tuple[float, ...]:
+        """Uplink multiplier per holder slot (1.0s without a class map)."""
+        if not self.holder_class:
+            return (1.0,) * len(self.holders)
+        return tuple(self.classes[j].uplink_mult for j in self.holder_class)
+
+    def holder_view(self) -> ReplicaSetProcess:
+        """A fresh replay view over the pinned holder realization.
+
+        Stateful (its cursors advance monotonically): make one per stage
+        incarnation and query it at non-decreasing virtual times."""
+        if self.store is None:
+            raise ValueError("schedule carries no holder realization")
+        return ReplicaSetProcess.from_lifetimes(self.holders,
+                                                horizon=self.horizon)
+
+    # ------------------------------------------------------------------ #
     # JSON round trip.                                                   #
     # ------------------------------------------------------------------ #
     def to_dict(self) -> dict:
-        return {
+        d = {
             "k": self.k, "watch": self.watch, "n_slots": self.n_slots,
             "seed": self.seed, "horizon": self.horizon,
             "shock_rate": self.shock_rate,
             "shock_epochs": list(self.shock_epochs),
             "events": [[e.time, e.slot, e.lifetime] for e in self.events],
         }
+        # Optional sections only when present, so homogeneous/exogenous
+        # schedules serialize byte-identically to their PR 7 form.
+        if self.classes:
+            d["classes"] = [[c.name, c.hazard_mult, c.speed, c.uplink_mult]
+                            for c in self.classes]
+            d["slot_class"] = list(self.slot_class)
+        if self.store is not None:
+            tr = self.store.transfer
+            d["store"] = {
+                "R": self.store.R, "t_repair": self.store.t_repair,
+                "img_bytes": tr.img_bytes, "peer_uplink": tr.peer_uplink,
+                "peer_downlink": tr.peer_downlink,
+                "server_capacity": tr.server_capacity,
+                "server_load": tr.server_load,
+            }
+            d["holders"] = [[int(h.init_up), list(h.toggles)]
+                            for h in self.holders]
+            if self.holder_class:
+                d["holder_class"] = list(self.holder_class)
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "StageSchedule":
+        store = None
+        if "store" in d:
+            sd = d["store"]
+            store = StoreSpec(
+                R=int(sd["R"]), t_repair=float(sd["t_repair"]),
+                transfer=TransferModel(
+                    img_bytes=float(sd["img_bytes"]),
+                    peer_uplink=float(sd["peer_uplink"]),
+                    peer_downlink=float(sd["peer_downlink"]),
+                    server_capacity=float(sd["server_capacity"]),
+                    server_load=float(sd["server_load"])))
         return cls(
             k=int(d["k"]), watch=int(d["watch"]), n_slots=int(d["n_slots"]),
             seed=int(d["seed"]), horizon=float(d["horizon"]),
@@ -136,6 +279,15 @@ class StageSchedule:
             shock_epochs=tuple(float(e) for e in d.get("shock_epochs", ())),
             events=tuple(FailureEvent(float(t), int(s), float(life))
                          for t, s, life in d["events"]),
+            classes=tuple(PeerClass(name=str(nm), hazard_mult=float(h),
+                                    speed=float(sp), uplink_mult=float(u))
+                          for nm, h, sp, u in d.get("classes", ())),
+            slot_class=tuple(int(i) for i in d.get("slot_class", ())),
+            store=store,
+            holders=tuple(HolderTrack(init_up=bool(up),
+                                      toggles=tuple(float(t) for t in ts))
+                          for up, ts in d.get("holders", ())),
+            holder_class=tuple(int(i) for i in d.get("holder_class", ())),
         )
 
 
@@ -172,6 +324,7 @@ def build_stage_schedule(
     mix: Optional[PeerClassMix] = None,
     shock: Optional[ShockSpec] = None,
     stage_index: int = 0,
+    store: Optional[StoreSpec] = None,
 ) -> StageSchedule:
     """Materialize one stage's churn realization up to ``horizon``.
 
@@ -180,6 +333,15 @@ def build_stage_schedule(
     shock applies, its epochs are drawn first, recorded, and fed back
     through :meth:`ShockClock.pinned` so the serialized epochs are exactly
     the ones the event stream consumed.
+
+    With a ``mix`` the schedule records the class table and per-slot
+    assignment alongside the events; with a ``store`` it additionally pins
+    the replica-holder realization — an alternating-renewal
+    :class:`~repro.p2p.ReplicaSetProcess` drawn on its own child stream
+    (``entropy + [2]``, so attaching a store never perturbs the event or
+    epoch draws) and driven by the SAME pinned clock as the job network,
+    which is what correlates replica wipeouts with the job failures that
+    trigger restores.
     """
     if horizon <= 0:
         raise ValueError("horizon must be positive")
@@ -201,9 +363,33 @@ def build_stage_schedule(
                                      shock=shock, shock_clock=clock)
     events = tuple(FailureEvent(float(ev.time), int(ev.slot), float(ev.lifetime))
                    for ev in net.deaths_until(horizon))
+    classes: Tuple[PeerClass, ...] = ()
+    slot_class: Tuple[int, ...] = ()
+    if mix is not None:
+        classes = mix.classes
+        slot_class = mix.assign(n_slots)
+    holders: Tuple[HolderTrack, ...] = ()
+    holder_class: Tuple[int, ...] = ()
+    if store is not None and store.R > 0:
+        h_rng = np.random.default_rng(np.random.SeedSequence(entropy + [2]))
+        # Same holder heterogeneity/scoping rules as the heap oracle's
+        # P2PCheckpointStore: hazard mults only for a non-trivial mix,
+        # shock scope restricted to the shock's class subset.
+        mults = (mix.hazard_mults(store.R)
+                 if mix is not None and not mix.is_trivial else None)
+        mask = shock.scope_mask(mix, store.R) if shock is not None else None
+        proc = ReplicaSetProcess(store.R, scen.mtbf_fn, store.t_repair, h_rng,
+                                 slot_mults=mults, shock=shock,
+                                 shock_clock=clock, scope_mask=mask)
+        holders = proc.lifetimes_until(horizon)
+        if mix is not None:
+            holder_class = mix.assign(store.R)
     return StageSchedule(k=k, watch=watch, n_slots=n_slots, seed=int(seed),
                          horizon=float(horizon), events=events,
-                         shock_epochs=epochs, shock_rate=rate)
+                         shock_epochs=epochs, shock_rate=rate,
+                         classes=classes, slot_class=slot_class,
+                         store=store, holders=holders,
+                         holder_class=holder_class)
 
 
 @dataclass
@@ -243,7 +429,18 @@ class FailureInjector:
             self._net = None
             self._cursor = 0
             self._watch = self.schedule.watch
+            # Heterogeneous replay: emit observations in baseline-hazard-
+            # equivalent seconds (lifetime * class hazard mult), so a
+            # class-blind MLE over them estimates the BASE mu; paired with
+            # the schedule's hazard-weighted k/exposure aggregates this
+            # reproduces the engine's cadence law.  All mults are 1.0 for
+            # a class-free schedule — observations bit-identical.
+            self._obs_mult = (
+                tuple(self.schedule.hazard_mult(s)
+                      for s in range(self.schedule.n_slots))
+                if self.schedule.classes else None)
             return
+        self._obs_mult = None
         slots = self.n_slots or max(4 * self.k, 16)
         rng = np.random.default_rng(self.seed)
         if self.scenario is not None:
@@ -283,7 +480,10 @@ class FailureInjector:
         t_end = self.virtual_time + seconds
         for ev in self._deaths_until(t_end):
             if ev.slot < self._watch:
-                self.observed_lifetimes.append(ev.lifetime)
+                life = ev.lifetime
+                if self._obs_mult is not None:
+                    life *= self._obs_mult[ev.slot]
+                self.observed_lifetimes.append(life)
             if exposed and ev.slot < self.k:
                 self.virtual_time = ev.time
                 raise SimulatedFailure(ev.lifetime, ev.slot, ev.time)

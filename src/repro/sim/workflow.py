@@ -439,6 +439,7 @@ def export_failure_schedule(
     n_slots: int = 128,
     horizon_factor: float = 120.0,
     mix: Optional[PeerClassMix] = None,
+    store: Optional[StoreSpec] = None,
 ) -> "WorkflowSchedule":
     """Materialize one seed's churn realization for every stage of the DAG.
 
@@ -449,8 +450,15 @@ def export_failure_schedule(
     its own ``(seed, SCHEDULE_STREAM, stage_index)`` child stream, so the
     realization of one stage never depends on the DAG shape upstream.
 
+    Pass the same ``mix``/``store`` given to :func:`simulate_workflow` and
+    the schedules additionally pin each stage's class map and replica-
+    holder realization — the executor then runs supersteps at class speed
+    and derives restore/fetch latency endogenously from the pinned holders
+    (DESIGN.md Sec 10), the same laws the sim's cells apply in closed form.
+
     ``horizon_factor`` scales each stage's horizon off its fault-free wall
-    time + hand-off budget; the default comfortably covers the executor's
+    time + hand-off budget (the store's server-path fetch time bounds an
+    endogenous edge); the default comfortably covers the executor's
     ``max_wall_factor=50`` censor horizons (hand-off + compute), so a
     well-formed run exhausts its censor budget before its schedule.
     """
@@ -464,12 +472,13 @@ def export_failure_schedule(
         speed = (stage_mix.mean_speed(stage.k)
                  if stage_mix is not None else 1.0)
         stage_wall = stage.work / speed
-        total_handoff = stage.handoff * len(stage.deps)
+        edge_cost = stage.handoff if store is None else store.td_server
+        total_handoff = edge_cost * len(stage.deps)
         horizon = horizon_factor * (stage_wall
                                     + max(total_handoff, stage_wall) + 1.0)
         stages[stage.name] = build_stage_schedule(
             scen, k=stage.k, seed=seed, horizon=horizon, n_slots=n_slots,
-            mix=stage_mix, shock=stage_shock, stage_index=idx)
+            mix=stage_mix, shock=stage_shock, stage_index=idx, store=store)
     return WorkflowSchedule(stages=stages, seed=int(seed), scenario=scen.name)
 
 

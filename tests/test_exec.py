@@ -1,13 +1,17 @@
 """Resumable workflow executor: fault-free determinism, crash-and-resume
-from a surviving replica with the primary corrupted, and the digital-twin
-parity headline (sim-predicted waste vs executor-measured waste)."""
+from a surviving replica with the primary corrupted, heterogeneous class-
+speed supersteps, endogenous restore latency off pinned holder
+realizations, and the digital-twin parity headlines (sim-predicted waste
+vs executor-measured waste, homogeneous and two-class shocked)."""
 import glob
 import math
 import os
+from dataclasses import replace
 
 import numpy as np
 import pytest
 
+from repro.core.adaptive import AdaptiveCheckpointController
 from repro.exec import (
     ExecutorConfig,
     ExecutorKilled,
@@ -17,6 +21,9 @@ from repro.exec import (
     WorkflowExecutor,
     stage_paths,
 )
+from repro.p2p import HolderTrack, StoreSpec
+from repro.runtime.failures import WorkflowSchedule, build_stage_schedule
+from repro.sim import peer_class_mix
 from repro.sim.engine import PolicyConfig
 from repro.sim.scenarios import ShockSpec, scenario
 from repro.sim.workflow import (
@@ -177,6 +184,129 @@ def test_censored_stage_marks_dependents_incomplete(tmp_path):
 
 
 # --------------------------------------------------------------------------- #
+# Heterogeneous + endogenous-restore execution (the shared cycle-accounting  #
+# core): class-speed supersteps, holder-derived fetch/restore latency,       #
+# schedule exhaustion as censoring, fixed-policy tick skip.                   #
+# --------------------------------------------------------------------------- #
+
+def test_supersteps_run_at_class_speed(tmp_path):
+    mix = peer_class_mix("fast_core_volunteer_tail")
+    sched = export_failure_schedule(SPEC2, CALM, seed=0, horizon_factor=60.0,
+                                    mix=mix)
+    speed_a = sched.stages["a"].job_speed()
+    speed_b = sched.stages["b"].job_speed()
+    assert speed_a != 1.0                    # the mix actually changes pace
+    rep = WorkflowExecutor(SPEC2, TASKS2, sched, _cfg(tmp_path / "r")).run()
+    assert rep.completed and rep.total_waste == 0.0
+    # Fault-free elapsed = work at class speed + checkpoint stalls — the
+    # engine's heterogeneous cycle law (interval*speed work per cadence).
+    a, b = rep.stages["a"], rep.stages["b"]
+    assert a.elapsed_virtual == pytest.approx(
+        300.0 / speed_a + a.n_checkpoints * 20.0)
+    assert b.elapsed_virtual == pytest.approx(
+        30.0 + 600.0 / speed_b + b.n_checkpoints * 20.0)
+    # Same DAG without the mix runs strictly slower per unit work at
+    # speed 1.0 (this mix's mean speed over k=8 slots is > 1).
+    plain = export_failure_schedule(SPEC2, CALM, seed=0, horizon_factor=60.0)
+    assert plain.stages["a"].job_speed() == 1.0
+
+
+def test_endogenous_handoff_reads_pinned_holders(tmp_path):
+    store = StoreSpec(R=3)
+    td_peer = store.transfer.restore_seconds_from([1.0, 1.0, 1.0])
+
+    sched = export_failure_schedule(SPEC2, CALM, seed=0, horizon_factor=60.0,
+                                    store=store)
+    for name in sched.stages:   # pin every holder permanently UP
+        sched.stages[name] = replace(sched.stages[name],
+                                     holders=(HolderTrack(True),) * 3)
+    rep = WorkflowExecutor(SPEC2, TASKS2, sched, _cfg(tmp_path / "up")).run()
+    assert rep.completed
+    # The a->b edge costs exactly the striped peer fetch, not stage.handoff,
+    # and peer replicas cost the work-pool server nothing.
+    assert rep.stages["b"].handoff_time == pytest.approx(td_peer)
+    assert rep.server_bytes == 0.0
+
+    sched = export_failure_schedule(SPEC2, CALM, seed=0, horizon_factor=60.0,
+                                    store=store)
+    for name in sched.stages:   # pin every holder permanently DOWN
+        sched.stages[name] = replace(sched.stages[name],
+                                     holders=(HolderTrack(False),) * 3)
+    rep = WorkflowExecutor(SPEC2, TASKS2, sched, _cfg(tmp_path / "dn")).run()
+    assert rep.completed
+    # All replicas down -> the fetch falls back to the contended server
+    # path and the full image is billed to it exactly once.
+    assert rep.stages["b"].handoff_time == pytest.approx(store.td_server)
+    assert rep.server_bytes == pytest.approx(store.transfer.img_bytes)
+
+
+def test_endogenous_restore_latency_from_holder_realization(tmp_path):
+    scen = scenario("constant", mtbf=900.0)
+    spec = WorkflowSpec(stages=(Stage(name="a", work=1200.0, k=8),))
+    tasks = {"a": MixTask(dim=16, salt=1)}
+
+    store = StoreSpec(R=3)
+    td_peer = store.transfer.restore_seconds_from([1.0, 1.0, 1.0])
+    sched = export_failure_schedule(spec, scen, seed=2, horizon_factor=60.0,
+                                    store=store)
+    sched.stages["a"] = replace(sched.stages["a"],
+                                holders=(HolderTrack(True),) * 3)
+    rep = WorkflowExecutor(spec, tasks, sched, _cfg(tmp_path / "up")).run()
+    a = rep.stages["a"]
+    assert rep.completed and a.n_failures > 0
+    # Holders always up: no server fallback ever, no server I/O, and each
+    # successful restore pays exactly the striped peer time (interrupted
+    # attempts only add on top).
+    assert a.n_server_restores == 0 and a.server_bytes == 0.0
+    assert a.restore_time >= a.n_restores * td_peer - 1e-9
+
+    store0 = StoreSpec(R=0)
+    sched0 = export_failure_schedule(spec, scen, seed=2, horizon_factor=60.0,
+                                     store=store0)
+    rep0 = WorkflowExecutor(spec, tasks, sched0, _cfg(tmp_path / "r0")).run()
+    a0 = rep0.stages["a"]
+    assert rep0.completed and a0.n_failures > 0
+    # Server-only (R=0): every restore is a server fetch and every
+    # checkpoint uploads the image — the engine's billing, per attempt.
+    assert a0.n_server_restores == a0.n_restores > 0
+    assert a0.server_bytes >= store0.transfer.img_bytes * \
+        (a0.n_restores + a0.n_checkpoints) - 1e-6
+
+
+def test_schedule_exhausted_is_reported_censored_not_raised(tmp_path):
+    # Churn so hot the stage livelocks, on a schedule whose horizon is far
+    # shorter than the executor's censor budget: the retry loop runs off
+    # the recorded realization and must be REPORTED censored, not crash.
+    hot = scenario("constant", mtbf=8.0)
+    spec = WorkflowSpec(stages=(Stage(name="a", work=300.0, k=8),))
+    st = build_stage_schedule(hot, k=8, seed=0, horizon=400.0, n_slots=16)
+    sched = WorkflowSchedule(stages={"a": st}, seed=0, scenario=hot.name)
+    rep = WorkflowExecutor(spec, {"a": MixTask(dim=16, salt=1)}, sched,
+                           _cfg(tmp_path / "r")).run()
+    assert not rep.completed
+    assert not rep.stages["a"].completed
+    assert rep.stages["a"].schedule_exhausted
+
+
+def test_fixed_policy_never_ticks_the_controller(tmp_path, monkeypatch):
+    calls = []
+    orig = AdaptiveCheckpointController.tick
+
+    def counting(self, now, exposure_peers=None):
+        calls.append(now)
+        return orig(self, now, exposure_peers=exposure_peers)
+
+    monkeypatch.setattr(AdaptiveCheckpointController, "tick", counting)
+    sched = export_failure_schedule(SPEC2, CALM, seed=0, horizon_factor=60.0)
+    cfg = _cfg(tmp_path / "fx", policy="fixed", fixed_interval=120.0)
+    assert WorkflowExecutor(SPEC2, TASKS2, sched, cfg).run().completed
+    assert calls == []      # estimator upkeep is pure waste on this path
+    assert WorkflowExecutor(SPEC2, TASKS2, sched,
+                            _cfg(tmp_path / "ad")).run().completed
+    assert len(calls) > 0   # the adaptive path still folds exposure
+
+
+# --------------------------------------------------------------------------- #
 # Digital-twin parity (the acceptance headline): executor-measured waste      #
 # within the sim's predicted band under pinned shock schedules.               #
 # --------------------------------------------------------------------------- #
@@ -215,4 +345,46 @@ def test_digital_twin_parity_on_3stage_dag(tmp_path):
     assert abs(float(m.mean()) - mean) <= tol, \
         f"executor mean {m.mean():.1f} vs sim mean {mean:.1f} (tol {tol:.1f})"
     # ...and the measurement lands inside the sim's per-seed 3-sigma band.
+    assert lo <= float(m.mean()) <= hi, (lo, float(m.mean()), hi)
+
+
+def test_digital_twin_parity_two_class_endogenous(tmp_path):
+    # The PR 8 headline: a two-class shocked DAG whose schedules pin class
+    # maps AND replica-holder realizations.  The executor runs supersteps
+    # at class speed and derives every restore/fetch endogenously from the
+    # pinned holders; the sim predicts the same laws in closed form.
+    scen = scenario("constant", mtbf=5400.0).with_shock(
+        ShockSpec(rate=1 / 3600.0, kill_frac=0.3))
+    mix = peer_class_mix("fast_core_volunteer_tail")
+    store = StoreSpec(R=3)
+    spec = WorkflowSpec(stages=(
+        Stage(name="prep", work=1800.0, k=8),
+        Stage(name="train", work=2400.0, k=8, deps=("prep",), handoff=120.0),
+        Stage(name="eval", work=900.0, k=8, deps=("train",), handoff=60.0),
+    ))
+    pol = PolicyConfig(kind="adaptive", prior_mu=1 / 5400.0, prior_v=20.0)
+    res = simulate_workflow(spec, scen, policy=pol, seeds=range(24),
+                            V=20.0, T_d=50.0, mix=mix, store=store)
+    assert res.all_completed
+    pw = predicted_waste(res)
+    lo, mean, hi = waste_band(res)
+
+    tasks = {"prep": MixTask(dim=16, salt=1), "train": MixTask(dim=16, salt=2),
+             "eval": MixTask(dim=16, salt=3)}
+    measured = []
+    for seed in range(6):
+        sched = export_failure_schedule(spec, scen, seed=seed,
+                                        horizon_factor=60.0,
+                                        mix=mix, store=store)
+        cfg = _cfg(tmp_path / f"s{seed}", seconds_per_superstep=15.0,
+                   V=20.0, T_d=50.0)
+        rep = WorkflowExecutor(spec, tasks, sched, cfg).run()
+        assert rep.completed, f"seed {seed} censored"
+        measured.append(rep.total_waste)
+    m = np.asarray(measured)
+
+    tol = 3.0 * math.sqrt(np.var(pw, ddof=1) / pw.size
+                          + np.var(m, ddof=1) / m.size)
+    assert abs(float(m.mean()) - mean) <= tol, \
+        f"executor mean {m.mean():.1f} vs sim mean {mean:.1f} (tol {tol:.1f})"
     assert lo <= float(m.mean()) <= hi, (lo, float(m.mean()), hi)

@@ -1,11 +1,13 @@
 """Direct unit tests for the failure injector & serialized schedules:
 deterministic replay, SimulatedFailure raise points, shock bursts, JSON
-round trips, horizon exhaustion, straggler detection."""
+round trips, horizon exhaustion, heterogeneous class maps + pinned
+replica-holder realizations, straggler detection."""
 import math
 
 import numpy as np
 import pytest
 
+from repro.p2p import HolderTrack, StoreSpec
 from repro.runtime.failures import (
     FailureEvent,
     FailureInjector,
@@ -16,11 +18,13 @@ from repro.runtime.failures import (
     WorkflowSchedule,
     build_stage_schedule,
 )
+from repro.sim import peer_class_mix
 from repro.sim.network import constant_mtbf
 from repro.sim.scenarios import ShockSpec, scenario
 
 
 SCEN = scenario("constant", mtbf=1800.0)
+MIX = peer_class_mix("fast_core_volunteer_tail")
 
 
 def _drive(inj, step_s=50.0, n_steps=2000):
@@ -190,6 +194,108 @@ def test_schedule_independent_of_other_stages():
 
 
 # --------------------------------------------------------------------------- #
+# Heterogeneous schedules: class maps, hazard-normalized observations,        #
+# drain prefix semantics under back-to-back failures, pinned holders.         #
+# --------------------------------------------------------------------------- #
+
+def test_hetero_schedule_records_class_map_and_job_laws():
+    sched = build_stage_schedule(SCEN, k=8, seed=13, horizon=60000.0, mix=MIX)
+    assert len(sched.classes) == len(MIX.classes)
+    assert len(sched.slot_class) == sched.n_slots
+    mults = [sched.hazard_mult(s) for s in range(sched.k)]
+    assert any(m != 1.0 for m in mults)
+    assert sched.job_hazard_sum() == pytest.approx(math.fsum(mults))
+    # A class-free schedule keeps the PR 7 whole-number laws bit-exact.
+    plain = build_stage_schedule(SCEN, k=8, seed=13, horizon=60000.0)
+    assert plain.job_speed() == 1.0
+    assert plain.job_hazard_sum() == float(plain.k)
+    assert plain.watch_hazard_sum() == float(plain.watch)
+
+
+def test_unexposed_advance_observes_hazard_scaled_never_raises():
+    # Restore time is unexposed: advance_seconds never raises
+    # SimulatedFailure, but every watched death in the window is still
+    # observed — scaled by the slot's hazard multiplier, so the class-blind
+    # MLE estimates the BASE mu (the engine's normalization).
+    sched = build_stage_schedule(SCEN, k=8, seed=13, horizon=60000.0, mix=MIX)
+    inj = FailureInjector.from_schedule(sched, seconds_per_step=50.0)
+    t_adv = sched.horizon * 0.999
+    inj.advance_seconds(t_adv)   # must not raise
+    got = inj.drain_observations()
+    expect = [e.lifetime * sched.hazard_mult(e.slot) for e in sched.events
+              if e.slot < sched.watch and e.time <= t_adv]
+    assert len(got) == len(expect) > 0
+    assert np.allclose(got, expect)
+
+
+def test_drain_prefix_under_back_to_back_failures_hetero():
+    # Interleaving raises and drains must deliver the watched observation
+    # stream exactly once, in time order, as a growing prefix — including
+    # when job failures land back to back (raise on consecutive advances).
+    sched = build_stage_schedule(SCEN, k=8, seed=13, horizon=60000.0, mix=MIX)
+    scaled = [e.lifetime * sched.hazard_mult(e.slot) for e in sched.events
+              if e.slot < sched.watch]
+    strictly_before = [e.time for e in sched.events if e.slot < sched.watch]
+    inj = FailureInjector.from_schedule(sched, seconds_per_step=50.0)
+    drained, fail_times = [], []
+    while True:
+        try:
+            inj.advance_step()
+        except SimulatedFailure as f:
+            fail_times.append(f.at_virtual_time)
+            got = inj.drain_observations()
+            drained.extend(got)
+            # everything strictly before the raise is already delivered
+            n_due = sum(1 for t in strictly_before if t < f.at_virtual_time)
+            assert len(drained) >= n_due
+        except ScheduleExhausted:
+            break
+        else:
+            drained.extend(inj.drain_observations())
+        # prefix semantics: the drained stream is always an exact prefix
+        assert np.allclose(drained, scaled[:len(drained)])
+    assert len(fail_times) > 10
+    # back-to-back: at least one pair of failures closer than one step
+    assert float(np.min(np.diff(fail_times))) < 50.0
+
+
+def test_holder_realization_roundtrip_and_replay():
+    scen = scenario("constant", mtbf=3600.0).with_shock(
+        ShockSpec(rate=1 / 4000.0, kill_frac=0.5))
+    sched = build_stage_schedule(scen, k=8, seed=21, horizon=60000.0,
+                                 mix=MIX, store=StoreSpec(R=3))
+    assert len(sched.holders) == 3 and len(sched.holder_class) == 3
+    assert all(isinstance(h, HolderTrack) for h in sched.holders)
+    back = StageSchedule.from_dict(sched.to_dict())
+    assert back == sched
+    # Two fresh replay views walk identical alive-set trajectories.
+    va, vb = sched.holder_view(), back.holder_view()
+    for t in np.linspace(0.0, sched.horizon, 200):
+        assert va.alive_slots(float(t)) == vb.alive_slots(float(t))
+    # Past the recorded horizon the realization carries no information.
+    with pytest.raises(ScheduleExhausted):
+        sched.holder_view().alive_slots(sched.horizon * 2)
+
+
+def test_holder_churn_rides_the_same_shock_clock():
+    # Replica wipeouts must coincide with the job-slot bursts: the holder
+    # process consumes the SAME pinned ShockClock, so some holder
+    # down-toggle lands exactly on a recorded shock epoch.
+    scen = scenario("constant", mtbf=36000.0).with_shock(
+        ShockSpec(rate=1 / 4000.0, kill_frac=0.9))
+    sched = build_stage_schedule(scen, k=8, seed=9, horizon=60000.0,
+                                 store=StoreSpec(R=4))
+    assert len(sched.shock_epochs) > 0
+    toggles = {t for h in sched.holders for t in h.toggles}
+    assert any(ep in toggles for ep in sched.shock_epochs)
+    # Attaching the store never perturbs the event/epoch streams (the
+    # holder realization draws from its own child stream).
+    plain = build_stage_schedule(scen, k=8, seed=9, horizon=60000.0)
+    assert plain.events == sched.events
+    assert plain.shock_epochs == sched.shock_epochs
+
+
+# --------------------------------------------------------------------------- #
 # JSON round trip.                                                            #
 # --------------------------------------------------------------------------- #
 
@@ -208,6 +314,26 @@ def test_workflow_schedule_json_roundtrip():
     # And the round-tripped schedule replays identically.
     assert _drive(FailureInjector.from_schedule(back.stages["a"], 30.0)) == \
         _drive(FailureInjector.from_schedule(stages["a"], 30.0))
+
+
+def test_hetero_workflow_schedule_json_roundtrip():
+    # Class tables, slot maps, store spec and holder tracks all survive
+    # the JSON string round trip (not just to_dict/from_dict).
+    scen = scenario("constant", mtbf=3600.0).with_shock(
+        ShockSpec(rate=1 / 5000.0, kill_frac=0.3))
+    stages = {name: build_stage_schedule(scen, k=8, seed=2, horizon=9000.0,
+                                         stage_index=i, mix=MIX,
+                                         store=StoreSpec(R=3))
+              for i, name in enumerate(("a", "b"))}
+    ws = WorkflowSchedule(stages=stages, seed=2, scenario=scen.name)
+    back = WorkflowSchedule.from_json(ws.to_json())
+    for name in stages:
+        assert back.stages[name] == stages[name]
+    # Homogeneous schedules serialize without ANY of the new keys — the
+    # PR 7 wire format byte for byte.
+    plain = build_stage_schedule(SCEN, k=8, seed=2, horizon=9000.0)
+    assert not ({"classes", "slot_class", "store", "holders", "holder_class"}
+                & set(plain.to_dict()))
 
 
 # --------------------------------------------------------------------------- #
