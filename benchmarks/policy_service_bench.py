@@ -1,0 +1,156 @@
+"""Policy-service load bench: the engine's churn model as a traffic gun.
+
+Replays scenario-registry observation streams (``synthetic_stream``)
+through the batched session flow and reports serving metrics:
+
+* ``policy_query_batch`` — one-shot query flow on a deterministic batch.
+  ``mean_interval`` is bit-deterministic (exact-key Lambert-W cache) and
+  gated tight; ``us_per_call`` is wall time and gated generously.
+* ``policy_session_replay`` — 100k clients x several rounds through
+  ``session_update_arrays`` (windowed estimator, quantized Lambert-W cache
+  — the fleet-throughput mode).  Derived carries p50/p99 flush latency,
+  decisions/sec, the cache hit rate and the mean committed interval
+  (deterministic: value-quantized cache answers are order-independent).
+* ``policy_batched_speedup`` — the same replayed stream through a
+  per-client ``AdaptiveCheckpointController`` loop on a subsample; the
+  batched path must be >= 5x faster per decision (asserted in full mode,
+  reported always).
+* ``policy_moment_1m`` (full mode only) — 1M clients on the O(1)-state
+  moment estimator: the fleet-scale ceiling row.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.policy import PolicyRequest, apply_request, controller_for
+from repro.serve.policy_service import PolicyService, synthetic_stream
+
+_TEMPLATE = PolicyRequest(k=8.0, window=32, prior_mu=1.0 / 7200.0)
+
+
+def _replay_batched(n_clients: int, rounds, *, estimator: str,
+                    lw_key_bits) -> dict:
+    svc = PolicyService(estimator=estimator, max_window=_TEMPLATE.window,
+                        lw_key_bits=lw_key_bits)
+    clients = [f"c{i}" for i in range(n_clients)]
+    lat, mean_iv = [], 0.0
+    for batch in rounds:
+        t0 = time.perf_counter()
+        db = svc.session_update_arrays(clients, template=_TEMPLATE, **batch)
+        lat.append(time.perf_counter() - t0)
+        mean_iv = float(db.interval.mean())
+    lat_arr = np.asarray(lat)
+    n_dec = n_clients * len(lat)
+    return {
+        "p50_ms": float(np.percentile(lat_arr, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat_arr, 99) * 1e3),
+        "qps": n_dec / float(lat_arr.sum()),
+        "us_per_decision": float(lat_arr.sum()) / n_dec * 1e6,
+        "mean_interval": mean_iv,
+        "lw_hit_rate": svc.stats()["lw_hit_rate"],
+        "n_decisions": n_dec,
+    }
+
+
+def _replay_controllers(n_clients: int, rounds) -> dict:
+    """The pre-service path: one Python controller per client, per-event."""
+    ctls = [controller_for(_TEMPLATE) for _ in range(n_clients)]
+    n_dec = 0
+    t0 = time.perf_counter()
+    for batch in rounds:
+        fails, over = batch["failures"], batch["checkpoint_overheads"]
+        rest, now = batch["restores"], batch["now"]
+        for i, ctl in enumerate(ctls):
+            for x in fails[i]:
+                ctl.observe_failure(float(x))
+            ctl.observe_checkpoint_overhead(float(over[i]))
+            if not np.isnan(rest[i]):
+                ctl.observe_restore(float(rest[i]))
+            ctl.tick(float(now[i]))
+            ctl.checkpoint_interval()
+            n_dec += 1
+    dt = time.perf_counter() - t0
+    return {"us_per_decision": dt / n_dec * 1e6, "n_decisions": n_dec}
+
+
+def _stream(n_clients: int, n_rounds: int, seed: int = 0) -> List[dict]:
+    return list(synthetic_stream(
+        "diurnal", n_clients=n_clients, n_rounds=n_rounds, obs_per_round=2,
+        mix="boinc", seed=seed))
+
+
+def run_all(fast: bool = False) -> List[str]:
+    rows = ["name,us_per_call,derived"]
+
+    # ------------------------------------------------------------------ #
+    # One-shot query flow (exact cache: mean_interval is bitwise stable) #
+    # ------------------------------------------------------------------ #
+    svc = PolicyService()
+    reqs = [PolicyRequest(client=f"q{i}", k=float(4 + i % 13),
+                          failures=(1800.0 + 37.0 * i, 5400.0 + 11.0 * i),
+                          checkpoint_overheads=(15.0 + 0.25 * i,),
+                          restores=(40.0 + i,) if i % 2 else (),
+                          now=7200.0 + 60.0 * i)
+            for i in range(256)]
+    t0 = time.perf_counter()
+    decs = svc.query(reqs)
+    dt = time.perf_counter() - t0
+    mean_iv = float(np.mean([d.interval for d in decs]))
+    rows.append(
+        f"policy_query_batch,{dt / len(reqs) * 1e6:.2f},"
+        f"mean_interval={mean_iv:.6f};n_requests={len(reqs)}")
+
+    # ------------------------------------------------------------------ #
+    # Streaming session replay at fleet width                            #
+    # ------------------------------------------------------------------ #
+    n_clients = 100_000
+    n_rounds = 4 if fast else 6
+    stream = _stream(n_clients, n_rounds)
+    rep = _replay_batched(n_clients, stream, estimator="windowed",
+                          lw_key_bits=12)
+    rows.append(
+        f"policy_session_replay,{rep['us_per_decision']:.3f},"
+        f"p50_ms={rep['p50_ms']:.2f};p99_ms={rep['p99_ms']:.2f};"
+        f"qps={rep['qps']:.0f};clients={n_clients};rounds={n_rounds};"
+        f"lw_hit_rate={rep['lw_hit_rate']:.4f};"
+        f"mean_interval={rep['mean_interval']:.6f}")
+
+    # ------------------------------------------------------------------ #
+    # Batched vs per-client controller loop on the SAME stream           #
+    # ------------------------------------------------------------------ #
+    n_sub = 1000 if fast else 4000
+    sub = [{k: v[:n_sub] for k, v in b.items()} for b in stream]
+    base = _replay_controllers(n_sub, sub)
+    batched = _replay_batched(n_sub, sub, estimator="windowed",
+                              lw_key_bits=12)
+    speedup = base["us_per_decision"] / batched["us_per_decision"]
+    if not fast:
+        assert speedup >= 5.0, (
+            f"batched session path only {speedup:.1f}x faster than the "
+            f"per-client controller loop (needs >= 5x)")
+    rows.append(
+        f"policy_batched_speedup,{batched['us_per_decision']:.3f},"
+        f"speedup={speedup:.1f}x;controller_us={base['us_per_decision']:.1f};"
+        f"n_clients={n_sub}")
+
+    # ------------------------------------------------------------------ #
+    # 1M-client ceiling on the O(1)-state moment form (full runs only)   #
+    # ------------------------------------------------------------------ #
+    if not fast:
+        n_big = 1_000_000
+        rep = _replay_batched(n_big, _stream(n_big, 3), estimator="moment",
+                              lw_key_bits=10)
+        rows.append(
+            f"policy_moment_1m,{rep['us_per_decision']:.3f},"
+            f"qps={rep['qps']:.0f};p99_ms={rep['p99_ms']:.2f};"
+            f"clients={n_big};lw_hit_rate={rep['lw_hit_rate']:.4f};"
+            f"mean_interval={rep['mean_interval']:.6f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run_all():
+        print(row)

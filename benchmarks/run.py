@@ -16,7 +16,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig5,kernels,e2e,roofline,offload,"
-                         "gossip,hetero,shocks,fleet,exec")
+                         "gossip,hetero,shocks,fleet,exec,policy")
     ap.add_argument("--fast", action="store_true",
                     help="tiny smoke grids (CI): fewer seeds/intervals, short jobs")
     args = ap.parse_args()
@@ -101,6 +101,14 @@ def main() -> None:
         for row in executor_bench.run_all(fast=args.fast)[1:]:
             print(row, flush=True)
         sys.stderr.write(f"[bench] executor_bench done in "
+                         f"{time.monotonic() - t:.0f}s\n")
+
+    if want("policy"):
+        from benchmarks import policy_service_bench
+        t = time.monotonic()
+        for row in policy_service_bench.run_all(fast=args.fast)[1:]:
+            print(row, flush=True)
+        sys.stderr.write(f"[bench] policy_service_bench done in "
                          f"{time.monotonic() - t:.0f}s\n")
 
     if want("roofline"):

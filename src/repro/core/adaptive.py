@@ -31,7 +31,7 @@ Two V estimators are provided:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import InitVar, dataclass, field
 from typing import Optional
 
 from repro.core.failure import FailureRateEstimator
@@ -117,6 +117,10 @@ class AdaptiveCheckpointController:
     ema_alpha: float = 0.2
     min_interval: float = 1.0       # safety clamps on 1/lambda*
     max_interval: float = 24 * 3600.0
+    prior_count: int = 4            # pseudo-failures backing prior_mu
+    # Deprecated engine-cell spellings (repro.policy migration notes).
+    min_iv: InitVar[Optional[float]] = None
+    max_iv: InitVar[Optional[float]] = None
 
     mu_est: FailureRateEstimator = field(init=False)
     _clean_step: _Ema = field(init=False)
@@ -128,10 +132,20 @@ class AdaptiveCheckpointController:
     _exposure_anchor: float = field(default=0.0, init=False, repr=False)
     _anchor_dirty: bool = field(default=False, init=False, repr=False)
 
-    def __post_init__(self) -> None:
+    def __post_init__(self, min_iv: Optional[float] = None,
+                      max_iv: Optional[float] = None) -> None:
+        if min_iv is not None:
+            from repro.policy import warn_deprecated_alias
+            warn_deprecated_alias("min_iv", "min_interval")
+            self.min_interval = float(min_iv)
+        if max_iv is not None:
+            from repro.policy import warn_deprecated_alias
+            warn_deprecated_alias("max_iv", "max_interval")
+            self.max_interval = float(max_iv)
         if self.k <= 0:
             raise ValueError("k (number of nodes) must be positive")
-        self.mu_est = FailureRateEstimator(window=self.mu_window, prior_mu=self.prior_mu)
+        self.mu_est = FailureRateEstimator(window=self.mu_window, prior_mu=self.prior_mu,
+                                           prior_count=self.prior_count)
         self._clean_step = _Ema(alpha=self.ema_alpha)
         self._ckpt_overhead = _Ema(alpha=self.ema_alpha)
 
@@ -218,7 +232,8 @@ class AdaptiveCheckpointController:
         local_mu = self.mu
         merged_mu = (1 - weight) * local_mu + weight * mu
         # Re-seed the estimator so subsequent local observations keep moving it.
-        self.mu_est = FailureRateEstimator(window=self.mu_window, prior_mu=merged_mu)
+        self.mu_est = FailureRateEstimator(window=self.mu_window, prior_mu=merged_mu,
+                                           prior_count=self.prior_count)
         if V > 0:
             # The blend is applied here once; _Ema.set stores it verbatim
             # (update() would EMA-damp the already-blended value, skewing

@@ -115,6 +115,156 @@ def lambertw0_numpy(z, iters: int = 16):
     return np.where(zc <= _BRANCH, -1.0, w)
 
 
+class LambertWCache:
+    """Quantized-key memoization of W0 solves (the Eq. 11 hot path).
+
+    The policy service and the runtime controller solve W0 at arguments
+    clustered just above the branch point z = -1/e (V -> 0 maps exactly
+    onto it), where dW/dz diverges — so keys are built from the offset
+    ``d = z - (-1/e)``, whose *relative* resolution bounds the relative
+    error of the resulting interval (W0+1 ~ sqrt(2e*d) near the branch).
+
+    ``key_bits`` keeps that many leading mantissa bits of ``d``:
+
+    * ``None`` (default) — **exact**: the key is the full bit pattern of
+      z and the solve runs at z itself, so the cache is bitwise
+      transparent — it can only return exactly what
+      :func:`lambertw0_scalar` would.  This is the mode the adaptive
+      controller uses; repeated queries at unchanged estimates hit.
+    * ``key_bits = B`` — **quantized**: z is snapped to its bucket's
+      representative (low ``52 - B`` mantissa bits of ``d`` zeroed) and
+      the solve runs AT the snapped argument.  The map z -> W is then a
+      pure function of the key: a *hit returns bitwise the same float a
+      cold evaluation of the same z would* — order- and history-
+      independent — at the price of a relative interval error bounded by
+      ~``2**-B`` (the policy service's fleet throughput mode; B=12 =>
+      ~2e-4).
+
+    ``hits`` / ``misses`` count solves served from the table vs computed
+    fresh; ``max_entries`` bounds the table (cleared wholesale when full
+    — the workloads are either small-support or quantized).
+    """
+
+    def __init__(self, key_bits: int | None = None,
+                 max_entries: int = 1 << 18) -> None:
+        if key_bits is not None and not 1 <= key_bits <= 52:
+            raise ValueError("key_bits must be in [1, 52] or None (exact)")
+        self.key_bits = key_bits
+        self.max_entries = int(max_entries)
+        self._drop = 0 if key_bits is None else 52 - key_bits
+        self._table: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------------ #
+    # Key / representative construction                                  #
+    # ------------------------------------------------------------------ #
+    def snap(self, z: float) -> float:
+        """The representative argument actually solved for ``z``'s bucket."""
+        import struct
+
+        z = float(z)
+        if z < _BRANCH:
+            z = _BRANCH
+        if self._drop == 0:
+            return z
+        d = z - _BRANCH
+        bits = struct.unpack("<q", struct.pack("<d", d))[0]
+        bits &= ~((1 << self._drop) - 1)
+        return struct.unpack("<d", struct.pack("<q", bits))[0] + _BRANCH
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def __len__(self) -> int:
+        return len(self._table)
+
+    def clear(self) -> None:
+        self._table.clear()
+
+    def _room(self, incoming: int = 1) -> None:
+        if len(self._table) + incoming > self.max_entries:
+            self._table.clear()
+
+    # ------------------------------------------------------------------ #
+    # Solves                                                             #
+    # ------------------------------------------------------------------ #
+    def solve(self, z: float) -> float:
+        """Scalar W0(z) through the cache (bitwise = cold solve of z)."""
+        import struct
+
+        z = float(z)
+        if z < _BRANCH:
+            z = _BRANCH
+        if self._drop == 0:
+            rep = z
+            key = struct.unpack("<q", struct.pack("<d", z))[0]
+        else:
+            d = struct.unpack("<q", struct.pack("<d", z - _BRANCH))[0]
+            key = d & ~((1 << self._drop) - 1)
+            rep = struct.unpack("<d", struct.pack("<q", key))[0] + _BRANCH
+        got = self._table.get(key)
+        if got is not None:
+            self.hits += 1
+            return got
+        self.misses += 1
+        val = lambertw0_scalar(rep)
+        self._room()
+        self._table[key] = val
+        return val
+
+    def solve_many(self, z) -> "np.ndarray":  # noqa: F821 - doc type
+        """Vectorized W0 through the cache.
+
+        Unique keys are looked up / solved once (scalar solver, so results
+        are bitwise identical to :meth:`solve` / :func:`lambertw0_scalar`
+        at the representative); duplicates fan back out by inverse index.
+        """
+        import numpy as np
+
+        z = np.ascontiguousarray(np.asarray(z, dtype=np.float64))
+        shape = z.shape
+        z = np.maximum(z.ravel(), _BRANCH)
+        if self._drop == 0:
+            keys = z.view(np.int64)
+            reps = z
+        else:
+            d = np.ascontiguousarray(z - _BRANCH)
+            keys = d.view(np.int64) & ~np.int64((1 << self._drop) - 1)
+            reps = keys.view(np.float64) + _BRANCH
+        uniq, first, inv = np.unique(keys, return_index=True,
+                                     return_inverse=True)
+        vals = np.empty(uniq.shape[0], dtype=np.float64)
+        table = self._table
+        n_new = 0
+        self._room(uniq.shape[0])
+        for j, key in enumerate(uniq.tolist()):
+            got = table.get(key)
+            if got is None:
+                got = lambertw0_scalar(float(reps[first[j]]))
+                table[key] = got
+                n_new += 1
+            vals[j] = got
+        self.misses += n_new
+        self.hits += z.shape[0] - n_new
+        return vals[inv].reshape(shape)
+
+
+_DEFAULT_CACHE = LambertWCache()  # exact keys: bitwise-transparent memo
+
+
+def default_cache() -> LambertWCache:
+    """The process-wide exact cache the scalar Eq. 11 path routes through."""
+    return _DEFAULT_CACHE
+
+
+def lambertw0_cached(z: float) -> float:
+    """Scalar W0 through the default exact cache (bitwise = lambertw0_scalar)."""
+    return _DEFAULT_CACHE.solve(z)
+
+
 def lambertw0_scalar(z: float, iters: int = 64, tol: float = 1e-14) -> float:
     """Pure-Python scalar W0 — fast path for the runtime controller.
 

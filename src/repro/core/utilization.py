@@ -91,18 +91,25 @@ def optimal_interval(mu, k, V, T_d):
     return 1.0 / optimal_lambda(mu, k, V, T_d)
 
 
-def optimal_interval_scalar(mu: float, k: float, V: float, T_d: float) -> float:
+def optimal_interval_scalar(mu: float, k: float, V: float, T_d: float,
+                            cache=None) -> float:
     """Pure-Python scalar fast path of :func:`optimal_interval`.
 
     The runtime controller and the discrete-event simulator evaluate this
     inside tight loops where jnp eager dispatch dominates; tests assert it
     matches the jnp closed form to 1e-12.
+
+    The W0 solve routes through a :class:`repro.core.lambertw.LambertWCache`
+    — ``cache`` if given, else the process-wide *exact* default cache, which
+    is bitwise-transparent (it can only return what ``lambertw0_scalar``
+    would) so every historical caller is unchanged to the last ulp while
+    repeated solves at unchanged estimates become dict lookups.
     """
-    from repro.core.lambertw import lambertw0_scalar
+    from repro.core.lambertw import default_cache
 
     kmu = float(k) * float(mu)
     arg = (V * kmu - T_d * kmu - 1.0) / (T_d * kmu + 1.0) / _E
-    x = lambertw0_scalar(arg) + 1.0
+    x = (cache if cache is not None else default_cache()).solve(arg) + 1.0
     if x <= 0.0:
         return float("inf")  # branch point: V == 0, checkpoint continuously
     return x / kmu

@@ -2,6 +2,10 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-27b --smoke \
         --batch 4 --prompt-len 16 --tokens 32
+
+Built from the :mod:`repro.serve.step` factories — the same callables the
+dry-run lowers — so the CLI times the code path that actually ships instead
+of a hand-rolled inline copy.
 """
 from __future__ import annotations
 
@@ -12,8 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.models import init_params, prefill
-from repro.models.model import decode_step
+from repro.models import init_params
+from repro.serve.step import make_prefill_step, make_serve_step
 
 
 def main() -> None:
@@ -27,23 +31,26 @@ def main() -> None:
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params = init_params(jax.random.key(0), cfg)
-    prompt = jax.random.randint(jax.random.key(1),
-                                (args.batch, args.prompt_len), 0, cfg.vocab)
-    frames = None
+    batch = {"tokens": jax.random.randint(jax.random.key(1),
+                                          (args.batch, args.prompt_len),
+                                          0, cfg.vocab)}
     if cfg.family == "encdec":
-        frames = jax.random.normal(
-            jax.random.key(2), (args.batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        batch["frames"] = jax.random.normal(
+            jax.random.key(2), (args.batch, cfg.enc_seq, cfg.d_model),
+            jnp.bfloat16)
+
+    prefill_step = jax.jit(make_prefill_step(
+        cfg, max_seq=args.prompt_len + args.tokens))
+    serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
 
     t0 = time.monotonic()
-    logits, cache = prefill(params, prompt, cfg,
-                            max_seq=args.prompt_len + args.tokens, frames=frames)
+    logits, cache = prefill_step(params, batch)
     print(f"prefill: {time.monotonic() - t0:.2f}s")
 
-    step = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg), donate_argnums=(1,))
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
     t0 = time.monotonic()
     for _ in range(args.tokens - 1):
-        logits, cache = step(params, cache, tok)
+        logits, cache = serve_step(params, cache, {"tokens": tok})
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
     jax.block_until_ready(tok)
     dt = time.monotonic() - t0

@@ -1,3 +1,17 @@
+from repro.serve.policy_service import (
+    CalibrationReport,
+    DecisionBatch,
+    PolicyService,
+    synthetic_stream,
+)
 from repro.serve.step import greedy_generate, make_prefill_step, make_serve_step
 
-__all__ = ["greedy_generate", "make_prefill_step", "make_serve_step"]
+__all__ = [
+    "CalibrationReport",
+    "DecisionBatch",
+    "PolicyService",
+    "greedy_generate",
+    "make_prefill_step",
+    "make_serve_step",
+    "synthetic_stream",
+]

@@ -1,0 +1,670 @@
+"""Streaming checkpoint-interval service (DESIGN.md Sec 11).
+
+The paper's controller finally serves traffic: clients submit failure /
+repair observations and receive per-client Eq. 11 intervals.  Three request
+flows, modeled on ComputeHorde's job taxonomy (SNIPPETS.md — synthetic,
+organic, streaming organic):
+
+* **calibrate** — the service generates synthetic lifetimes with a KNOWN
+  mu, runs them through exactly the estimator path a client's observations
+  would take, and reports the estimate's relative error plus the interval
+  an oracle with the true mu would commit.  A client uses this to validate
+  its integration before trusting organic answers.
+* **query** — one-shot: a batch of :class:`~repro.policy.PolicyRequest`
+  observation bundles in, one :class:`~repro.policy.PolicyDecision` each
+  out.  No state survives the call.
+* **session** — long-lived telemetry: each client streams observations
+  over many requests and the service keeps incremental estimator state
+  (windowed lifetimes, censored-exposure anchor, V EMA, last restore) per
+  client, resumable across restarts via :mod:`repro.ckpt.store` atomic
+  snapshots.
+
+Batching model
+--------------
+Concurrent requests are folded through ONE struct-of-arrays estimator
+update per event column — the engine's ``[B, ...]`` vectorized form —
+instead of per-client Python controller loops.  Two estimator forms:
+
+* ``estimator="windowed"`` (default) — the controller's exact law,
+  vectorized: per-client ring buffers of the last ``window`` lifetimes
+  summed in deque order (sequential float adds, so every decision is
+  **bit-identical** to what :class:`AdaptiveCheckpointController` commits
+  inside ``simulate_job`` for the same stream — property-tested), plus the
+  censored-exposure tick semantics, bias-corrected V EMA and last-restore
+  T_d.
+* ``estimator="moment"`` — the engine's decayed moment form (PR 6): per
+  client only ``(ema_d, ema_T)`` with death-decay ``beta = exp(log(1 -
+  1/window))`` and ``mu_hat = (ema_d + prior_count) / (ema_T +
+  prior_count/prior_mu)``.  O(1) floats per client — the 1M-client scale
+  mode; approximates the windowed MLE like the engine does.
+
+Every Eq. 11 solve goes through a :class:`repro.core.lambertw.LambertWCache`
+(``lw_key_bits=None`` → exact keys, bitwise-transparent; small ``key_bits``
+→ quantized fleet-throughput mode with hit-rate counters — see that class
+for the error bound).
+
+Session snapshot / resume contract
+----------------------------------
+:meth:`PolicyService.snapshot` writes the whole session state (arrays +
+client table + counters) as one atomic ``ckpt.store`` checkpoint
+(``.part`` + fsync + COMMITTED marker — a crash mid-save never corrupts
+the previous snapshot); :meth:`PolicyService.restore_latest` rebuilds a
+service that continues the stream with decisions bitwise equal to an
+uninterrupted service.  The Lambert-W cache is NOT snapshotted — it is a
+pure memo and refills on demand.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.lambertw import LambertWCache
+from repro.core.utilization import optimal_interval_scalar
+from repro.policy import PolicyDecision, PolicyRequest
+
+_E = math.e
+_F8 = np.float64
+_I8 = np.int64
+
+# Struct-of-arrays session state: (name, dtype).  ``buf`` ([cap, W]) is
+# handled separately.  Order is the snapshot schema — append only.
+_FIELDS: Tuple[Tuple[str, type], ...] = (
+    ("k", _F8), ("prior_mu", _F8), ("prior_v", _F8), ("prior_count", _F8),
+    ("window", _I8), ("alpha", _F8),
+    ("min_interval", _F8), ("max_interval", _F8),
+    ("start", _I8), ("count", _I8), ("cens", _F8),
+    ("anchor", _F8), ("dirty", np.bool_),
+    ("v_val", _F8), ("v_wt", _F8),
+    ("td", _F8), ("has_td", np.bool_),
+    ("n_failures", _I8), ("n_checkpoints", _I8),
+    ("m_d", _F8), ("m_T", _F8), ("log_decay", _F8),
+)
+
+
+@dataclass(frozen=True)
+class DecisionBatch:
+    """Array-form decisions (the bulk/bench path; no per-client objects)."""
+
+    interval: np.ndarray
+    mu: np.ndarray
+    V: np.ndarray
+    T_d: np.ndarray
+    n_failures: np.ndarray
+    clamped: np.ndarray
+
+    def to_decisions(self, clients: Sequence[str]) -> List[PolicyDecision]:
+        return [PolicyDecision(interval=float(self.interval[i]),
+                               mu=float(self.mu[i]), V=float(self.V[i]),
+                               T_d=float(self.T_d[i]),
+                               n_failures=int(self.n_failures[i]),
+                               clamped=bool(self.clamped[i]),
+                               client=str(clients[i]))
+                for i in range(self.interval.shape[0])]
+
+
+@dataclass(frozen=True)
+class CalibrationReport:
+    """The calibrate flow's answer: estimator fidelity on known truth."""
+
+    mu_true: float
+    mu_hat: float
+    rel_error: float          # |mu_hat - mu_true| / mu_true
+    interval: float           # what the estimator path commits
+    interval_oracle: float    # Eq. 11 at the TRUE mu, same V/T_d/clamps
+    n_observations: int
+    decision: PolicyDecision
+
+
+class _ClientBatch:
+    """Vectorized per-client estimator state with amortized-doubling rows.
+
+    The windowed form mirrors ``AdaptiveCheckpointController`` operation by
+    operation (comments cite the scalar source) so decisions are bitwise
+    equal; the moment form mirrors the engine's decayed estimator law.
+    """
+
+    def __init__(self, estimator: str = "windowed", max_window: int = 256):
+        if estimator not in ("windowed", "moment"):
+            raise ValueError(f"unknown estimator form {estimator!r}")
+        if max_window < 1:
+            raise ValueError("max_window must be >= 1")
+        self.estimator = estimator
+        self.W = int(max_window) if estimator == "windowed" else 1
+        self.n = 0
+        self._cap = 0
+        self.buf = np.empty((0, self.W), dtype=_F8)
+        for name, dt in _FIELDS:
+            setattr(self, name, np.empty(0, dtype=dt))
+
+    # ------------------------------------------------------------------ #
+    # Row allocation                                                     #
+    # ------------------------------------------------------------------ #
+    def _ensure(self, extra: int) -> None:
+        need = self.n + extra
+        if need <= self._cap:
+            return
+        cap = max(1024, 1 << (need - 1).bit_length())
+        grown = np.zeros((cap, self.W), dtype=_F8)
+        grown[: self.n] = self.buf[: self.n]
+        self.buf = grown
+        for name, dt in _FIELDS:
+            g = np.zeros(cap, dtype=dt)
+            g[: self.n] = getattr(self, name)[: self.n]
+            setattr(self, name, g)
+        self._cap = cap
+
+    def add_rows(self, reqs: Sequence[PolicyRequest]) -> np.ndarray:
+        """New rows parameterized by each request's knobs (pinned at open)."""
+        b = len(reqs)
+        for r in reqs:
+            if self.estimator == "windowed" and r.window > self.W:
+                raise ValueError(
+                    f"window={r.window} exceeds the service max_window={self.W}")
+        self._ensure(b)
+        rows = np.arange(self.n, self.n + b, dtype=_I8)
+        self.n += b
+        self.k[rows] = [r.k for r in reqs]
+        self.prior_mu[rows] = [r.prior_mu for r in reqs]
+        self.prior_v[rows] = [r.prior_v for r in reqs]
+        self.prior_count[rows] = [float(r.prior_count) for r in reqs]
+        self.window[rows] = [r.window for r in reqs]
+        self.alpha[rows] = [r.ema_alpha for r in reqs]
+        self.min_interval[rows] = [r.min_interval for r in reqs]
+        self.max_interval[rows] = [r.max_interval for r in reqs]
+        self.log_decay[rows] = [math.log1p(-1.0 / r.window) if r.window > 1
+                                else -1e9 for r in reqs]
+        return rows
+
+    def add_rows_uniform(self, b: int, tpl: PolicyRequest) -> np.ndarray:
+        """``b`` new rows all sharing one template's knobs (the bulk path —
+        skips per-client request construction entirely)."""
+        if self.estimator == "windowed" and tpl.window > self.W:
+            raise ValueError(
+                f"window={tpl.window} exceeds the service max_window={self.W}")
+        self._ensure(b)
+        rows = np.arange(self.n, self.n + b, dtype=_I8)
+        self.n += b
+        for name, val in (("k", tpl.k), ("prior_mu", tpl.prior_mu),
+                          ("prior_v", tpl.prior_v),
+                          ("prior_count", float(tpl.prior_count)),
+                          ("window", tpl.window), ("alpha", tpl.ema_alpha),
+                          ("min_interval", tpl.min_interval),
+                          ("max_interval", tpl.max_interval),
+                          ("log_decay",
+                           math.log1p(-1.0 / tpl.window) if tpl.window > 1
+                           else -1e9)):
+            getattr(self, name)[rows] = val
+        return rows
+
+    # ------------------------------------------------------------------ #
+    # Vectorized event folding (one call per event column)               #
+    # ------------------------------------------------------------------ #
+    def ingest_failures(self, rows: np.ndarray, mat: np.ndarray,
+                        counts: np.ndarray) -> None:
+        """``mat[i, :counts[i]]`` are row i's lifetimes, oldest first."""
+        if mat.shape[1] == 0:
+            return
+        if not np.all(np.isfinite(mat)):
+            raise ValueError("failure lifetimes must be finite")
+        for j in range(mat.shape[1]):
+            act = j < counts
+            if not act.any():
+                break
+            r = rows[act]
+            x = mat[act, j]
+            if np.any(x <= 0):
+                raise ValueError("failure lifetimes must be positive")
+            if self.estimator == "windowed":
+                # FailureRateEstimator.observe_failure: append + popleft
+                # beyond window == ring overwrite of the oldest slot.
+                w = self.window[r]
+                full = self.count[r] == w
+                pos = np.where(full, self.start[r],
+                               (self.start[r] + self.count[r]) % w)
+                self.buf[r, pos] = x
+                self.start[r] = np.where(full, (self.start[r] + 1) % w,
+                                         self.start[r])
+                self.count[r] = np.where(full, w, self.count[r] + 1)
+            else:
+                # Engine law: one death decays the moments by beta then
+                # adds (1 death, lifetime seconds of exposure).
+                beta = np.exp(self.log_decay[r])
+                self.m_d[r] = self.m_d[r] * beta + 1.0
+                self.m_T[r] = self.m_T[r] * beta + x
+                self.count[r] += 1
+            # observe_failure: _anchor_dirty = True
+            self.dirty[r] = True
+            self.n_failures[r] += 1
+
+    def ingest_overheads(self, rows: np.ndarray, mat: np.ndarray,
+                         counts: np.ndarray) -> None:
+        for j in range(mat.shape[1]):
+            act = j < counts
+            if not act.any():
+                break
+            r = rows[act]
+            # observe_checkpoint_overhead: _Ema.update(max(x, 0.0))
+            x = np.maximum(mat[act, j], 0.0)
+            a = self.alpha[r]
+            self.v_val[r] = (1.0 - a) * self.v_val[r] + a * x
+            self.v_wt[r] = (1.0 - a) * self.v_wt[r] + a
+            self.n_checkpoints[r] += 1
+
+    def ingest_restores(self, rows: np.ndarray, last: np.ndarray) -> None:
+        """``last[i]`` is row i's most recent restore (NaN = none)."""
+        act = ~np.isnan(last)
+        if not act.any():
+            return
+        r = rows[act]
+        self.td[r] = last[act]  # observe_restore: T_d is last-value
+        self.has_td[r] = True
+
+    def ingest_tick(self, rows: np.ndarray, now: np.ndarray,
+                    peers: np.ndarray) -> None:
+        """Right-censored exposure, AdaptiveCheckpointController.tick law."""
+        act = ~np.isnan(now)
+        if not act.any():
+            return
+        r = rows[act]
+        t = now[act]
+        n = peers[act]
+        if np.any(n <= 0):
+            raise ValueError("exposure_peers must be positive")
+        anchor0 = self.anchor[r]
+        b1 = self.dirty[r] | (t < anchor0)        # re-arm (+ clock reset)
+        b2 = (~b1) & (t > anchor0)                # fold fresh exposure
+        self.anchor[r] = np.where(b1, t, anchor0)
+        self.dirty[r] = self.dirty[r] & ~b1
+        expo = (t - anchor0) * n
+        self.cens[r] = np.where(b1, 0.0, np.where(b2, expo, self.cens[r]))
+
+    # ------------------------------------------------------------------ #
+    # Decisions                                                          #
+    # ------------------------------------------------------------------ #
+    def _mu(self, rows: np.ndarray) -> np.ndarray:
+        cnt = self.count[rows].astype(_F8)
+        pc = self.prior_count[rows]
+        pm = self.prior_mu[rows]
+        if self.estimator == "windowed":
+            # sum(self._lifetimes) is a SEQUENTIAL left-to-right float sum
+            # in deque (age) order; mirror it term by term so the total is
+            # bitwise the controller's.  Ring slot of age j is
+            # (start + j) % window; slots with j >= count contribute +0.0
+            # (exact for positive partial sums).
+            acc = np.zeros(rows.shape[0], dtype=_F8)
+            maxc = int(self.count[rows].max()) if rows.shape[0] else 0
+            start = self.start[rows]
+            w = self.window[rows]
+            c = self.count[rows]
+            for j in range(maxc):
+                pos = (start + j) % w
+                acc = acc + np.where(j < c, self.buf[rows, pos], 0.0)
+            # estimate(): total = sum(lifetimes) + sum(censored); then the
+            # Gamma-prior pseudo-observations when prior_count > 0.
+            total = acc + self.cens[rows]
+            num = cnt + pc
+            den = total + pc / pm
+        else:
+            # Engine decision law; censored exposure folds transiently.
+            num = self.m_d[rows] + pc
+            den = (self.m_T[rows] + self.cens[rows]) + pc / pm
+        mu = np.where(cnt > 0, num / np.where(den > 0, den, 1.0), pm)
+        if self.estimator == "moment":
+            mu = num / np.where(den > 0, den, 1.0)  # prior built into moments
+        return mu
+
+    def decide(self, rows: np.ndarray, cache: LambertWCache) -> DecisionBatch:
+        mu = self._mu(rows)
+        # V property: EMA value once initialized (weight > 0), else prior_v.
+        init = self.v_wt[rows] > 0
+        V = np.where(init, self.v_val[rows] / np.where(init, self.v_wt[rows], 1.0),
+                     self.prior_v[rows])
+        # T_d property: last observed restore, else V (Sec 3.1.3).
+        T_d = np.where(self.has_td[rows], self.td[rows], V)
+        # checkpoint_interval(): optimal_interval_scalar(mu, k, max(V,1e-6), T_d)
+        Vc = np.maximum(V, 1e-6)
+        kmu = self.k[rows] * mu
+        a = Vc * kmu
+        b = T_d * kmu
+        arg = ((a - b) - 1.0) / (b + 1.0) / _E
+        w = cache.solve_many(arg)
+        x = w + 1.0
+        pos = x > 0.0
+        raw = np.where(pos, x / np.where(pos, kmu, 1.0), np.inf)
+        iv = np.minimum(np.maximum(raw, self.min_interval[rows]),
+                        self.max_interval[rows])
+        return DecisionBatch(interval=iv, mu=mu, V=V, T_d=T_d,
+                             n_failures=self.n_failures[rows].copy(),
+                             clamped=iv != raw)
+
+    # ------------------------------------------------------------------ #
+    # Snapshot schema                                                    #
+    # ------------------------------------------------------------------ #
+    def state_tree(self) -> Dict[str, np.ndarray]:
+        tree = {name: getattr(self, name)[: self.n].copy()
+                for name, _ in _FIELDS}
+        tree["buf"] = self.buf[: self.n].copy()
+        return tree
+
+    def load_state_tree(self, tree: Dict[str, np.ndarray]) -> None:
+        n = int(tree["k"].shape[0])
+        self.W = int(tree["buf"].shape[1]) if n else self.W
+        self.n = 0
+        self._cap = 0
+        self.buf = np.empty((0, self.W), dtype=_F8)
+        for name, dt in _FIELDS:
+            setattr(self, name, np.empty(0, dtype=dt))
+        self._ensure(n)
+        self.n = n
+        self.buf[:n] = tree["buf"]
+        for name, _ in _FIELDS:
+            getattr(self, name)[:n] = tree[name]
+
+
+def _pad(seqs: Sequence[Tuple[float, ...]]) -> Tuple[np.ndarray, np.ndarray]:
+    counts = np.asarray([len(s) for s in seqs], dtype=_I8)
+    m = int(counts.max()) if len(seqs) else 0
+    mat = np.zeros((len(seqs), m), dtype=_F8)
+    for i, s in enumerate(seqs):
+        if s:
+            mat[i, : len(s)] = s
+    return mat, counts
+
+
+class PolicyService:
+    """The checkpoint-interval server: calibrate / query / session flows.
+
+    In-process object; :mod:`repro.launch.serve_policy` wraps it in a CLI
+    and an optional JSON-lines TCP front end.  All request folding is
+    vectorized (module docstring); ``lw_key_bits`` selects the Lambert-W
+    cache mode (None = exact/bitwise, small = fleet-throughput).
+    """
+
+    def __init__(self, *, estimator: str = "windowed", max_window: int = 256,
+                 lw_key_bits: Optional[int] = None,
+                 snapshot_root: Optional[str] = None,
+                 snapshot_shards: int = 2):
+        self.state = _ClientBatch(estimator=estimator, max_window=max_window)
+        self.lw_cache = LambertWCache(key_bits=lw_key_bits)
+        self.snapshot_root = snapshot_root
+        self.snapshot_shards = int(snapshot_shards)
+        self._sessions: Dict[str, int] = {}
+        self._snap_step = 0
+        self.counters = {"calibrate": 0, "query": 0, "session": 0,
+                         "decisions": 0}
+
+    # ------------------------------------------------------------------ #
+    # query flow (organic, one-shot)                                     #
+    # ------------------------------------------------------------------ #
+    def query(self, requests: Sequence[PolicyRequest]) -> List[PolicyDecision]:
+        """One decision per request; no state survives the call."""
+        self.counters["query"] += len(requests)
+        if not requests:
+            return []
+        tmp = _ClientBatch(estimator=self.state.estimator,
+                           max_window=max(self.state.W,
+                                          max(r.window for r in requests)))
+        rows = tmp.add_rows(requests)
+        self._fold(tmp, rows, requests)
+        batch = tmp.decide(rows, self.lw_cache)
+        self.counters["decisions"] += len(requests)
+        return batch.to_decisions([r.client for r in requests])
+
+    # ------------------------------------------------------------------ #
+    # session flow (streaming organic)                                   #
+    # ------------------------------------------------------------------ #
+    def session(self, requests: Sequence[PolicyRequest]) -> List[PolicyDecision]:
+        """Fold each request into its client's live state, decide for all.
+
+        Unknown clients open a session with the request's knobs (pinned for
+        the session's lifetime; later knob fields are ignored).  Duplicate
+        clients within one batch fold in arrival order.
+        """
+        self.counters["session"] += len(requests)
+        if not requests:
+            return []
+        # Arrival-order passes: the i-th occurrence of a client goes in
+        # pass i, so duplicate rows never collide inside one vector op.
+        passes: List[List[int]] = []
+        seen: Dict[str, int] = {}
+        for i, r in enumerate(requests):
+            p = seen.get(r.client, 0)
+            seen[r.client] = p + 1
+            while len(passes) <= p:
+                passes.append([])
+            passes[p].append(i)
+        for idxs in passes:
+            reqs = [requests[i] for i in idxs]
+            fresh = [r for r in reqs if r.client not in self._sessions]
+            if fresh:
+                rows = self.state.add_rows(fresh)
+                for r, row in zip(fresh, rows.tolist()):
+                    self._sessions[r.client] = row
+            rows = np.asarray([self._sessions[r.client] for r in reqs],
+                              dtype=_I8)
+            self._fold(self.state, rows, reqs)
+        all_rows = np.asarray([self._sessions[r.client] for r in requests],
+                              dtype=_I8)
+        batch = self.state.decide(all_rows, self.lw_cache)
+        self.counters["decisions"] += len(requests)
+        return batch.to_decisions([r.client for r in requests])
+
+    def session_update_arrays(
+        self, clients: Sequence[str], *,
+        failures: Optional[np.ndarray] = None,
+        failure_counts: Optional[np.ndarray] = None,
+        checkpoint_overheads: Optional[np.ndarray] = None,
+        restores: Optional[np.ndarray] = None,
+        now: Optional[np.ndarray] = None,
+        exposure_peers: Optional[np.ndarray] = None,
+        template: Optional[PolicyRequest] = None,
+    ) -> DecisionBatch:
+        """Bulk session update straight from arrays (the wire/bench path).
+
+        ``failures`` is ``[B, m]`` (``failure_counts`` marks the valid
+        prefix per row, default all m); ``checkpoint_overheads`` ``[B]`` or
+        ``[B, m]``; ``restores`` ``[B]`` with NaN = no restore; ``now``
+        ``[B]`` (NaN = no tick) with optional ``exposure_peers``.  Unknown
+        clients open sessions with ``template``'s knobs.  Returns array
+        decisions — no per-client Python objects on this path.
+        """
+        self.counters["session"] += len(clients)
+        template = template if template is not None else PolicyRequest()
+        fresh = [c for c in clients if c not in self._sessions]
+        if fresh:
+            rows = self.state.add_rows_uniform(len(fresh), template)
+            self._sessions.update(zip(fresh, rows.tolist()))
+        sess = self._sessions
+        rows = np.fromiter((sess[c] for c in clients), dtype=_I8,
+                           count=len(clients))
+        if np.unique(rows).shape[0] != rows.shape[0]:
+            raise ValueError("duplicate clients in one array batch; use "
+                             "session() for arrival-order folding")
+        b = rows.shape[0]
+        if failures is not None:
+            mat = np.ascontiguousarray(np.asarray(failures, dtype=_F8))
+            counts = (np.full(b, mat.shape[1], dtype=_I8)
+                      if failure_counts is None
+                      else np.asarray(failure_counts, dtype=_I8))
+            self.state.ingest_failures(rows, mat, counts)
+        if checkpoint_overheads is not None:
+            o = np.asarray(checkpoint_overheads, dtype=_F8)
+            if o.ndim == 1:
+                o = o[:, None]
+            self.state.ingest_overheads(rows, o,
+                                        np.full(b, o.shape[1], dtype=_I8))
+        if restores is not None:
+            self.state.ingest_restores(rows, np.asarray(restores, dtype=_F8))
+        if now is not None:
+            t = np.asarray(now, dtype=_F8)
+            if t.ndim == 0:
+                t = np.full(b, float(t), dtype=_F8)
+            peers = (self.state.k[rows] if exposure_peers is None
+                     else np.broadcast_to(
+                         np.asarray(exposure_peers, dtype=_F8), (b,)).copy())
+            self.state.ingest_tick(rows, t, peers)
+        self.counters["decisions"] += b
+        return self.state.decide(rows, self.lw_cache)
+
+    def end_session(self, client: str) -> bool:
+        """Forget a client's session (its row is retired, not reused)."""
+        return self._sessions.pop(client, None) is not None
+
+    # ------------------------------------------------------------------ #
+    # calibrate flow (synthetic, known truth)                            #
+    # ------------------------------------------------------------------ #
+    def calibrate(self, mu_true: float, *, n_observations: int = 64,
+                  seed: int = 0,
+                  template: Optional[PolicyRequest] = None) -> CalibrationReport:
+        """Synthetic Exp(mu_true) lifetimes through the real estimator path."""
+        if mu_true <= 0:
+            raise ValueError("mu_true must be positive")
+        if n_observations < 1:
+            raise ValueError("need at least one synthetic observation")
+        self.counters["calibrate"] += 1
+        template = template if template is not None else PolicyRequest()
+        rng = np.random.default_rng(seed)
+        lifetimes = rng.exponential(scale=1.0 / mu_true, size=n_observations)
+        req = replace(template, failures=tuple(float(x) for x in lifetimes),
+                      client=template.client or "calibrate")
+        dec = self.query([req])[0]
+        oracle = optimal_interval_scalar(mu_true, req.k, max(dec.V, 1e-6),
+                                         dec.T_d, cache=self.lw_cache)
+        oracle = min(max(oracle, req.min_interval), req.max_interval)
+        return CalibrationReport(
+            mu_true=float(mu_true), mu_hat=dec.mu,
+            rel_error=abs(dec.mu - mu_true) / mu_true,
+            interval=dec.interval, interval_oracle=oracle,
+            n_observations=n_observations, decision=dec)
+
+    # ------------------------------------------------------------------ #
+    # Snapshot / resume (ckpt.store atomic contract)                     #
+    # ------------------------------------------------------------------ #
+    def snapshot(self, root: Optional[str] = None) -> str:
+        """Atomically persist all session state; returns the ckpt dir."""
+        from repro.ckpt.store import save_pytree
+
+        root = root or self.snapshot_root
+        if root is None:
+            raise ValueError("no snapshot root configured")
+        tree = self.state.state_tree()
+        meta = {"estimator": self.state.estimator, "W": self.state.W,
+                "counters": self.counters, "snap_step": self._snap_step,
+                "sessions": sorted(self._sessions.items(),
+                                   key=lambda kv: kv[1])}
+        tree["meta_json"] = np.frombuffer(
+            json.dumps(meta).encode(), dtype=np.uint8).copy()
+        self._snap_step += 1
+        return save_pytree(root, self._snap_step - 1, tree,
+                           n_shards=self.snapshot_shards)
+
+    @classmethod
+    def restore_latest(cls, root: str, *,
+                       lw_key_bits: Optional[int] = None,
+                       snapshot_shards: int = 2) -> "PolicyService":
+        """Rebuild a service from the newest committed snapshot under root."""
+        from repro.ckpt.store import latest_checkpoint, load_pytree
+
+        got = latest_checkpoint(root)
+        if got is None:
+            raise FileNotFoundError(f"no committed snapshot under {root}")
+        _, path = got
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        like = {name: np.zeros(meta["shape"], dtype=np.dtype(meta["dtype"]))
+                for name, meta in manifest["leaves"].items()}
+        tree = load_pytree(path, like)
+        meta = json.loads(bytes(tree.pop("meta_json")).decode())
+        svc = cls(estimator=meta["estimator"], max_window=meta["W"],
+                  lw_key_bits=lw_key_bits, snapshot_root=root,
+                  snapshot_shards=snapshot_shards)
+        svc.state.load_state_tree(tree)
+        svc.counters = dict(meta["counters"])
+        svc._snap_step = int(meta["snap_step"])
+        svc._sessions = {c: int(r) for c, r in meta["sessions"]}
+        return svc
+
+    # ------------------------------------------------------------------ #
+    # Introspection                                                      #
+    # ------------------------------------------------------------------ #
+    def stats(self) -> dict:
+        return {
+            "estimator": self.state.estimator,
+            "n_sessions": len(self._sessions),
+            "n_rows": self.state.n,
+            **self.counters,
+            "lw_hits": self.lw_cache.hits,
+            "lw_misses": self.lw_cache.misses,
+            "lw_hit_rate": self.lw_cache.hit_rate,
+            "lw_entries": len(self.lw_cache),
+        }
+
+    # ------------------------------------------------------------------ #
+    # Shared folding of typed requests                                   #
+    # ------------------------------------------------------------------ #
+    def _fold(self, state: _ClientBatch, rows: np.ndarray,
+              reqs: Sequence[PolicyRequest]) -> None:
+        # Canonical event order (repro.policy): failures -> overheads ->
+        # restores -> tick.  The three estimators touch disjoint state, so
+        # only within-type order matters and it is preserved.
+        mat, counts = _pad([r.failures for r in reqs])
+        state.ingest_failures(rows, mat, counts)
+        mat, counts = _pad([r.checkpoint_overheads for r in reqs])
+        state.ingest_overheads(rows, mat, counts)
+        state.ingest_restores(rows, np.asarray(
+            [r.restores[-1] if r.restores else np.nan for r in reqs],
+            dtype=_F8))
+        state.ingest_tick(
+            rows,
+            np.asarray([np.nan if r.now is None else r.now for r in reqs],
+                       dtype=_F8),
+            np.asarray([r.k if r.exposure_peers is None else r.exposure_peers
+                        for r in reqs], dtype=_F8))
+
+
+# --------------------------------------------------------------------------- #
+# Traffic generation: the engine's scenario registry as a load generator      #
+# --------------------------------------------------------------------------- #
+
+def synthetic_stream(scenario_name: str = "constant", *,
+                     n_clients: int, n_rounds: int = 4,
+                     obs_per_round: int = 2, seed: int = 0,
+                     mix: Optional[str] = None, round_spacing: float = 3600.0,
+                     V: float = 20.0, T_d: float = 50.0,
+                     scenario_kwargs: Optional[dict] = None):
+    """Yield per-round observation arrays for ``n_clients`` synthetic clients.
+
+    Each round r happens at ``t_r = (r+1) * round_spacing`` on the named
+    scenario's clock: every client observes ``obs_per_round`` lifetimes
+    drawn Exp(mu(t_r) * hazard_mult(class)) — classes assigned by the
+    ``mix`` preset's deterministic quota rule when given — one jittered
+    checkpoint-overhead sample around V, a restore observation around T_d
+    every other round, and a tick at t_r.  This replays the engine's churn
+    model (scenario registry + PeerClassMix hazards) as service traffic.
+    """
+    from repro.sim.scenarios import peer_class_mix, scenario
+
+    scen = scenario(scenario_name, **(scenario_kwargs or {}))
+    hmult = np.ones(n_clients, dtype=_F8)
+    if mix is not None:
+        mults = np.asarray(peer_class_mix(mix).hazard_mults(
+            min(n_clients, 4096)), dtype=_F8)
+        hmult = mults[np.arange(n_clients) % mults.shape[0]]
+    rng = np.random.default_rng(seed)
+    for r in range(n_rounds):
+        t_r = (r + 1) * round_spacing
+        mu_r = 1.0 / scen.mtbf(t_r)
+        lifetimes = rng.exponential(1.0, size=(n_clients, obs_per_round)) \
+            / (mu_r * hmult)[:, None]
+        overheads = V * (0.8 + 0.4 * rng.random(n_clients))
+        restores = np.full(n_clients, np.nan, dtype=_F8)
+        if r % 2 == 1:
+            restores = T_d * (0.7 + 0.6 * rng.random(n_clients))
+        yield {"failures": lifetimes, "checkpoint_overheads": overheads,
+               "restores": restores, "now": np.full(n_clients, t_r,
+                                                    dtype=_F8)}

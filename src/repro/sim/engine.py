@@ -206,7 +206,7 @@ from __future__ import annotations
 
 import math
 import os
-from dataclasses import dataclass
+from dataclasses import InitVar, dataclass
 from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
@@ -307,8 +307,20 @@ class PolicyConfig:
     gossip_period: float = 600.0
     gossip_fanout: int = 2
     gossip_weight: float = 0.5
+    # Deprecated cell-spelling aliases (repro.policy migration notes).
+    min_iv: InitVar[Optional[float]] = None
+    max_iv: InitVar[Optional[float]] = None
 
-    def __post_init__(self) -> None:
+    def __post_init__(self, min_iv: Optional[float] = None,
+                      max_iv: Optional[float] = None) -> None:
+        if min_iv is not None:
+            from repro.policy import warn_deprecated_alias
+            warn_deprecated_alias("min_iv", "min_interval")
+            object.__setattr__(self, "min_interval", float(min_iv))
+        if max_iv is not None:
+            from repro.policy import warn_deprecated_alias
+            warn_deprecated_alias("max_iv", "max_interval")
+            object.__setattr__(self, "max_interval", float(max_iv))
         if self.kind not in _POLICY_IDS:
             raise ValueError(f"unknown policy kind {self.kind!r}")
         if self.kind == "fixed" and self.fixed_T <= 0:

@@ -26,7 +26,7 @@ Policies decide the next checkpoint interval:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import InitVar, dataclass, field
 from typing import TYPE_CHECKING, List, Optional, Protocol
 
 import numpy as np
@@ -40,7 +40,7 @@ from repro.sim.network import ChurnNetwork, MtbfFn
 
 
 class CheckpointPolicy(Protocol):
-    def tick(self, now: float) -> None: ...
+    def tick(self, now: float, exposure_peers: Optional[float] = None) -> None: ...
     def interval(self) -> float: ...
     def on_checkpoint(self, overhead: float) -> None: ...
     def on_restore(self, downtime: float) -> None: ...
@@ -53,7 +53,8 @@ class FixedIntervalPolicy:
 
     T: float
 
-    def tick(self, now: float) -> None:  # pragma: no cover - noop
+    def tick(self, now: float,
+             exposure_peers: Optional[float] = None) -> None:  # pragma: no cover - noop
         pass
 
     def interval(self) -> float:
@@ -75,7 +76,11 @@ class AdaptivePolicy:
 
     controller: AdaptiveCheckpointController
 
-    def tick(self, now: float) -> None:  # pragma: no cover - noop
+    def tick(self, now: float,
+             exposure_peers: Optional[float] = None) -> None:  # pragma: no cover - noop
+        # Deliberately a no-op: the heap delivers right-censored exposure
+        # through its own death stream; the live-tick path is the
+        # executor's (repro.policy migration notes).
         pass
 
     def interval(self) -> float:
@@ -136,7 +141,7 @@ class GossipAdaptivePolicy:
                                 for _ in range(k)],
                    regime=regime, period=period, fanout=fanout, weight=weight)
 
-    def tick(self, now: float) -> None:
+    def tick(self, now: float, exposure_peers: Optional[float] = None) -> None:
         # At most one exchange round per tick (ticks come once per cycle),
         # then re-arm relative to now — matching the engine, which gossips
         # at most once per attempt step.
@@ -204,6 +209,20 @@ class OraclePolicy:
     max_interval: float = 24 * 3600.0
     shock_rate_per_peer: float = 0.0
     _now: float = 0.0
+    # Deprecated cell-spelling aliases (repro.policy migration notes).
+    min_iv: InitVar[Optional[float]] = None
+    max_iv: InitVar[Optional[float]] = None
+
+    def __post_init__(self, min_iv: Optional[float] = None,
+                      max_iv: Optional[float] = None) -> None:
+        if min_iv is not None:
+            from repro.policy import warn_deprecated_alias
+            warn_deprecated_alias("min_iv", "min_interval")
+            self.min_interval = float(min_iv)
+        if max_iv is not None:
+            from repro.policy import warn_deprecated_alias
+            warn_deprecated_alias("max_iv", "max_interval")
+            self.max_interval = float(max_iv)
 
     def interval(self) -> float:
         mu = 1.0 / self.mtbf_fn(self._now) + self.shock_rate_per_peer
@@ -219,7 +238,7 @@ class OraclePolicy:
     def on_observation(self, lifetime: float) -> None:
         pass
 
-    def tick(self, now: float) -> None:
+    def tick(self, now: float, exposure_peers: Optional[float] = None) -> None:
         self._now = now
 
 

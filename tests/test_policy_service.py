@@ -1,0 +1,365 @@
+"""Policy service: bit-identity to the scalar controller, cache
+transparency, snapshot/resume, and the unified policy surface (PR 9)."""
+import math
+import struct
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.adaptive import AdaptiveCheckpointController
+from repro.core.lambertw import LambertWCache, lambertw0_scalar
+from repro.policy import (
+    PolicyDecision,
+    PolicyRequest,
+    apply_request,
+    controller_for,
+    decide,
+)
+from repro.serve.policy_service import PolicyService, synthetic_stream
+from repro.sim.job import AdaptivePolicy, simulate_job
+from repro.sim.network import ChurnNetwork, constant_mtbf
+
+
+def bits(x: float) -> bytes:
+    return struct.pack("<d", float(x))
+
+
+# --------------------------------------------------------------------------- #
+# Property: the service is bit-identical to the controller                    #
+# --------------------------------------------------------------------------- #
+
+class RecordingPolicy:
+    """Wraps the sim's AdaptivePolicy, logging the event stream between
+    consecutive interval() calls plus every interval it commits."""
+
+    def __init__(self, inner: AdaptivePolicy):
+        self.inner = inner
+        self.rounds = []  # (failures, overheads, restores, interval)
+        self._f, self._o, self._r = [], [], []
+
+    def tick(self, now, exposure_peers=None):
+        self.inner.tick(now, exposure_peers)
+
+    def interval(self):
+        iv = self.inner.interval()
+        self.rounds.append((tuple(self._f), tuple(self._o), tuple(self._r), iv))
+        self._f, self._o, self._r = [], [], []
+        return iv
+
+    def on_checkpoint(self, overhead):
+        self._o.append(overhead)
+        self.inner.on_checkpoint(overhead)
+
+    def on_restore(self, downtime):
+        self._r.append(downtime)
+        self.inner.on_restore(downtime)
+
+    def on_observation(self, lifetime):
+        self._f.append(lifetime)
+        self.inner.on_observation(lifetime)
+
+
+@pytest.mark.parametrize("seed,mtbf", [(0, 1800.0), (1, 600.0), (7, 7200.0)])
+def test_service_bit_identical_to_simulate_job_stream(seed, mtbf):
+    """Replay the exact observation stream a simulated job fed its
+    controller; every service session decision must be bitwise equal to the
+    interval the controller committed inside simulate_job."""
+    rng = np.random.default_rng(seed)
+    net = ChurnNetwork(64, constant_mtbf(mtbf), rng)
+    ctl = AdaptiveCheckpointController(k=8, prior_mu=1 / 3600.0)
+    rec = RecordingPolicy(AdaptivePolicy(ctl))
+    simulate_job(network=net, policy=rec, k=8, work_required=6 * 3600.0,
+                 V=20.0, T_d=50.0, max_wall_time=48 * 3600.0)
+    assert len(rec.rounds) > 5, "stream too short to be a meaningful test"
+
+    svc = PolicyService()
+    tpl = PolicyRequest(client="job", k=8.0, prior_mu=1 / 3600.0,
+                        prior_v=ctl.prior_v, window=ctl.mu_window,
+                        ema_alpha=ctl.ema_alpha, prior_count=ctl.prior_count,
+                        min_interval=ctl.min_interval,
+                        max_interval=ctl.max_interval)
+    for fails, overs, rests, iv in rec.rounds:
+        req = PolicyRequest(client="job", k=8.0, failures=fails,
+                            checkpoint_overheads=overs, restores=rests,
+                            prior_mu=tpl.prior_mu, prior_v=tpl.prior_v,
+                            window=tpl.window, ema_alpha=tpl.ema_alpha,
+                            prior_count=tpl.prior_count,
+                            min_interval=tpl.min_interval,
+                            max_interval=tpl.max_interval)
+        dec = svc.session([req])[0]
+        assert bits(dec.interval) == bits(iv)
+
+
+def test_query_bit_identical_to_scalar_reference():
+    rng = np.random.default_rng(3)
+    reqs = []
+    for i in range(40):
+        nf = int(rng.integers(0, 40))
+        reqs.append(PolicyRequest(
+            client=f"c{i}", k=float(rng.integers(1, 64)),
+            failures=tuple(float(x) for x in rng.exponential(3600, nf) + 1e-3),
+            checkpoint_overheads=tuple(
+                float(x) for x in rng.exponential(20, int(rng.integers(0, 5)))),
+            restores=tuple(
+                float(x) for x in rng.exponential(50, int(rng.integers(0, 3)))),
+            now=float(rng.uniform(0, 1e5)) if rng.random() < 0.7 else None,
+            window=int(rng.integers(1, 48)),
+            prior_count=int(rng.integers(0, 6))))
+    decs = PolicyService().query(reqs)
+    for r, d in zip(reqs, decs):
+        ref = decide(r)
+        for f in ("interval", "mu", "V", "T_d"):
+            assert bits(getattr(d, f)) == bits(getattr(ref, f)), (r.client, f)
+        assert d.clamped == ref.clamped and d.n_failures == ref.n_failures
+
+
+def test_session_streaming_matches_incremental_controllers():
+    rng = np.random.default_rng(11)
+    svc = PolicyService()
+    ctls = {}
+    for rnd in range(5):
+        reqs = []
+        for i in range(12):
+            nf = int(rng.integers(0, 4))
+            reqs.append(PolicyRequest(
+                client=f"s{i}", k=8.0,
+                failures=tuple(float(x) for x in rng.exponential(3600, nf) + 1e-3),
+                checkpoint_overheads=(float(rng.exponential(20)),)
+                if rng.random() < 0.5 else (),
+                restores=(float(rng.exponential(50)),) if rnd % 2 else (),
+                now=float((rnd + 1) * 1800 + i)))
+        for r, d in zip(reqs, svc.session(reqs)):
+            ctl = ctls.setdefault(r.client, controller_for(r))
+            apply_request(ctl, r)
+            assert bits(d.interval) == bits(ctl.checkpoint_interval())
+
+
+def test_session_duplicate_clients_fold_in_arrival_order():
+    svc = PolicyService()
+    a1 = PolicyRequest(client="a", k=8.0, failures=(1800.0,))
+    a2 = PolicyRequest(client="a", k=8.0, failures=(5400.0,))
+    d1, d2 = svc.session([a1, a2])
+    ctl = controller_for(a1)
+    apply_request(ctl, a1)
+    iv1 = ctl.checkpoint_interval()
+    apply_request(ctl, a2)
+    iv2 = ctl.checkpoint_interval()
+    # Both decisions read the post-batch state (d2), but folding happened
+    # in arrival order: the final state matches sequential application.
+    assert bits(d2.interval) == bits(iv2)
+    assert d1.n_failures == d2.n_failures == 2
+    del iv1
+
+
+# --------------------------------------------------------------------------- #
+# Lambert-W cache: hits bitwise equal cold solves                             #
+# --------------------------------------------------------------------------- #
+
+def test_exact_cache_is_bitwise_transparent():
+    cache = LambertWCache()  # exact keys
+    rng = np.random.default_rng(0)
+    zs = np.concatenate([
+        rng.uniform(-1 / math.e, 10.0, 500),
+        [-1 / math.e, -1 / math.e + 1e-300, 0.0, 1e-12, 700.0]])
+    cold = [lambertw0_scalar(max(float(z), -1 / math.e)) for z in zs]
+    warm1 = [cache.solve(float(z)) for z in zs]
+    warm2 = [cache.solve(float(z)) for z in zs]  # all hits
+    assert [bits(a) for a in warm1] == [bits(c) for c in cold]
+    assert [bits(a) for a in warm2] == [bits(c) for c in cold]
+    assert cache.hits >= len(zs)
+
+
+@pytest.mark.parametrize("key_bits", [8, 12, None])
+def test_cache_hits_bitwise_equal_cold_evaluations(key_bits):
+    """Value-quantization: a hit returns exactly what a cold solve of the
+    same key's representative returns — order and history independent."""
+    rng = np.random.default_rng(1)
+    zs = rng.uniform(-1 / math.e, 5.0, 2000)
+    c1 = LambertWCache(key_bits=key_bits)
+    c2 = LambertWCache(key_bits=key_bits)
+    a = c1.solve_many(zs)                       # cold, vectorized
+    b = np.asarray([c2.solve(float(z)) for z in zs])  # cold, scalar
+    c = c1.solve_many(zs)                       # 100% hits
+    assert a.tobytes() == b.tobytes() == c.tobytes()
+    assert c1.hits >= zs.size
+    assert 0.0 < c1.hit_rate < 1.0
+    assert len(c1) == c1.misses
+
+
+def test_quantized_cache_interval_error_is_bounded():
+    """key_bits=B keeps the relative interval error ~2^-B (module docs)."""
+    rng = np.random.default_rng(2)
+    zs = rng.uniform(-1 / math.e + 1e-12, 2.0, 4000)
+    exact = np.asarray([lambertw0_scalar(float(z)) for z in zs]) + 1.0
+    quant = LambertWCache(key_bits=12).solve_many(zs) + 1.0
+    ok = exact > 1e-12
+    rel = np.abs(quant[ok] - exact[ok]) / exact[ok]
+    assert rel.max() < 2.0 ** -11
+
+
+def test_service_counts_cache_traffic():
+    svc = PolicyService(lw_key_bits=10)
+    clients = [f"c{i}" for i in range(512)]
+    for batch in synthetic_stream("constant", n_clients=512, n_rounds=3,
+                                  seed=5):
+        svc.session_update_arrays(clients, **batch)
+    st = svc.stats()
+    assert st["lw_hits"] + st["lw_misses"] == 3 * 512
+    assert st["lw_hit_rate"] > 0.2  # quantized fleets share buckets
+    assert st["decisions"] == 3 * 512
+
+
+# --------------------------------------------------------------------------- #
+# Flows: clamping, calibrate, snapshot/resume, moment form                    #
+# --------------------------------------------------------------------------- #
+
+def test_query_interval_clamped_and_flagged():
+    # Huge failure rate -> raw interval below min_interval -> clamped low.
+    lo = PolicyService().query([PolicyRequest(
+        k=64.0, failures=(0.5,) * 32, window=32, min_interval=30.0)])[0]
+    assert lo.interval == 30.0 and lo.clamped
+    # Tiny failure rate + max_interval cap -> clamped high.
+    hi = PolicyService().query([PolicyRequest(
+        k=1.0, failures=(1e9,), window=4, max_interval=3600.0)])[0]
+    assert hi.interval == 3600.0 and hi.clamped
+
+
+def test_calibrate_recovers_known_mu():
+    rep = PolicyService().calibrate(
+        1.0 / 3600.0, n_observations=64, seed=0,
+        template=PolicyRequest(window=64, prior_count=0))
+    assert rep.rel_error < 0.5
+    assert rep.interval > 0 and np.isfinite(rep.interval)
+    assert rep.interval_oracle > 0
+    # The oracle interval uses the TRUE mu; same clamps applied.
+    assert rep.decision.client == "calibrate"
+
+
+def test_snapshot_resume_is_bitwise_continuation(tmp_path):
+    root = str(tmp_path / "snaps")
+    svc = PolicyService(snapshot_root=root)
+    clients = [f"c{i}" for i in range(64)]
+    for batch in synthetic_stream("diurnal", n_clients=64, n_rounds=3,
+                                  seed=9):
+        svc.session_update_arrays(clients, **batch)
+    svc.snapshot()
+    svc2 = PolicyService.restore_latest(root)
+    assert svc2.stats()["n_sessions"] == 64
+    follow = list(synthetic_stream("diurnal", n_clients=64, n_rounds=2,
+                                   seed=10))
+    for batch in follow:
+        d1 = svc.session_update_arrays(clients, **batch)
+        d2 = svc2.session_update_arrays(clients, **batch)
+        assert d1.interval.tobytes() == d2.interval.tobytes()
+        assert d1.mu.tobytes() == d2.mu.tobytes()
+
+
+def test_snapshot_is_atomic_across_steps(tmp_path):
+    root = str(tmp_path / "snaps")
+    svc = PolicyService(snapshot_root=root)
+    svc.session([PolicyRequest(client="a", failures=(100.0,))])
+    p1 = svc.snapshot()
+    svc.session([PolicyRequest(client="a", failures=(200.0,))])
+    p2 = svc.snapshot()
+    assert p1 != p2
+    svc2 = PolicyService.restore_latest(root)  # newest snapshot wins
+    d = svc2.session([PolicyRequest(client="a")])[0]
+    assert d.n_failures == 2
+
+
+def test_moment_estimator_tracks_rate_at_scale():
+    svc = PolicyService(estimator="moment")
+    clients = [f"m{i}" for i in range(256)]
+    tpl = PolicyRequest(prior_count=0, window=16)  # uninformative prior
+    db = None
+    for batch in synthetic_stream("constant", n_clients=256, n_rounds=4,
+                                  seed=3, scenario_kwargs={"mtbf": 1800.0}):
+        db = svc.session_update_arrays(clients, template=tpl, **batch)
+    assert np.all(np.isfinite(db.interval)) and np.all(db.interval > 0)
+    # mu_hat should land within a factor ~2 of truth for most clients.
+    med = float(np.median(db.mu))
+    assert 0.3 / 1800.0 < med < 3.0 / 1800.0
+
+
+def test_bulk_rejects_duplicate_clients():
+    svc = PolicyService()
+    with pytest.raises(ValueError, match="duplicate clients"):
+        svc.session_update_arrays(["a", "a"], now=np.asarray([1.0, 2.0]))
+
+
+def test_end_session_forgets_client():
+    svc = PolicyService()
+    svc.session([PolicyRequest(client="a", failures=(100.0,))])
+    assert svc.end_session("a") and not svc.end_session("a")
+    d = svc.session([PolicyRequest(client="a")])[0]
+    assert d.n_failures == 0  # fresh session, old row retired
+
+
+# --------------------------------------------------------------------------- #
+# Unified surface: wire forms + deprecation shims                             #
+# --------------------------------------------------------------------------- #
+
+def test_request_decision_roundtrip_wire_forms():
+    req = PolicyRequest(client="x", failures=(1.0, 2.0), now=3.0)
+    assert PolicyRequest.from_dict(req.to_dict()) == req
+    dec = PolicyDecision(interval=10.0, mu=1e-4, V=5.0, T_d=7.0)
+    assert PolicyDecision.from_dict(dec.to_dict()) == dec
+    with pytest.raises(ValueError, match="unknown PolicyRequest fields"):
+        PolicyRequest.from_dict({"nope": 1})
+
+
+def test_request_validation():
+    with pytest.raises(ValueError):
+        PolicyRequest(k=0.0)
+    with pytest.raises(ValueError):
+        PolicyRequest(failures=(-1.0,))
+    with pytest.raises(ValueError):
+        PolicyRequest(min_interval=10.0, max_interval=1.0)
+    with pytest.raises(ValueError):
+        PolicyRequest(exposure_peers=0.0)
+
+
+def test_min_iv_max_iv_aliases_warn_and_apply():
+    with pytest.warns(DeprecationWarning, match="min_iv"):
+        ctl = AdaptiveCheckpointController(k=4.0, min_iv=5.0)
+    assert ctl.min_interval == 5.0
+    with pytest.warns(DeprecationWarning, match="max_iv"):
+        ctl = AdaptiveCheckpointController(k=4.0, max_iv=7200.0)
+    assert ctl.max_interval == 7200.0
+
+    from repro.sim.engine import PolicyConfig
+    with pytest.warns(DeprecationWarning):
+        pc = PolicyConfig(min_iv=2.0, max_iv=1800.0)
+    assert pc.min_interval == 2.0 and pc.max_interval == 1800.0
+
+    from repro.sim.job import OraclePolicy
+    with pytest.warns(DeprecationWarning):
+        op = OraclePolicy(mtbf_fn=constant_mtbf(3600.0), k=4, V=20.0,
+                          T_d=50.0, min_iv=3.0)
+    assert op.min_interval == 3.0
+
+
+def test_canonical_spellings_do_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        AdaptiveCheckpointController(k=4.0, min_interval=5.0,
+                                     max_interval=7200.0)
+        from repro.sim.engine import PolicyConfig
+        PolicyConfig(min_interval=2.0, max_interval=1800.0)
+
+
+def test_every_policy_accepts_exposure_peers_keyword():
+    from repro.sim.job import (
+        FixedIntervalPolicy,
+        GossipAdaptivePolicy,
+        OraclePolicy,
+    )
+    fixed = FixedIntervalPolicy(600.0)
+    fixed.tick(10.0, exposure_peers=4.0)
+    adapt = AdaptivePolicy(AdaptiveCheckpointController(k=4.0))
+    adapt.tick(10.0, exposure_peers=4.0)
+    gossip = GossipAdaptivePolicy.make(4)
+    gossip.tick(10.0, exposure_peers=4.0)
+    oracle = OraclePolicy(mtbf_fn=constant_mtbf(3600.0), k=4, V=20.0, T_d=50.0)
+    oracle.tick(10.0, exposure_peers=4.0)

@@ -12,7 +12,9 @@ import pytest
 @pytest.mark.parametrize("module", [
     "repro.serve",
     "repro.serve.step",
+    "repro.serve.policy_service",
     "repro.launch.serve",
+    "repro.launch.serve_policy",
     "repro.launch.train",
 ])
 def test_module_imports(module):
@@ -44,3 +46,36 @@ def test_serve_step_builds_for_smoke_config():
     cfg = get_smoke_config("olmo-1b")
     assert callable(make_prefill_step(cfg, max_seq=32))
     assert callable(make_serve_step(cfg))
+
+
+def test_launch_serve_uses_step_factories():
+    """The CLI path must build from the serve.step factories (the code the
+    dry-run lowers), not a private inline copy."""
+    import inspect
+
+    from repro.launch import serve as launch_serve
+
+    src = inspect.getsource(launch_serve)
+    assert "make_prefill_step" in src
+    assert "make_serve_step" in src
+
+
+def test_policy_service_functional_roundtrip():
+    """Stream three observation batches through a session; the resulting
+    interval must be finite, positive, and inside the clamp band."""
+    from repro.policy import PolicyRequest
+    from repro.serve import PolicyService
+
+    svc = PolicyService()
+    dec = None
+    for i, lifetime in enumerate((1800.0, 5400.0, 2700.0)):
+        dec = svc.session([PolicyRequest(
+            client="rt", k=8.0, failures=(lifetime,),
+            checkpoint_overheads=(15.0,), now=3600.0 * (i + 1),
+            min_interval=1.0, max_interval=24 * 3600.0)])[0]
+    assert dec.n_failures == 3
+    assert float("-inf") < dec.interval < float("inf")
+    assert dec.interval > 0
+    assert 1.0 <= dec.interval <= 24 * 3600.0
+    st = svc.stats()
+    assert st["session"] == 3 and st["n_sessions"] == 1
