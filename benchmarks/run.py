@@ -12,15 +12,27 @@ import sys
 import time
 
 
+SECTIONS = ("fig4", "fig5", "kernels", "e2e", "roofline", "offload",
+            "gossip", "hetero", "shocks", "fleet", "exec", "policy")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig4,fig5,kernels,e2e,roofline,offload,"
-                         "gossip,hetero,shocks,fleet,exec,policy")
+                    help="comma list: " + ",".join(SECTIONS))
     ap.add_argument("--fast", action="store_true",
                     help="tiny smoke grids (CI): fewer seeds/intervals, short jobs")
     args = ap.parse_args()
-    only = set(args.only.split(",")) if args.only else None
+    only = None
+    if args.only is not None:
+        only = {key.strip() for key in args.only.split(",") if key.strip()}
+        if not only:
+            ap.error("--only: expected at least one section; "
+                     f"valid choices: {', '.join(SECTIONS)}")
+        unknown = sorted(only - set(SECTIONS))
+        if unknown:
+            ap.error(f"--only: unknown section(s) {', '.join(unknown)}; "
+                     f"valid choices: {', '.join(SECTIONS)}")
 
     def want(name: str) -> bool:
         return only is None or name in only

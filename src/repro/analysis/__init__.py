@@ -1,0 +1,29 @@
+"""reprolint — AST-enforced determinism, RNG-stream, and JAX-purity
+contracts (DESIGN.md Sec 12).
+
+Rule families:
+
+* **R** — RNG discipline: R001 no legacy global ``np.random.*`` draws,
+  R002 spawn-child-stream idiom (no parent-stream draws / JAX key reuse),
+  R003 no wall clock / stdlib ``random`` in virtual-time subsystems.
+* **J** — JAX purity: J001 no Python control flow on traced values in
+  scan/shard_map/Pallas bodies, J002 no host round-trips in step bodies,
+  J003 no float64 leaks into Pallas kernels.
+* **A** — API hygiene: A001 canonical ``min_interval``/``max_interval``
+  spellings, A002 ``tick`` overrides keep ``exposure_peers``.
+* **B** — accounting (report-only): B001 restore-path results must be
+  billed.
+* **S** — the linter's own contract: S000 suppressions need a
+  justification.
+
+Run ``python tools/reprolint.py src tests benchmarks examples`` from the
+repo root; config lives in ``[tool.reprolint]`` in pyproject.toml.
+"""
+from repro.analysis.core import (  # noqa: F401
+    Finding, LintConfig, LintReport, RULES, lint_paths, lint_source,
+    register_rule,
+)
+from repro.analysis import (  # noqa: F401  (rule registration side effect)
+    rules_accounting, rules_api, rules_jax, rules_rng,
+)
+from repro.analysis.report import render_human, render_json  # noqa: F401

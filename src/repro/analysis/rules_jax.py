@@ -1,0 +1,261 @@
+"""JAX-purity rules (J-family).
+
+The engine's JAX backend is one jitted ``lax.scan`` (optionally
+``shard_map``-sharded, optionally fused into a Pallas kernel) whose step
+body must stay branchless in Python: control flow on a traced value
+either fails at trace time or — worse — silently freezes one branch into
+the compiled program.  PR 6's fused==scan bit-identity and the
+single-vs-multi-device bit-identity are only provable because the bodies
+are pure.  These rules resolve the function actually handed to
+``lax.scan`` / ``lax.while_loop`` / ``shard_map`` / ``pl.pallas_call``
+(through lambdas, local defs, ``functools.partial`` and wrapper calls)
+and check *that* body, not the whole file.
+
+Taint model: positional parameters are traced operands; keyword-only
+parameters are statically bound flags (``functools.partial`` pre-binding,
+``jit`` static args — the codebase's convention), so branching on them is
+legal and not flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set, Tuple
+
+from repro.analysis import astutil
+from repro.analysis.core import Finding, LintConfig, path_matches, register_rule
+
+_TRACED_CONSTRUCTS = {
+    "scan": (0, ("f",)),
+    "while_loop": (0, ()),       # cond_fun; body_fun handled below
+    "fori_loop": (2, ("body_fun",)),
+    "shard_map": (0, ("f",)),
+    "pallas_call": (0, ("kernel",)),
+}
+
+
+def _construct_of(call: ast.Call) -> Optional[str]:
+    name = astutil.call_name(call)
+    if name is None:
+        return None
+    parts = name.split(".")
+    tail = parts[-1]
+    if tail in ("scan", "while_loop", "fori_loop"):
+        return tail if "lax" in parts[:-1] else None
+    if tail in ("shard_map", "pallas_call"):
+        return tail
+    return None
+
+
+def _resolve_fn(expr: ast.AST, defs: dict, assigns: dict,
+                depth: int = 0) -> List[ast.AST]:
+    """Function nodes an expression may refer to (lambda / local def),
+    seen through partials, wrapper calls and simple assignments."""
+    if expr is None or depth > 4:
+        return []
+    if isinstance(expr, ast.Lambda):
+        return [expr]
+    if isinstance(expr, ast.Name):
+        if expr.id in defs:
+            return [defs[expr.id]]
+        return _resolve_fn(assigns.get(expr.id), defs, assigns, depth + 1)
+    if isinstance(expr, ast.Call):
+        name = astutil.call_name(expr) or ""
+        if name.split(".")[-1] == "partial":
+            return _resolve_fn(expr.args[0] if expr.args else None,
+                               defs, assigns, depth + 1)
+        # Generic wrapper (jax.remat(f), jax.jit(f), _maybe_remat(f, cfg)):
+        # any argument that resolves to a function is a candidate body.
+        out: List[ast.AST] = []
+        for a in expr.args:
+            if isinstance(a, (ast.Name, ast.Lambda, ast.Call)):
+                out.extend(_resolve_fn(a, defs, assigns, depth + 1))
+        return out
+    return []
+
+
+def step_bodies(tree: ast.AST) -> List[Tuple[ast.AST, str, ast.Call]]:
+    """Every (body_fn, construct, call_site) traced by scan/while/shard/pallas."""
+    defs = astutil.local_function_defs(tree)
+    assigns = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            assigns[node.targets[0].id] = node.value
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        construct = _construct_of(node)
+        if construct is None:
+            continue
+        pos, kws = _TRACED_CONSTRUCTS[construct]
+        exprs = []
+        if len(node.args) > pos:
+            exprs.append(node.args[pos])
+        if construct == "while_loop" and len(node.args) > 1:
+            exprs.append(node.args[1])
+        for kw in node.keywords:
+            if kw.arg in kws or (construct == "while_loop"
+                                 and kw.arg in ("cond_fun", "body_fun")):
+                exprs.append(kw.value)
+        for e in exprs:
+            for fn in _resolve_fn(e, defs, assigns):
+                out.append((fn, construct, node))
+    return out
+
+
+def _tainted_names(fn: ast.AST) -> Set[str]:
+    """Positional params + names assigned from them (one forward pass)."""
+    taint = set(astutil.positional_params(fn))
+    for node in astutil.scope_body_nodes(fn):
+        if isinstance(node, ast.Assign) and (astutil.names_in(node.value)
+                                             & taint):
+            for t in node.targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        taint.add(n.id)
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)) \
+                and node.value is not None \
+                and (astutil.names_in(node.value) & taint) \
+                and isinstance(node.target, ast.Name):
+            taint.add(node.target.id)
+    return taint
+
+
+@register_rule(
+    "J001",
+    summary="Python control flow on a traced value in a scan/shard/Pallas body",
+    invariant="step bodies are branchless: `if`/`while` on a tracer "
+              "either fails at trace time or silently bakes one branch "
+              "into the compiled program — use lax.cond / xp.where / "
+              "masking (PR 1 engine contract, PR 6 fused==scan "
+              "bit-identity)",
+)
+def j001_no_python_branch_on_tracer(tree, source, relpath,
+                                    config) -> List[Finding]:
+    out = []
+    seen_fns = set()
+    for fn, construct, _call in step_bodies(tree):
+        if id(fn) in seen_fns:
+            continue
+        seen_fns.add(id(fn))
+        taint = _tainted_names(fn)
+        for node in astutil.scope_body_nodes(fn):
+            if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                hit = astutil.names_in(node.test) & taint
+                if hit:
+                    kind = {"If": "if", "While": "while",
+                            "IfExp": "conditional expression"}[
+                                type(node).__name__]
+                    out.append(Finding(
+                        rule="J001", path=relpath, line=node.lineno,
+                        col=node.col_offset,
+                        message=f"Python `{kind}` on traced value(s) "
+                                f"{sorted(hit)} inside a `{construct}` "
+                                "body; use lax.cond/lax.select/xp.where "
+                                "masking so the body stays branchless"))
+    return out
+
+
+_HOST_CALLS = {"callback", "io_callback", "pure_callback", "call",
+               "call_tf", "id_tap", "id_print"}
+_CONCRETIZERS = {"float", "int", "bool"}
+
+
+@register_rule(
+    "J002",
+    summary="host round-trip (.item()/np.asarray/callback) in a step body",
+    invariant="step bodies never leave the device: .item()/np.asarray/"
+              "float() on a tracer forces a host sync (or fails under "
+              "jit), and host callbacks break the pure-function contract "
+              "the digital-twin replay depends on",
+)
+def j002_no_host_roundtrip(tree, source, relpath, config) -> List[Finding]:
+    out = []
+    seen_fns = set()
+    for fn, construct, _call in step_bodies(tree):
+        if id(fn) in seen_fns:
+            continue
+        seen_fns.add(id(fn))
+        taint = _tainted_names(fn)
+        for node in astutil.scope_body_nodes(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = astutil.call_name(node) or ""
+            parts = name.split(".")
+            tainted_arg = any(isinstance(a, ast.Name) and a.id in taint
+                              for a in node.args) or any(
+                astutil.names_in(a) & taint for a in node.args)
+            if parts[-1] in _HOST_CALLS and (
+                    "debug" in parts or "host_callback" in parts
+                    or "hcb" in parts or parts[-1] in
+                    ("io_callback", "pure_callback")):
+                out.append(Finding(
+                    rule="J002", path=relpath, line=node.lineno,
+                    col=node.col_offset,
+                    message=f"host callback `{name}` inside a "
+                            f"`{construct}` body breaks the pure-step "
+                            "contract (replay/digital-twin parity)"))
+                continue
+            if parts[-1] in ("item", "tolist") \
+                    and isinstance(node.func, ast.Attribute) \
+                    and (astutil.names_in(node.func.value) & taint):
+                out.append(Finding(
+                    rule="J002", path=relpath, line=node.lineno,
+                    col=node.col_offset,
+                    message=f"`.{parts[-1]}()` on a traced value inside a "
+                            f"`{construct}` body forces a host sync"))
+                continue
+            if not tainted_arg:
+                continue
+            if len(parts) == 2 and parts[0] in ("np", "numpy", "onp") \
+                    and parts[1] in ("asarray", "array", "copy"):
+                out.append(Finding(
+                    rule="J002", path=relpath, line=node.lineno,
+                    col=node.col_offset,
+                    message=f"`{name}` on a traced value inside a "
+                            f"`{construct}` body concretizes the tracer "
+                            "on host; use jnp/the xp namespace"))
+            elif name in _CONCRETIZERS:
+                out.append(Finding(
+                    rule="J002", path=relpath, line=node.lineno,
+                    col=node.col_offset,
+                    message=f"`{name}()` on a traced value inside a "
+                            f"`{construct}` body concretizes the tracer"))
+    return out
+
+
+@register_rule(
+    "J003",
+    summary="float64 literal/dtype inside a Pallas kernel body",
+    invariant="Pallas kernels (kernels/*.py) stay in f32/bf16/int: TPU "
+              "Mosaic has no f64 vector unit, so an f64 leak either "
+              "fails to lower or silently doubles VMEM pressure; "
+              "wide accumulations belong in the engine's scan body, "
+              "which runs under the x64 policy instead",
+)
+def j003_no_float64_in_kernels(tree, source, relpath,
+                               config) -> List[Finding]:
+    if not path_matches(relpath, config.kernel_globs):
+        return []
+    out = []
+    seen_fns = set()
+    for fn, construct, _call in step_bodies(tree):
+        if construct != "pallas_call" or id(fn) in seen_fns:
+            continue
+        seen_fns.add(id(fn))
+        for node in astutil.scope_body_nodes(fn):
+            if isinstance(node, ast.Attribute) and node.attr == "float64":
+                out.append(Finding(
+                    rule="J003", path=relpath, line=node.lineno,
+                    col=node.col_offset,
+                    message="float64 dtype inside a Pallas kernel body"))
+            elif isinstance(node, ast.Constant) \
+                    and isinstance(node.value, str) \
+                    and node.value in ("float64", "f64", "double"):
+                out.append(Finding(
+                    rule="J003", path=relpath, line=node.lineno,
+                    col=node.col_offset,
+                    message=f'"{node.value}" dtype string inside a Pallas '
+                            "kernel body"))
+    return out

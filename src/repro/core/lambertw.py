@@ -36,9 +36,12 @@ def _initial_guess(z: jnp.ndarray) -> jnp.ndarray:
         _SERIES_COEFFS[1]
         + p * (_SERIES_COEFFS[2] + p * (_SERIES_COEFFS[3] + p * (_SERIES_COEFFS[4] + p * _SERIES_COEFFS[5])))
     )
-    # Large z: asymptotic W ~ log z - log log z.
-    logz = jnp.log(jnp.maximum(z, 1e-300))
-    w_large = logz - jnp.log(jnp.maximum(logz, 1e-300))
+    # Large z: asymptotic W ~ log z - log log z.  Only selected for z >= 3,
+    # so clamp the unselected lanes there: the old 1e-300 guard underflows
+    # to 0 in float32, producing -inf - -inf = NaN in the dead branch,
+    # which trips jax_debug_nans even though the `where` never picks it.
+    logz = jnp.log(jnp.maximum(z, 3.0))
+    w_large = logz - jnp.log(logz)
     # Moderate z: W ~ z around 0.
     w_mid = z * (1.0 - z)  # two terms of the Taylor series W = z - z^2 + ...
     w = jnp.where(z < -0.25, w_branch, jnp.where(z < 1.0, w_mid, jnp.where(z < 3.0, 0.5 * jnp.log1p(z), w_large)))
@@ -60,6 +63,11 @@ def lambertw0(z, iters: int = 12):
     # caller's algebra) are treated as the branch point.
     zc = jnp.maximum(z, jnp.asarray(_BRANCH, dt))
     w = _initial_guess(zc)
+    # Smallest normal of the working dtype: a 1e-300 guard underflows to 0
+    # in float32, letting f/denom hit 0/0 = NaN at the branch point (where
+    # the post-iteration `where` would discard it — but jax_debug_nans
+    # rightly refuses to let the NaN exist at all).
+    tiny = float(jnp.finfo(dt).tiny)
 
     def halley(w):
         ew = jnp.exp(w)
@@ -67,7 +75,7 @@ def lambertw0(z, iters: int = 12):
         wp1 = w + 1.0
         # Halley: w' = w - f / (ew*(w+1) - (w+2) f / (2 (w+1)))
         denom = ew * wp1 - (w + 2.0) * f / (2.0 * jnp.where(jnp.abs(wp1) < 1e-12, 1e-12, wp1))
-        step = f / jnp.where(jnp.abs(denom) < 1e-300, 1e-300, denom)
+        step = f / jnp.where(jnp.abs(denom) < tiny, tiny, denom)
         return w - step
 
     for _ in range(iters):

@@ -44,22 +44,38 @@ def expected_cycles_per_failure(mu, k, lam):
     return 1.0 / jnp.expm1(x)
 
 
+def _x_over_expm1(x):
+    """x / expm1(x) with its x -> 0 limit (1 - x/2) taken explicitly.
+
+    The naive quotient is 0/0 at x = 0 (lam* = inf at the V -> 0 branch
+    point), and jax_debug_nans traps the NaN even when a `where` would
+    discard it — hence the double-where."""
+    safe = jnp.where(x > 1e-6, x, 1.0)
+    return jnp.where(x > 1e-6, safe / jnp.expm1(safe), 1.0 - 0.5 * x)
+
+
 def wasted_computation(mu, k, lam):
     """T'_wc (Eq. 8): expected computation lost per failure.
 
-    T_wc = 1/(k mu) - c_bar / lam
+    T_wc = 1/(k mu) - c_bar / lam = (1 - x/expm1(x)) / (k mu),  x = k mu / lam
+
+    The second form is the one computed: it stays finite (-> 0) as
+    lam -> inf, where the first is inf/inf.
     """
     kmu = job_failure_rate(mu, k)
-    return 1.0 / kmu - expected_cycles_per_failure(mu, k, lam) / lam
+    return (1.0 - _x_over_expm1(kmu / lam)) / kmu
 
 
 def cycle_overhead(mu, k, lam, V, T_d):
     """C (Eq. 9): average overhead + failure cost per cycle.
 
-    C = V + (T_wc + T_d) / c_bar
+    C = V + (T_wc + T_d) / c_bar = V + (T_wc + T_d) * expm1(k mu / lam)
+
+    Multiplying by 1/c_bar = expm1(x) directly keeps C finite (-> V) as
+    lam -> inf instead of dividing by an inf c_bar.
     """
-    c_bar = expected_cycles_per_failure(mu, k, lam)
-    return V + (wasted_computation(mu, k, lam) + T_d) / c_bar
+    x = job_failure_rate(mu, k) / lam
+    return V + (wasted_computation(mu, k, lam) + T_d) * jnp.expm1(x)
 
 
 def utilization(mu, k, lam, V, T_d):

@@ -422,8 +422,8 @@ class _Params(NamedTuple):
     prior_count: np.ndarray
     window: np.ndarray       # estimator window K (adaptive macro-burst cap)
     log_decay: np.ndarray    # log(1 - 1/window): estimator decay per death
-    min_iv: np.ndarray
-    max_iv: np.ndarray
+    min_interval: np.ndarray
+    max_interval: np.ndarray
     k: np.ndarray
     work: np.ndarray
     V: np.ndarray
@@ -758,8 +758,8 @@ def _pack(cells: Sequence[CellSpec], peer_form: str = "auto") -> _Params:
         prior_count=f([c.policy.prior_count for c in cells]),
         window=f([c.policy.window for c in cells]),
         log_decay=f([math.log1p(-1.0 / c.policy.window) for c in cells]),
-        min_iv=f([c.policy.min_interval for c in cells]),
-        max_iv=f([c.policy.max_interval for c in cells]),
+        min_interval=f([c.policy.min_interval for c in cells]),
+        max_interval=f([c.policy.max_interval for c in cells]),
         k=f([c.k for c in cells]),
         work=f([c.work for c in cells]),
         V=f([c.V for c in cells]),
@@ -823,7 +823,10 @@ def _init_state(p: _Params, xp, n_peer: int) -> _State:
 
 def _opt_interval(mu, k, V, T_d, xp, lw):
     """Vectorized 1/lambda* (paper Sec 3.2.3), inf at the V->0 branch point."""
-    kmu = k * mu
+    # The stacked adaptive+oracle call passes mu as [2, B] with k still [B]:
+    # spell the rank extension out so the engine stays clean under
+    # jax_numpy_rank_promotion="raise" (strict-runtime CI lane).
+    kmu = xp.broadcast_to(k, xp.shape(mu)) * mu
     arg = (V * kmu - T_d * kmu - 1.0) / (T_d * kmu + 1.0) / _E
     x = lw(arg) + 1.0
     return xp.where(x > 0.0, x / kmu, xp.inf)
@@ -1016,11 +1019,11 @@ def _attempt(s: _State, p: _Params, u2, xp, lw, any_store: bool,
         xp.stack([mu_hat, mu_true]), p.k,
         xp.stack([xp.maximum(V_hat, 1e-6), p.V]),
         xp.stack([Td_hat, td_expect]), xp, lw)
-    iv_adaptive = xp.clip(iv2[0], p.min_iv, p.max_iv)
+    iv_adaptive = xp.clip(iv2[0], p.min_interval, p.max_interval)
     # The oracle is clamped exactly like the adaptive policy (and like the
     # heap's OraclePolicy): an unclipped oracle conflates policy quality
     # with clipping in every comparison grid.
-    iv_oracle = xp.clip(iv2[1], p.min_iv, p.max_iv)
+    iv_oracle = xp.clip(iv2[1], p.min_interval, p.max_interval)
     interval = xp.where(p.pol == 0, p.fixed_T,
                         xp.where(p.pol == 1, iv_adaptive, iv_oracle))
     interval = xp.maximum(interval, 1e-3)

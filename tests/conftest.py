@@ -1,0 +1,28 @@
+"""Shared test-session configuration.
+
+``REPRO_STRICT_RUNTIME=1`` (CI's strict-runtime sanitizer step, DESIGN.md
+Sec 12) arms JAX's strict numerics checks for the whole session before
+any test imports jax-using modules:
+
+* ``jax_debug_nans`` — any jitted computation producing a NaN is re-run
+  op-by-op and raises at the producing primitive instead of letting the
+  NaN flow into a comparison (where ``xp.where`` masking would silently
+  swallow it);
+* ``jax_numpy_rank_promotion="raise"`` — implicit rank extension in
+  broadcasting becomes an error: the engine's packed [B]/[B,P]/[B,C]
+  column discipline means a silently rank-promoted operand is almost
+  always a dropped-axis bug, not an intended broadcast.
+
+Kept behind an env flag so the default lanes measure exactly what
+production runs; the sanitizer lane exists to surface latent surprises.
+"""
+import os
+
+if os.environ.get("REPRO_STRICT_RUNTIME") == "1":
+    try:
+        import jax
+    except ImportError:
+        pass
+    else:
+        jax.config.update("jax_debug_nans", True)
+        jax.config.update("jax_numpy_rank_promotion", "raise")

@@ -1,0 +1,6 @@
+"""BAD: deprecated interval-bound spellings outside the shims."""
+
+
+def make_policy(policy_cls, min_iv=5.0, max_iv=7200.0):     # A001 x2
+    pol = policy_cls(min_iv=min_iv, max_iv=max_iv)          # A001 x4
+    return pol.min_iv, pol.max_iv                           # A001 x2

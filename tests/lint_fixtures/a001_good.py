@@ -1,0 +1,24 @@
+"""GOOD: canonical spellings everywhere; the InitVar shim pattern is the
+one sanctioned definition site for the deprecated aliases."""
+from dataclasses import InitVar, dataclass
+from typing import Optional
+
+
+@dataclass
+class Bounds:
+    min_interval: float = 1.0
+    max_interval: float = float("inf")
+    # The deprecation shim (PR 9): recognized structurally, not flagged.
+    min_iv: InitVar[Optional[float]] = None
+    max_iv: InitVar[Optional[float]] = None
+
+    def __post_init__(self, min_iv=None, max_iv=None):
+        if min_iv is not None:
+            self.min_interval = float(min_iv)
+        if max_iv is not None:
+            self.max_interval = float(max_iv)
+
+
+def make_policy(policy_cls, min_interval=5.0, max_interval=7200.0):
+    pol = policy_cls(min_interval=min_interval, max_interval=max_interval)
+    return pol.min_interval, pol.max_interval

@@ -1,0 +1,12 @@
+"""BAD: a tick() override that drops exposure_peers — the controller's
+censored-exposure folding is silently skipped for this policy."""
+
+
+class LegacyPolicy:
+    def tick(self, now):                       # A002
+        self._now = now
+
+
+class AlsoLegacy:
+    def tick(self, now, *, strict=False):      # A002
+        self._now = now

@@ -1,0 +1,12 @@
+"""GOOD: the canonical cadence hook signature (PR 7/8)."""
+
+
+class ModernPolicy:
+    def tick(self, now, exposure_peers=None):
+        self._now = now
+        self._exposure = exposure_peers
+
+
+class ForwardingPolicy:
+    def tick(self, now, **kw):                 # forwards everything: fine
+        self._inner.tick(now, **kw)

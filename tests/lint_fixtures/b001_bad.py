@@ -1,0 +1,8 @@
+"""BAD (report-only): restore durations computed and dropped on the floor —
+the modeled transfer never reaches a billed counter."""
+
+
+def fetch_edge(store, transfer, uplinks, t):
+    store.restore_seconds_at(t)          # B001: result discarded
+    transfer.restore_seconds_from(uplinks)   # B001: result discarded
+    return 0.0

@@ -1,0 +1,8 @@
+"""GOOD: every restore duration folds into a billed counter."""
+
+
+def fetch_edge(store, transfer, uplinks, t, report):
+    td = store.restore_seconds_at(t)
+    report.restore_time += td
+    report.handoff_waste += transfer.restore_seconds_from(uplinks)
+    return td

@@ -1,0 +1,29 @@
+"""BAD: Python control flow on traced values inside scan/Pallas bodies."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def run(xs):
+    def body(carry, x):
+        if x > 0:                      # J001: `if` on a traced operand
+            carry = carry + x
+        while carry > 10.0:            # J001: `while` on the traced carry
+            carry = carry - 1.0
+        y = carry if carry > 0 else x  # J001: ternary on traced values
+        return carry, y
+
+    return jax.lax.scan(body, jnp.float32(0.0), xs)
+
+
+def kernel(x_ref, o_ref):
+    x = x_ref[...]
+    if x.sum() > 0:                    # J001: `if` on traced ref contents
+        o_ref[...] = x
+    else:
+        o_ref[...] = -x
+
+
+def launch(x):
+    return pl.pallas_call(
+        kernel, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)

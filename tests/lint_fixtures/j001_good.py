@@ -1,0 +1,27 @@
+"""GOOD: branchless bodies — masking/where; static flags stay keyword-only."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def run(xs, *, clamp=True):
+    def body(carry, x, *, clamp):
+        carry = carry + jnp.where(x > 0, x, 0.0)
+        if clamp:                      # static keyword-only flag: fine
+            carry = jnp.minimum(carry, 10.0)
+        return carry, carry
+
+    return jax.lax.scan(functools.partial(body, clamp=clamp),
+                        jnp.float32(0.0), xs)
+
+
+def kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = jnp.where(x.sum() > 0, x, -x)
+
+
+def launch(x):
+    return pl.pallas_call(
+        kernel, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)

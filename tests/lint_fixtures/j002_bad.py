@@ -1,0 +1,14 @@
+"""BAD: host round-trips inside a scan body."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def run(xs):
+    def body(carry, x):
+        v = float(x)                       # J002: concretizes the tracer
+        arr = np.asarray(carry)            # J002: host copy of the carry
+        jax.debug.callback(print, carry)   # J002: host callback in the body
+        return carry + v + arr.sum(), x.item()   # J002: .item() host sync
+
+    return jax.lax.scan(body, jnp.float32(0.0), xs)

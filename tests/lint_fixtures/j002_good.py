@@ -1,0 +1,12 @@
+"""GOOD: the body stays on device; conversions happen outside the scan."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def run(xs):
+    def body(carry, x):
+        return carry + x, carry
+
+    final, ys = jax.lax.scan(body, jnp.float32(0.0), xs)
+    return float(final), np.asarray(ys)    # host conversion AFTER the scan

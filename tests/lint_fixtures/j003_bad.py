@@ -1,0 +1,14 @@
+"""BAD (when linted as src/repro/kernels/...): float64 inside a Pallas body."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def kernel(x_ref, o_ref):
+    acc = x_ref[...].astype(jnp.float64)        # J003: f64 dtype in kernel
+    o_ref[...] = acc.astype("float64")          # J003: f64 dtype string
+
+
+def launch(x):
+    return pl.pallas_call(
+        kernel, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)

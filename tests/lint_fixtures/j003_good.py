@@ -1,0 +1,14 @@
+"""GOOD: the kernel accumulates in f32; wide math lives outside Pallas."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def kernel(x_ref, o_ref):
+    acc = x_ref[...].astype(jnp.float32)
+    o_ref[...] = acc * 2.0
+
+
+def launch(x):
+    return pl.pallas_call(
+        kernel, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)

@@ -1,0 +1,10 @@
+"""BAD: module-level np.random draws hit the hidden global RandomState."""
+import numpy as np
+
+np.random.seed(0)                      # R001: global seeding
+noise = np.random.rand(16)             # R001: global draw
+picks = np.random.choice([1, 2, 3])    # R001: global draw
+
+
+def jitter(x):
+    return x + np.random.normal(scale=0.1)   # R001: global draw

@@ -1,0 +1,10 @@
+"""GOOD: every draw comes from an explicitly seeded Generator."""
+import numpy as np
+
+rng = np.random.default_rng(np.random.SeedSequence([42, 7]))
+noise = rng.random(16)
+picks = rng.choice([1, 2, 3])
+
+
+def jitter(x, gen: np.random.Generator):
+    return x + gen.normal(scale=0.1)

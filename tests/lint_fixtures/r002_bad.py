@@ -1,0 +1,20 @@
+"""BAD: parent streams drawn where spawned child streams are required."""
+import numpy as np
+import jax
+
+
+def correlated_noise(key):
+    # R002: `key` is consumed by two draws — the second sample is
+    # correlated with the first and fragile to reordering.
+    u = jax.random.uniform(key, (8,))
+    z = jax.random.normal(key, (8,))
+    return u, z
+
+
+def holder_lifetimes(rng: np.random.Generator, sampler):
+    # R002: `rng` is drawn from locally AND handed to a helper that also
+    # draws — interleaving on the shared parent breaks replay
+    # bit-identity when either side adds a draw.
+    first = rng.exponential(3600.0)
+    rest = sampler(rng, 10)
+    return [first] + list(rest)

@@ -1,0 +1,17 @@
+"""GOOD: child streams are derived (split / fold_in / spawn), never shared."""
+import numpy as np
+import jax
+
+
+def independent_noise(key):
+    ku, kz = jax.random.split(key)
+    u = jax.random.uniform(ku, (8,))
+    z = jax.random.normal(kz, (8,))
+    return u, z
+
+
+def holder_lifetimes(rng: np.random.Generator, sampler):
+    child = rng.spawn(1)[0]        # the helper gets its own stream
+    first = rng.exponential(3600.0)
+    rest = sampler(child, 10)
+    return [first] + list(rest)

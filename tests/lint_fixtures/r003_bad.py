@@ -1,0 +1,12 @@
+"""BAD (when linted as src/repro/sim/...): wall clock + stdlib random in a
+virtual-time subsystem."""
+import random
+import time
+from datetime import datetime
+
+
+def next_event(now_virtual: float) -> float:
+    started = time.time()                    # R003: wall clock
+    stamp = datetime.now()                   # R003: wall clock
+    jitter = random.uniform(0.0, 1.0)        # R003: stdlib global RNG
+    return now_virtual + jitter + (time.monotonic() - started), stamp

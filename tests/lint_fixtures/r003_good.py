@@ -1,0 +1,7 @@
+"""GOOD: virtual time threaded explicitly; draws from a seeded stream."""
+import numpy as np
+
+
+def next_event(now_virtual: float, rng: np.random.Generator) -> float:
+    jitter = rng.uniform(0.0, 1.0)
+    return now_virtual + jitter

@@ -1,0 +1,5 @@
+"""BAD: a suppression without a justification suppresses nothing and is
+itself a finding."""
+import numpy as np
+
+noise = np.random.rand(4)  # reprolint: ignore[R001]

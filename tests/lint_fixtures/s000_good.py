@@ -1,0 +1,4 @@
+"""GOOD: a justified suppression silences exactly the named rule."""
+import numpy as np
+
+noise = np.random.rand(4)  # reprolint: ignore[R001] -- fixture demo of the legacy API for the docs

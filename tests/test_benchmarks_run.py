@@ -1,0 +1,44 @@
+"""`benchmarks.run --only` rejects unknown section keys loudly.
+
+A typo used to produce an empty CSV with exit 0 — the regression gate
+then compared nothing against baseline and passed vacuously.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _run(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", *args],
+        capture_output=True, text=True, env=env, cwd=ROOT)
+
+
+@pytest.mark.parametrize("only", ["figg4", "fig4,kernelz", ",", ""])
+def test_unknown_or_empty_only_key_fails_with_choices(only):
+    proc = _run("--only", only, "--fast")
+    assert proc.returncode != 0
+    assert "valid choices" in proc.stderr
+    assert "fig4" in proc.stderr and "policy" in proc.stderr
+    # Nothing ran: at most the CSV header could have been printed, and even
+    # that is skipped because validation happens before any section.
+    assert "us_per_call" not in proc.stdout
+
+
+def test_section_list_matches_documented_keys():
+    sys.path.insert(0, str(ROOT))
+    try:
+        from benchmarks.run import SECTIONS
+    finally:
+        sys.path.pop(0)
+    assert set(SECTIONS) == {"fig4", "fig5", "kernels", "e2e", "roofline",
+                             "offload", "gossip", "hetero", "shocks",
+                             "fleet", "exec", "policy"}

@@ -91,8 +91,10 @@ def test_prefill_decode_matches_full_forward(arch, rng):
 def test_decode_steps_advance_cache(arch, rng):
     cfg = get_smoke_config(arch)
     params = init_params(rng, cfg)
-    tokens = jax.random.randint(rng, (B, 4), 0, cfg.vocab)
-    frames = (jax.random.normal(rng, (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    tokens = jax.random.randint(jax.random.fold_in(rng, 1), (B, 4), 0,
+                                cfg.vocab)
+    frames = (jax.random.normal(jax.random.fold_in(rng, 2),
+                                (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
               if cfg.family == "encdec" else None)
     _, cache = prefill(params, tokens, cfg, max_seq=16, frames=frames)
     assert int(cache["index"]) == 4

@@ -322,20 +322,24 @@ def test_request_validation():
 
 def test_min_iv_max_iv_aliases_warn_and_apply():
     with pytest.warns(DeprecationWarning, match="min_iv"):
+        # reprolint: ignore[A001] -- this test pins the deprecation shim itself
         ctl = AdaptiveCheckpointController(k=4.0, min_iv=5.0)
     assert ctl.min_interval == 5.0
     with pytest.warns(DeprecationWarning, match="max_iv"):
+        # reprolint: ignore[A001] -- this test pins the deprecation shim itself
         ctl = AdaptiveCheckpointController(k=4.0, max_iv=7200.0)
     assert ctl.max_interval == 7200.0
 
     from repro.sim.engine import PolicyConfig
     with pytest.warns(DeprecationWarning):
+        # reprolint: ignore[A001] -- this test pins the deprecation shim itself
         pc = PolicyConfig(min_iv=2.0, max_iv=1800.0)
     assert pc.min_interval == 2.0 and pc.max_interval == 1800.0
 
     from repro.sim.job import OraclePolicy
     with pytest.warns(DeprecationWarning):
         op = OraclePolicy(mtbf_fn=constant_mtbf(3600.0), k=4, V=20.0,
+                          # reprolint: ignore[A001] -- pins the shim itself
                           T_d=50.0, min_iv=3.0)
     assert op.min_interval == 3.0
 

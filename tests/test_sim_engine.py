@@ -95,6 +95,7 @@ def test_mtbf_fn_is_tagged_and_matches():
 def test_weibull_heap_lifetimes_are_heavy_tailed():
     s = scenario("weibull", scale=7200.0, shape=0.5)
     rng = np.random.default_rng(0)
+    # reprolint: ignore[R002] -- deliberate sequential reuse: the expo sample only needs the right mean, not independence
     lifes = np.asarray([s.sample_lifetime(rng, 0.0) for _ in range(4000)])
     # Mean matches scale * Gamma(1 + 1/shape) = 2 * scale for shape=0.5 ...
     assert lifes.mean() == pytest.approx(2 * 7200.0, rel=0.15)

@@ -1,0 +1,47 @@
+"""The REPRO_STRICT_RUNTIME conftest flag actually arms the sanitizers.
+
+Run in a subprocess so the config flips happen at session start, the way
+CI's strict-runtime step uses them, without polluting this session's JAX
+config.
+"""
+import os
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+_PROBE = """\
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+def test_sanitizers_armed():
+    assert jax.config.jax_numpy_rank_promotion == "raise"
+    assert jax.config.jax_debug_nans
+
+
+def test_rank_promotion_raises():
+    with pytest.raises((ValueError, TypeError)):
+        jnp.ones((3, 3)) + jnp.ones((3,))
+"""
+
+
+@pytest.mark.parametrize("flag,expect_rc", [("1", 0), ("", 1)])
+def test_strict_runtime_flag(tmp_path, flag, expect_rc):
+    shutil.copy(Path(__file__).parent / "conftest.py",
+                tmp_path / "conftest.py")
+    (tmp_path / "test_probe.py").write_text(_PROBE)
+    env = dict(os.environ)
+    env["REPRO_STRICT_RUNTIME"] = flag
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+         str(tmp_path / "test_probe.py")],
+        capture_output=True, text=True, env=env, cwd=tmp_path)
+    assert proc.returncode == expect_rc, proc.stdout + proc.stderr
